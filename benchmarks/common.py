@@ -1,0 +1,55 @@
+"""Shared benchmark infrastructure: cached fitted pipelines, budget levels,
+CSV emission (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import CostModel, Robatch, execute
+from repro.data import make_simulated_pool, make_workload
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+@functools.lru_cache(maxsize=32)
+def setup(task: str, family: str = "qwen3", router: str = "mlp",
+          coreset: str = "kcenter", coreset_size: int = 256,
+          scaling_fit: str = "piecewise", seed: int = 0):
+    """Workload + pool + fitted Robatch (cached across benchmarks)."""
+    n_train, n_val, n_test = (512, 128, 256) if QUICK else (2048, 512, 1024)
+    wl = make_workload(task, n_train=n_train, n_val=n_val, n_test=n_test, seed=seed)
+    pool = make_simulated_pool(family)
+    rb = Robatch(pool, wl, router_kind=router, coreset_method=coreset,
+                 coreset_size=min(coreset_size, n_train // 2),
+                 scaling_fit=scaling_fit, seed=seed).fit()
+    return wl, pool, rb
+
+
+def fixed_b_cost_levels(rb: Robatch, test_idx, bs=(16, 8, 4, 1)):
+    """§6.2 protocol: each baseline fixed batch size defines a budget level
+    (cost of the mid model at that batch size spans the realistic range)."""
+    cm = rb.cost_model
+    return {b: cm.single_model_cost(1, test_idx, b) for b in bs}
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)

@@ -1,0 +1,35 @@
+"""Fig. 12 — latency breakdown of Robatch's routing stage: router prediction /
+proxy-utility computation / greedy scheduling."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save, setup
+
+
+def run():
+    rows = []
+    for task in ["agnews", "imdb", "mmlu"]:
+        wl, pool, rb = setup(task)
+        test = wl.subset_indices("test")
+        cm = rb.cost_model
+        for level, budget in [("low", cm.single_model_cost(0, test, 1)),
+                              ("mid", cm.single_model_cost(1, test, 1)),
+                              ("high", cm.single_model_cost(2, test, 1))]:
+            _, t = rb.schedule_timed(test, budget)
+            total = max(t["total"], 1e-12)
+            rows.append(dict(task=task, level=level,
+                             router_pct=100 * t["router"] / total,
+                             proxy_pct=100 * t["proxy"] / total,
+                             greedy_pct=100 * t["greedy"] / total,
+                             total_s=t["total"]))
+        mid = next(r for r in rows if r["task"] == task and r["level"] == "mid")
+        emit(f"fig12_{task}", mid["total_s"] * 1e6 / len(test),
+             f"greedy={mid['greedy_pct']:.0f}%;proxy={mid['proxy_pct']:.0f}%;"
+             f"router={mid['router_pct']:.0f}%")
+    save("fig12_breakdown", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

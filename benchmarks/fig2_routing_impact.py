@@ -1,0 +1,48 @@
+"""Fig. 2 — the impact of routing on avg. accuracy and cost.
+
+Single-model baselines (b=1) vs vanilla MLP/KNN routers across threshold
+sweeps, on AGNews and GSM8K with the Qwen3-family pool."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save, setup
+from repro.core import execute
+from repro.core.baselines import single_model_assignment, vanilla_router_assignment
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    for task in ["agnews", "gsm8k"]:
+        for router in ["mlp", "knn"]:
+            wl, pool, rb = setup(task, router=router)
+            test = wl.subset_indices("test")
+            if router == "mlp":      # single-model points once per task
+                for k, m in enumerate(pool):
+                    out = execute(pool, wl, single_model_assignment(test, k, 1))
+                    rows.append(dict(task=task, method=m.name, cost=out.exact_cost,
+                                     acc=out.accuracy))
+            for tau in [0.3, 0.5, 0.7, 0.9]:
+                a = vanilla_router_assignment(rb, test, tau=tau, b=1)
+                out = execute(pool, wl, a)
+                rows.append(dict(task=task, method=f"router-{router}(τ={tau})",
+                                 cost=out.exact_cost, acc=out.accuracy))
+    dt = time.perf_counter() - t0
+    save("fig2_routing_impact", rows)
+    # headline: routers reach within X of the best single model at fraction of cost
+    for task in ["agnews", "gsm8k"]:
+        tr = [r for r in rows if r["task"] == task]
+        best_single = max(r["acc"] for r in tr if not r["method"].startswith("router"))
+        cheap_router = min((r for r in tr if r["method"].startswith("router")),
+                           key=lambda r: r["cost"])
+        emit(f"fig2_{task}", dt / len(rows) * 1e6,
+             f"best_single_acc={best_single:.3f};cheapest_router_acc={cheap_router['acc']:.3f}"
+             f"@${cheap_router['cost']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 5 — RCU curves, ternary-search efficiency and chosen b_effect."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save, setup
+from repro.core.scaling import batch_grid, rcu
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    for task in ["agnews", "gsm8k"]:
+        wl, pool, rb = setup(task)
+        probes_used = rb.profile.n_probes
+        for cal, m in zip(rb.calibrations, pool):
+            # exhaustive curve (all probes beyond the search are extra billing
+            # the real system avoids; we pay them here only to plot the curve)
+            grid = batch_grid(cal.b_max)
+            curve = [{"b": int(b), "rcu": float(rcu(rb.cost_model, rb.profile, cal.k, int(b))),
+                      "u": rb.profile.mean_utility(cal.k, int(b))} for b in grid]
+            rows.append(dict(task=task, model=m.name, b_max=cal.b_max,
+                             b_effect=cal.b_effect, curve=curve))
+        exhaustive = sum(len(batch_grid(c.b_max)) for c in rb.calibrations)
+        emit(f"fig5_{task}", (time.perf_counter() - t0) * 1e6 / max(len(rows), 1),
+             f"b_eff={[c.b_effect for c in rb.calibrations]};"
+             f"search_probes={probes_used};exhaustive_probes={exhaustive}")
+    save("fig5_rcu", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Fig. 7 — overall cost-accuracy trade-off on six benchmarks × two families.
+
+Protocol (§6.2): baselines run at fixed b ∈ {16, 8, 4, 1} (four cost levels);
+Robatch is given the min and max actual baseline cost at each level as
+budgets.  The x-axis is actual spent cost."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, save, setup
+from repro.core import execute, execute_plan
+from repro.core.baselines import (
+    batcher_assignment_plan, frugalgpt_execute, obp_plan, routellm_assignment,
+)
+
+TASKS = ["agnews", "gsm8k", "mmlu", "snli", "mrpc", "imdb"]
+FAMILIES = ["qwen3", "gemma3"]
+
+
+def run(tasks=None, families=None):
+    tasks = tasks or (TASKS[:2] if QUICK else TASKS)
+    families = families or (FAMILIES[:1] if QUICK else FAMILIES)
+    rows = []
+    t0 = time.perf_counter()
+    for family in families:
+        for task in tasks:
+            wl, pool, rb = setup(task, family=family)
+            test = wl.subset_indices("test")
+            for b in [16, 8, 4, 1]:
+                level_costs = []
+                # RouteLLM: threshold mid-sweep at this batch size
+                for tau in [0.5]:
+                    out = execute(pool, wl, routellm_assignment(rb, test, tau=tau, b=b))
+                    rows.append(dict(family=family, task=task, method="RouteLLM",
+                                     level=b, cost=out.exact_cost, acc=out.accuracy))
+                    level_costs.append(out.exact_cost)
+                out = frugalgpt_execute(rb, test, tau=0.5, b=b)
+                rows.append(dict(family=family, task=task, method="FrugalGPT",
+                                 level=b, cost=out.exact_cost, acc=out.accuracy))
+                level_costs.append(out.exact_cost)
+                for mode, name in [("sim", "BATCHER-SIM"), ("div", "BATCHER-DIV")]:
+                    _, plan = batcher_assignment_plan(rb, test, tau=0.5, b=b, mode=mode)
+                    out = execute_plan(pool, wl, plan, test)
+                    rows.append(dict(family=family, task=task, method=name,
+                                     level=b, cost=out.exact_cost, acc=out.accuracy))
+                    level_costs.append(out.exact_cost)
+                _, plan = obp_plan(rb, test, tau=0.5, target_b=b)
+                out = execute_plan(pool, wl, plan, test)
+                rows.append(dict(family=family, task=task, method="OBP",
+                                 level=b, cost=out.exact_cost, acc=out.accuracy))
+                level_costs.append(out.exact_cost)
+                # Robatch at the level's min and max actual cost as budgets
+                for tag, budget in [("min", min(level_costs)), ("max", max(level_costs))]:
+                    res = rb.schedule(test, budget)
+                    out = execute(pool, wl, res.assignment)
+                    rows.append(dict(family=family, task=task, method=f"Robatch-{tag}",
+                                     level=b, cost=out.exact_cost, acc=out.accuracy))
+    dt = time.perf_counter() - t0
+    save("fig7_overall", rows)
+    # headline: fraction of (task, level) cells where Robatch-max dominates all baselines
+    wins = total = 0
+    for family in families:
+        for task in tasks:
+            for level in [16, 8, 4, 1]:
+                cell = [r for r in rows if r["family"] == family and r["task"] == task
+                        and r["level"] == level]
+                ours = [r for r in cell if r["method"].startswith("Robatch")]
+                base = [r for r in cell if not r["method"].startswith("Robatch")]
+                for o in ours:
+                    total += 1
+                    if all(o["acc"] >= b_["acc"] - 1e-9 or o["cost"] < b_["cost"] * 0.98
+                           for b_ in base):
+                        wins += 1
+    emit("fig7_overall", dt / max(len(rows), 1) * 1e6,
+         f"robatch_non_dominated={wins}/{total};rows={len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

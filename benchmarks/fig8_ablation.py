@@ -1,0 +1,47 @@
+"""Fig. 8 — ablations: full Robatch vs Router-Only vs Batch-Only (cheap /
+middle / expensive model), on AGNews, GSM8K, IMDB."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save, setup
+from repro.core import execute
+from repro.core.baselines import batch_only, router_only
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    for task in ["agnews", "gsm8k", "imdb"]:
+        wl, pool, rb = setup(task)
+        test = wl.subset_indices("test")
+        cm = rb.cost_model
+        cheap = cm.single_model_cost(0, test, 1)
+        exp = cm.single_model_cost(2, test, 1)
+        budgets = np.linspace(cheap * 0.4, exp, 6)
+        variants = {"Robatch": rb, "Router-Only": router_only(rb)}
+        for k, tag in [(0, "cheap"), (1, "mid"), (2, "expensive")]:
+            variants[f"Batch-Only({tag})"] = batch_only(rb, k)
+        for name, variant in variants.items():
+            vpool = variant.pool
+            for budget in budgets:
+                res = variant.schedule(test, budget)
+                out = execute(vpool, wl, res.assignment)
+                rows.append(dict(task=task, method=name, budget=float(budget),
+                                 cost=out.exact_cost, acc=out.accuracy,
+                                 infeasible=res.infeasible))
+    dt = time.perf_counter() - t0
+    save("fig8_ablation", rows)
+    for task in ["agnews", "gsm8k", "imdb"]:
+        tr = [r for r in rows if r["task"] == task and not r["infeasible"]]
+        by = lambda m: max((r["acc"] for r in tr if r["method"] == m), default=0)
+        emit(f"fig8_{task}", dt / len(rows) * 1e6,
+             f"robatch={by('Robatch'):.3f};router_only={by('Router-Only'):.3f};"
+             f"batch_only_mid={by('Batch-Only(mid)'):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json) — the
+§Roofline deliverable rendered as CSV lines."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, save
+
+
+def run(path: str = "results/dryrun.json"):
+    if os.path.exists("results/dryrun_final.json"):
+        path = "results/dryrun_final.json"
+    if not os.path.exists(path):
+        emit("roofline", 0.0, f"missing={path};run_repro.launch.dryrun_first")
+        return []
+    rows = json.load(open(path))
+    for r in rows:
+        if r["status"] != "ok":
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0, r["status"])
+            continue
+        rf = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             rf["compute_s"] * 1e6,
+             f"dominant={rf['dominant']};compute={rf['compute_s']:.3f}s;"
+             f"mem={rf['memory_s']:.3f}s;coll={rf['collective_s']:.3f}s;"
+             f"useful={r.get('useful_ratio') and round(r['useful_ratio'], 2)};"
+             f"peak={r['mem']['peak_tpu_est_GB']:.1f}GB")
+    save("roofline_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

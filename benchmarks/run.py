@@ -1,0 +1,51 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-module JSON payloads
+under results/bench/).  ``BENCH_QUICK=1`` shrinks workloads for smoke runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig2_routing_impact, fig34_batching_impact, fig5_rcu, fig7_overall,
+    fig8_ablation, fig11_scalability, fig12_breakdown, roofline_table,
+    table3_sensitivity,
+)
+
+MODULES = [
+    ("fig2_routing_impact", fig2_routing_impact),
+    ("fig34_batching_impact", fig34_batching_impact),
+    ("fig5_rcu", fig5_rcu),
+    ("fig7_overall", fig7_overall),
+    ("fig8_ablation", fig8_ablation),
+    ("table3_sensitivity", table3_sensitivity),
+    ("fig11_scalability", fig11_scalability),
+    ("fig12_breakdown", fig12_breakdown),
+    ("roofline_table", roofline_table),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:    # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

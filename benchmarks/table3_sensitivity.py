@@ -1,0 +1,99 @@
+"""Table 3 + Fig. 9 + Fig. 10 — sensitivity & design-choice analysis.
+
+Budget levels per §6.4: the total cost of the cheapest model, the medium
+model, and their midpoint.  Sweeps: coreset selection algorithm (k-center /
+FL / herding), coreset size {64..512}, embedding model stand-ins, scaling-
+function fit (piecewise / power-law / KNN), router architecture & HPs.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, save, setup
+from repro.core import Robatch, execute
+from repro.core.router import KNNRouter, train_mlp_router
+from repro.data import make_simulated_pool, make_workload
+from repro.data.workload import alternate_embeddings
+
+TASKS = ["agnews", "gsm8k", "imdb"]
+
+
+def _three_budgets(rb, test):
+    cm = rb.cost_model
+    cheap = cm.single_model_cost(0, test, 1)
+    mid = cm.single_model_cost(1, test, 1)
+    return {"cheap": cheap, "mid": (cheap + mid) / 2, "expensive": mid}
+
+
+def _eval(rb, wl, pool, test) -> dict:
+    out = {}
+    for tag, budget in _three_budgets(rb, test).items():
+        res = rb.schedule(test, budget)
+        out[tag] = execute(pool, wl, res.assignment).accuracy
+    return out
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    tasks = TASKS[:1] if QUICK else TASKS
+
+    for task in tasks:
+        # --- coreset selection algorithms (Table 3 top) -------------------
+        for method in ["kcenter", "fl", "herding"]:
+            wl, pool, rb = setup(task, coreset=method)
+            accs = _eval(rb, wl, pool, wl.subset_indices("test"))
+            rows.append(dict(axis="coreset_method", value=method, task=task, **accs))
+        # --- coreset sizes (Fig. 9) ---------------------------------------
+        for size in [64, 128, 256, 512]:
+            wl, pool, rb = setup(task, coreset_size=size)
+            accs = _eval(rb, wl, pool, wl.subset_indices("test"))
+            rows.append(dict(axis="coreset_size", value=size, task=task, **accs))
+        # --- embedding models (Table 3 middle) -----------------------------
+        for kind in ["qwen3-0.6b", "e5-base", "bge-base"]:
+            wl, pool, _ = setup(task)
+            wl2 = copy.copy(wl)
+            wl2.embeddings = alternate_embeddings(wl, kind)
+            rb = Robatch(pool, wl2, coreset_size=min(256, len(wl2.subset_indices("train")) // 2)).fit()
+            accs = _eval(rb, wl2, pool, wl2.subset_indices("test"))
+            rows.append(dict(axis="embedding", value=kind, task=task, **accs))
+        # --- scaling-function fits (Table 3 bottom) -------------------------
+        for fit in ["piecewise", "powerlaw", "knn"]:
+            wl, pool, rb = setup(task, scaling_fit=fit)
+            accs = _eval(rb, wl, pool, wl.subset_indices("test"))
+            rows.append(dict(axis="scaling_fit", value=fit, task=task, **accs))
+        # --- router architectures / hyper-parameters (Fig. 10) -------------
+        for hidden in [(128,), (256, 128), (512, 256, 128)]:
+            wl, pool, _ = setup(task)
+            rb = Robatch(pool, wl, router_hidden=hidden,
+                         coreset_size=min(256, len(wl.subset_indices("train")) // 2)).fit()
+            accs = _eval(rb, wl, pool, wl.subset_indices("test"))
+            rows.append(dict(axis="mlp_hidden", value=str(hidden), task=task, **accs))
+        for k in [1, 4, 16, 64]:
+            wl, pool, _ = setup(task)
+            rb = Robatch(pool, wl, router_kind="knn", knn_k=k,
+                         coreset_size=min(256, len(wl.subset_indices("train")) // 2)).fit()
+            accs = _eval(rb, wl, pool, wl.subset_indices("test"))
+            rows.append(dict(axis="knn_k", value=k, task=task, **accs))
+
+    dt = time.perf_counter() - t0
+    save("table3_sensitivity", rows)
+    for axis in ["coreset_method", "coreset_size", "embedding", "scaling_fit",
+                 "mlp_hidden", "knn_k"]:
+        spreads = []
+        for task in tasks:
+            sub = [r for r in rows if r["axis"] == axis and r["task"] == task]
+            if sub:
+                spreads.append(max(r["mid"] for r in sub) - min(r["mid"] for r in sub))
+        if spreads:
+            emit(f"table3_{axis}", dt / max(len(rows), 1) * 1e6,
+                 f"mid_budget_acc_spread_max_over_tasks={max(spreads):.3f};n_tasks={len(spreads)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Quickstart: Robatch end-to-end on a simulated pool in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py [task] [family]
+
+Fits the modeling stage (router + coreset + batch-size calibration), then
+schedules the test workload at three budgets and executes the plan.
+"""
+import sys
+
+import numpy as np
+
+from repro.core import Robatch, execute
+from repro.core.baselines import single_model_assignment
+from repro.data import make_simulated_pool, make_workload
+
+
+def main(task: str = "agnews", family: str = "qwen3"):
+    print(f"== Robatch quickstart: {task} / {family} ==")
+    wl = make_workload(task)
+    pool = make_simulated_pool(family)
+    rb = Robatch(pool, wl).fit()
+
+    print("\nModeling stage (per model): b_max, ternary-searched b_effect, ρ(b_eff):")
+    for cal, m in zip(rb.calibrations, pool):
+        print(f"  {m.name:12s} b_max={cal.b_max:4d} b_effect={cal.b_effect:3d} "
+              f"rho(b_eff)={float(cal.scaling(cal.b_effect)):.3f} "
+              f"u(b=1)={cal.u_mean_at[1]:.3f}")
+    print(f"  profiling probes billed: {rb.profile.n_probes} "
+          f"({rb.profile.billed_tokens / 1e6:.2f}M tokens)")
+
+    test = wl.subset_indices("test")
+    cm = rb.cost_model
+    cheap = cm.single_model_cost(0, test, 1)
+    exp = cm.single_model_cost(2, test, 1)
+
+    print("\nRouting stage:")
+    print(f"  {'budget':>10} {'accuracy':>9} {'spent':>9} {'upgrades':>9}")
+    for budget in [cheap, (cheap + exp) / 2, exp]:
+        res = rb.schedule(test, budget)
+        out = execute(pool, wl, res.assignment)
+        print(f"  ${budget:9.4f} {out.accuracy:9.3f} ${out.exact_cost:8.4f} "
+              f"{res.n_upgrades:9d}")
+
+    print("\nReference points (single model, b=1):")
+    for k, m in enumerate(pool):
+        out = execute(pool, wl, single_model_assignment(test, k, 1))
+        print(f"  {m.name:12s} acc={out.accuracy:.3f} cost=${out.exact_cost:.4f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:3])

@@ -1,0 +1,16 @@
+"""repro — Robatch: cost-effective LLM routing with batch prompting, on a multi-pod JAX stack.
+
+Layout:
+    repro.core       — the paper's contribution: cost model, proxy utility, greedy scheduler.
+    repro.data       — workload generators, pool simulator, tokenizer, training pipeline.
+    repro.models     — unified JAX LM stack (dense / MoE / RWKV6 / RG-LRU hybrid / VLM / enc-dec).
+    repro.kernels    — Pallas TPU kernels (flash attention, decode attention, WKV6, RG-LRU).
+    repro.training   — optimizer (AdamW + ZeRO-1), train loop, grad accumulation.
+    repro.serving    — prefill/decode engine, KV cache, batch prompting, model pool, fault handling.
+    repro.checkpoint — atomic pytree checkpointing with reshard-on-load.
+    repro.launch     — production mesh, multi-pod dry-run, train/serve CLIs.
+    repro.analysis   — roofline terms from compiled artifacts.
+    repro.configs    — one module per assigned architecture (exact published shapes).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.analysis.roofline import HW_V5E, analyze_compiled, model_flops

@@ -1,0 +1,434 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+Primary source: the optimized per-device HLO text.  XLA's cost_analysis()
+counts every while-loop body ONCE (verified empirically), which under-counts
+scan-over-layers models by the layer count, so instead we:
+
+  1. parse every computation's ``dot`` instructions and compute their FLOPs
+     from operand shapes (2 · prod(out dims) · prod(contracting dims));
+  2. parse every collective (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) and sum payload bytes;
+  3. walk the call graph (fusions, calls, while bodies) multiplying loop
+     bodies by their trip counts, extracted from each condition's
+     ``constant(N)`` compare.
+
+Elementwise FLOPs are not counted (matmul-dominated workloads; noted in
+EXPERIMENTS.md).  HBM bytes come from cost_analysis, corrected by the
+caller-supplied loop product (layer scan × microbatches) — an upper-bound
+approximation documented per table.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+All quantities are PER DEVICE (the compiled module is the post-GSPMD
+per-device program).
+
+Terms (seconds per step):
+    compute    = dot_flops_per_device / peak_flops
+    memory     = hbm_bytes_per_device / hbm_bw
+    collective = collective_bytes_per_device / ici_bw
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+__all__ = ["HW_V5E", "analyze_compiled", "analyze_hlo_text", "model_flops", "RooflineReport"]
+
+HW_V5E = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # B/s per chip
+    "ici_bw": 50e9,           # B/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],\{\}\d]+)\s+(\S+?)\(")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_dims(shape_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (tuples sum their components)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class _Computation:
+    name: str
+    collective_bytes: dict = field(default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    dot_flops: float = 0.0
+    calls: list = field(default_factory=list)        # fusion/call targets
+    whiles: list = field(default_factory=list)       # (body, cond)
+    compare_constants: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)       # instr name -> shape str
+    f32_converts: list = field(default_factory=list)  # (name, dims, bytes)
+    collective_bf16: float = 0.0                      # bf16-normalized payload
+
+
+def _parse_computations(hlo: str) -> tuple[dict[str, _Computation], Optional[str]]:
+    comps: dict[str, _Computation] = {}
+    entry = None
+    current: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header (column 0): `%name (...) -> ... {` or `ENTRY ...`
+        if not line.startswith(" ") and "{" in line and ("->" in line or line.startswith("ENTRY")):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m:
+                current = _Computation(m.group(2))
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+            continue
+        if current is None:
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, shape_str, op = dm.group(1), dm.group(2), dm.group(3)
+        current.shapes[name] = shape_str
+        op_lower = op.lower()
+        # ---- collectives ----
+        for coll in _COLLECTIVES:
+            if op_lower.startswith(coll) and not op_lower.startswith(coll + "-done"):
+                b = _shape_bytes(shape_str)
+                current.collective_bytes[coll] += b
+                # bf16-normalized: XLA-CPU upcasts bf16 payloads to f32 before
+                # collectives; a TPU build moves them in bf16 (half the bytes)
+                current.collective_bf16 += b / 2 if shape_str.lstrip().startswith("f32") else b
+                break
+        # ---- dots ----
+        if op_lower == "dot":
+            flops = _dot_flops(line, shape_str, current.shapes)
+            current.dot_flops += flops
+        # ---- hoistable whole-stack buffers (CPU-backend artifact accounting):
+        # f32 upcasts of bf16 dot operands, and loop-invariant-hoisted
+        # all-gathers of FSDP-sharded weight stacks
+        if op_lower in ("convert", "all-gather", "copy") and (
+                shape_str.startswith("f32[") or shape_str.startswith("bf16[")):
+            dt, dims = _shape_dims(shape_str)
+            b = _shape_bytes(shape_str)
+            if b >= 64 * 2**20:
+                current.f32_converts.append((name, tuple(dims), b))
+        # ---- control flow ----
+        if op_lower == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            if body and cond:
+                current.whiles.append((body.group(1), cond.group(1)))
+        else:
+            for key in ("calls=", "to_apply=", "branch_computations={"):
+                if key in line:
+                    tail = line.split(key, 1)[1]
+                    for cm in re.finditer(r"%?([\w\.\-]+)", tail[:200]):
+                        cand = cm.group(1)
+                        if cand in ("true_computation", "false_computation"):
+                            continue
+                        current.calls.append(cand)
+                        if key != "branch_computations={":
+                            break
+                    break
+        # ---- trip-count hints (condition computations) ----
+        cc = re.search(r"constant\((\d+)\)", stripped)
+        if cc and op_lower == "constant":
+            current.compare_constants.append(int(cc.group(1)))
+    return comps, entry
+
+
+def _dot_flops(line: str, out_shape: str, shapes: dict) -> float:
+    """2 · prod(output dims) · prod(lhs contracting dims)."""
+    _, out_dims = _shape_dims(out_shape)
+    ops = _OPERANDS_RE.search(line.split("dot(", 1)[1] if "dot(" in line else line)
+    lhs_name = None
+    if "dot(" in line:
+        args = line.split("dot(", 1)[1].split(")")[0]
+        lhs_name = args.split(",")[0].strip().lstrip("%")
+    lhs_shape = shapes.get(lhs_name, "")
+    _, lhs_dims = _shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if cm and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contract
+
+
+def _trip_count(comps: dict, cond_name: str, default: int) -> int:
+    cond = comps.get(cond_name)
+    if cond and cond.compare_constants:
+        return max(cond.compare_constants)
+    return default
+
+
+def _accumulate(comps: dict, name: str, default_trip: int, memo: dict, _depth=0):
+    """(collective_bytes dict, dot_flops) reachable from ``name``; while bodies
+    multiplied by parsed trip counts."""
+    if name in memo:
+        return memo[name]
+    if name not in comps or _depth > 128:
+        return ({k: 0.0 for k in _COLLECTIVES}, 0.0)
+    c = comps[name]
+    coll = dict(c.collective_bytes)
+    coll["_bf16norm"] = c.collective_bf16
+    flops = c.dot_flops
+    for callee in c.calls:
+        if callee == name:
+            continue
+        sub_c, sub_f = _accumulate(comps, callee, default_trip, memo, _depth + 1)
+        for k in coll:
+            coll[k] += sub_c.get(k, 0.0)
+        flops += sub_f
+    for body, cond in c.whiles:
+        trips = _trip_count(comps, cond, default_trip)
+        sub_c, sub_f = _accumulate(comps, body, default_trip, memo, _depth + 1)
+        for k in coll:
+            coll[k] += trips * sub_c.get(k, 0.0)
+        flops += trips * sub_f
+    memo[name] = (coll, flops)
+    return memo[name]
+
+
+def analyze_hlo_text(hlo: str, default_trip: int = 1):
+    """Returns (collective_bytes dict, dot_flops) for the entry computation."""
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        entry = next(iter(comps)) if comps else ""
+    return _accumulate(comps, entry, default_trip, {})
+
+
+def cpu_upcast_bytes(hlo: str, stack_len: int) -> float:
+    """Bytes of whole-layer-stack hoisted buffers — XLA *CPU* lowering
+    artifacts the TPU pipeline does not materialize:
+
+      * f32 upcasts of bf16 dot operands (MXU consumes bf16 natively), and
+      * loop-invariant-hoisted all-gathers / copies of FSDP-sharded weight
+        stacks (the TPU latency-hiding scheduler keeps them per-layer).
+
+    Each is counted at (1 − 1/stack_len) of its size — one layer's slice
+    would legitimately be alive at a time.  The dry-run reports peak memory
+    both raw and with this adjustment."""
+    comps, _ = _parse_computations(hlo)
+    total = 0.0
+    for c in comps.values():
+        for name, dims, b in c.f32_converts:
+            if len(dims) >= 3 and dims[0] == stack_len:
+                total += b * (1.0 - 1.0 / max(stack_len, 2))
+    return total
+
+
+@dataclass
+class RooflineReport:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    mem_per_device: dict
+    cost_raw: dict
+    collective_bf16_s: float = 0.0
+
+    def terms(self) -> dict:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+    def summary(self) -> dict:
+        total_coll = sum(self.collective_bytes_per_device.values())
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_GB_per_device": self.hbm_bytes_per_device / 1e9,
+            "collective_GB_per_device": total_coll / 1e9,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "collective_bf16_s": self.collective_bf16_s,
+            "dominant": self.dominant,
+            "peak_mem_GB": self.mem_per_device.get("peak_GB"),
+            **{f"coll_{k}_GB": v / 1e9 for k, v in
+               self.collective_bytes_per_device.items() if v > 0},
+        }
+
+
+def analyze_compiled(compiled, known_loops: Optional[dict] = None,
+                     hw: dict = HW_V5E, hbm_bytes: Optional[float] = None) -> RooflineReport:
+    """known_loops: loop trip counts enclosing the layer stack (e.g.
+    {"layer_scan": 24, "microbatches": 4}) — fallback multiplier only; FLOPs
+    and collective bytes come from the trip-count-aware HLO walk.
+    ``hbm_bytes``: analytic per-device HBM traffic (see analytic_hbm_bytes);
+    XLA-CPU's "bytes accessed" counts unfused intermediates and is kept only
+    as a reference in cost_raw."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    bytes_once = float(ca.get("bytes accessed", 0.0) or 0.0)
+    flops_once = float(ca.get("flops", 0.0) or 0.0)
+    mult = 1.0
+    for trips in (known_loops or {}).values():
+        mult *= max(int(trips), 1)
+    coll, dot_flops = analyze_hlo_text(compiled.as_text(), default_trip=1)
+    coll_bf16 = coll.pop("_bf16norm", None)
+    flops_total = dot_flops if dot_flops > 0 else flops_once * mult
+    bytes_total = hbm_bytes if hbm_bytes is not None else bytes_once * mult
+    mem = compiled.memory_analysis()
+    mem_per_device = {
+        "args_GB": mem.argument_size_in_bytes / 2**30,
+        "out_GB": mem.output_size_in_bytes / 2**30,
+        "temp_GB": mem.temp_size_in_bytes / 2**30,
+        "alias_GB": mem.alias_size_in_bytes / 2**30,
+        "peak_GB": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+    }
+    compute_s = flops_total / hw["peak_flops"]
+    memory_s = bytes_total / hw["hbm_bw"]
+    collective_s = sum(coll.values()) / hw["ici_bw"]
+    collective_bf16_s = (coll_bf16 / hw["ici_bw"]) if coll_bf16 is not None else collective_s
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    rep = RooflineReport(
+        flops_per_device=flops_total,
+        hbm_bytes_per_device=bytes_total,
+        collective_bytes_per_device=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        mem_per_device=mem_per_device,
+        cost_raw={"flops_body_once": flops_once, "bytes_body_once": bytes_once,
+                  "loop_multiplier": mult, "dot_flops_parsed": dot_flops},
+    )
+    rep.collective_bf16_s = collective_bf16_s
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6·N·D convention)
+# ---------------------------------------------------------------------------
+
+def model_flops(n_params_active: float, n_tokens: float, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_params_active * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic (per device, per step)
+# ---------------------------------------------------------------------------
+# XLA CPU's cost_analysis() "bytes accessed" counts every unfused
+# intermediate — orders of magnitude above real TPU HBM traffic (fusions keep
+# intermediates in VMEM).  The memory roofline term therefore uses this
+# explicit traffic model; every constant is documented inline and the raw HLO
+# number is retained in cost_raw for reference.
+
+def analytic_hbm_bytes(cfg, shape, shard, mesh_cfg, n_params: int,
+                       n_params_active: int) -> float:
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    msize = sizes.get("model", 1)
+    dsize = 1
+    for a in ("pod", "data"):
+        dsize *= sizes.get(a, 1)
+
+    d, L = cfg.d_model, cfg.n_layers
+    Hk, hd = cfg.n_kv_heads, cfg.head_dim
+    bytes_w = 2                                        # bf16 weights
+    P_full = n_params * bytes_w
+    P_act = n_params_active * bytes_w
+    P_tp = P_full / msize                              # per-device compute weights
+    P_act_tp = P_act / msize
+    B, S = shape.global_batch, shape.seq_len
+    tokens_dev = B * S / dsize
+    kv_tok = 2 * Hk * hd * bytes_w                     # K+V bytes per token per layer
+    qb = max(shard.attn_q_block, 1)
+
+    if shape.kind == "train":
+        mb = max(shard.microbatches, 1)
+        tokens_mb = tokens_dev / mb
+        # weights: fwd read + bwd dx/dw reads (+1 remat re-read), per microbatch
+        w_reads = 4 if shard.remat == "block" else 3
+        weights = P_act_tp * mb * w_reads
+        # optimizer: params r+w (2), moments r+w (4 × moment bytes), grads read
+        store_div = dsize if shard.zero1 else 1
+        mom_b = 2 if shard.moment_dtype == "bfloat16" else 4
+        opt = (P_full / msize / (dsize if shard.fsdp_params else 1)) * 2 \
+            + (n_params * mom_b / msize / store_div) * 4 \
+            + (n_params * 4 / msize / store_div)
+        # grad accumulation buffer (fp32) read+write per microbatch
+        acc = 2 * (n_params * 4 / msize / store_div) * mb if mb > 1 else 0.0
+        # activations: saved block inputs + spilled intermediates, fwd+bwd
+        # (≈8 residual-stream passes per layer with block remat)
+        act = tokens_mb * d * 2 * L * 8 * mb
+        # causal flash-attention KV re-streaming from HBM: q-block i re-reads
+        # ~i·qb keys → Σ_i i·qb ≈ S²/(2·qb) key-tokens per layer per sequence;
+        # backward re-streams once more (×2)
+        kv_restream = 0.0
+        if _n_attn_layers(cfg):
+            win = cfg.window or S
+            per_seq_tokens = min(S * S / (2 * qb), S * win / qb + S)
+            kv_restream = 2 * (B / dsize / mb) * mb * _n_attn_layers(cfg) \
+                * kv_tok * per_seq_tokens
+        # embeddings + logits (fp32 logits read/write for the loss)
+        vocab_io = tokens_dev * (cfg.d_model * 2 + cfg.vocab_size / msize * 4 * 2)
+        return weights + opt + acc + act + kv_restream + vocab_io
+
+    if shape.kind == "prefill":
+        act = tokens_dev * d * 2 * L * 4
+        cache_write = (B / dsize) * S * kv_tok * _n_attn_layers(cfg) / max(
+            msize if shard.kv_seq_shard else 1, 1)
+        kv_restream = (B / dsize) * _n_attn_layers(cfg) * kv_tok * (S * S / (2 * qb)) / S
+        vocab_io = (B / dsize) * (cfg.vocab_size / msize) * 4
+        return P_act_tp + act + cache_write + kv_restream + vocab_io
+
+    # decode: read all (active) weights once + the live cache/state once
+    cache_read = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            cache_read += (B / dsize) * S * kv_tok / (msize if shard.kv_seq_shard else 1)
+        elif kind == "local" and cfg.window:
+            cache_read += (B / dsize) * min(cfg.window, S) * kv_tok
+        elif kind == "rwkv":
+            # WKV state (H, hd, hd) fp32, read+write
+            cache_read += (B / dsize) * (d // cfg.rwkv_head_dim) * cfg.rwkv_head_dim ** 2 * 4 * 2
+        elif kind == "rglru":
+            cache_read += (B / dsize) * (cfg.lru_width or d) * 4 * 2
+    act = (B / dsize) * d * 2 * L * 6
+    vocab_io = (B / dsize) * (cfg.vocab_size / msize) * 4
+    return P_act_tp + cache_read + act + vocab_io
+
+
+def _n_attn_layers(cfg) -> int:
+    return sum(1 for k in cfg.layer_kinds() if k in ("attn", "local"))

@@ -1,0 +1,121 @@
+"""Utility-without-batching estimators û_{i,k,1} (§4, "Estimation of the
+Utility Without Batching").
+
+Two routers, exactly as in the paper: a three-layer MLP trained with
+multi-label BCE over (query embedding → per-model correctness), and a KNN
+classifier.  Both map a query embedding to a vector of K estimated utilities
+in [0, 1].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import adamw
+
+__all__ = ["MLPRouter", "KNNRouter", "train_mlp_router"]
+
+
+def _init_mlp(key, dims: Sequence[int]):
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, b), jnp.float32) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def _mlp_logits(params, x):
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    last = params[-1]
+    return h @ last["w"] + last["b"]
+
+
+@jax.jit
+def _bce_loss(params, x, y):
+    logits = _mlp_logits(params, x)
+    z = jax.nn.log_sigmoid(logits)
+    zc = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(y * z + (1 - y) * zc)
+
+
+@dataclass
+class MLPRouter:
+    """Three-layer MLP multi-label classifier (paper default)."""
+
+    params: list
+    embed_dim: int
+    n_models: int
+
+    def predict(self, embeddings: np.ndarray) -> np.ndarray:
+        """û_{i,k,1} ∈ [0,1]^{n×K}."""
+        logits = _mlp_logits(self.params, jnp.asarray(embeddings, jnp.float32))
+        return np.asarray(jax.nn.sigmoid(logits), dtype=np.float64)
+
+
+def train_mlp_router(
+    embeddings: np.ndarray,        # (n, d) training query embeddings
+    labels: np.ndarray,            # (n, K) ground-truth u_{i,k,1} ∈ {0,1}
+    hidden: Sequence[int] = (256, 128),
+    lr: float = 1e-3,
+    weight_decay: float = 1e-4,
+    epochs: int = 60,
+    batch_size: int = 256,
+    seed: int = 0,
+    val_frac: float = 0.1,
+) -> MLPRouter:
+    """Minimize multi-label BCE on Q' (§4); early selection on a val split."""
+    x = jnp.asarray(embeddings, jnp.float32)
+    y = jnp.asarray(labels, jnp.float32)
+    n, d = x.shape
+    k = y.shape[1]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_val = max(1, int(n * val_frac))
+    vi, ti = perm[:n_val], perm[n_val:]
+
+    params = _init_mlp(jax.random.PRNGKey(seed), (d, *hidden, k))
+    opt = adamw(lr, weight_decay=weight_decay, grad_clip=1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(_bce_loss)(params, xb, yb)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    best = (np.inf, params)
+    for epoch in range(epochs):
+        order = rng.permutation(ti)
+        for s in range(0, len(order), batch_size):
+            sel = order[s:s + batch_size]
+            params, state, _ = step(params, state, x[sel], y[sel])
+        val = float(_bce_loss(params, x[vi], y[vi]))
+        if val < best[0]:
+            best = (val, jax.tree.map(jnp.copy, params))
+    return MLPRouter(params=best[1], embed_dim=d, n_models=k)
+
+
+@dataclass
+class KNNRouter:
+    """K-nearest-neighbour multi-label classifier (paper alternative)."""
+
+    train_embeddings: np.ndarray   # (n, d), assumed L2-normalized
+    train_labels: np.ndarray       # (n, K)
+    k: int = 16
+
+    def predict(self, embeddings: np.ndarray) -> np.ndarray:
+        q = np.asarray(embeddings, dtype=np.float32)
+        sims = q @ self.train_embeddings.T            # cosine (normalized)
+        nn = np.argpartition(-sims, self.k - 1, axis=1)[:, : self.k]
+        return self.train_labels[nn].mean(axis=1).astype(np.float64)
+
+    @property
+    def n_models(self) -> int:
+        return self.train_labels.shape[1]

@@ -1,0 +1,2 @@
+from repro.data.workload import Workload, BENCHMARKS, make_workload
+from repro.data.simulator import SimulatedModel, make_simulated_pool, POOL_SPECS

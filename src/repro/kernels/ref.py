@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every kernel (small-shape ground truth for tests).
+
+These are deliberately naive (materialize full score matrices / unrolled
+recurrences): they define *correctness*, not performance.  ``ops.py`` holds
+the memory-sane chunked fallbacks used by models on CPU, and the Pallas
+kernels are validated against these oracles in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_ref", "decode_attention_ref", "wkv6_ref", "rglru_ref"]
+
+
+def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hk, D) -> (B, S, Hk*groups, D) by repeating each KV head."""
+    return jnp.repeat(x, groups, axis=2)
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+            bias=None) -> jax.Array:
+    """Naive attention. q: (B, Sq, H, D); k/v: (B, Skv, Hk, D); GQA via repeat.
+
+    ``window``: sliding-window size (keys within [pos-window+1, pos]).
+    """
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    k = _expand_kv(k, H // Hk)
+    v = _expand_kv(v, H // Hk)
+    Skv = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if bias is not None:
+        scores = scores + bias
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (prefill/decode)
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths) -> jax.Array:
+    """Single-token decode. q: (B, 1, H, D); k/v: (B, Smax, Hk, D);
+    lengths: (B,) valid KV lengths."""
+    B, _, H, D = q.shape
+    Hk = k.shape[2]
+    k = _expand_kv(k, H // Hk)
+    v = _expand_kv(v, H // Hk)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    valid = (jnp.arange(k.shape[1])[None, :] < lengths[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, state=None):
+    """RWKV6 WKV recurrence, token by token (exact oracle).
+
+    r/k/w: (B, T, H, D); v: (B, T, H, D); u: (H, D); state: (B, H, D, D).
+      o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+      S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    Returns (out (B,T,H,D), final state).
+    """
+    B, T, H, D = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B, H, D, D)
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def rglru_ref(x, a_log, state=None):
+    """Diagonal gated linear recurrence (RG-LRU core), token by token.
+
+    x: (B, T, W) pre-gated inputs; a_log: (B, T, W) log recurrence gates ≤ 0.
+      h_t = exp(a_log_t) · h_{t-1} + sqrt(1 − exp(2·a_log_t)) · x_t
+    Returns (h (B,T,W), final state (B,W)).
+    """
+    B, T, W = x.shape
+    if state is None:
+        state = jnp.zeros((B, W), jnp.float32)
+    x32, al = x.astype(jnp.float32), a_log.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at = inp
+        a = jnp.exp(at)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * at), 1e-12)) * xt
+        h = a * h + gated
+        return h, h
+
+    state, hs = jax.lax.scan(step, state, (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(al, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), state

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell
+on the production meshes, prove memory fits, and extract roofline inputs.
+
+The two lines above MUST stay first: jax locks the device count on first init.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun.json
+
+Cells lower ``train_step`` (train shapes) or ``serve_step`` (prefill / decode
+shapes: decode = one new token against a seq_len KV cache).  Sub-quadratic
+``long_500k`` runs only for SSM/hybrid archs (full-attention archs record
+SKIP, per the assignment).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import analyze_compiled, analytic_hbm_bytes, cpu_upcast_bytes, model_flops
+from repro.config import MeshConfig, ShardingConfig, SHAPE_SUITE
+from repro.launch import specs as S
+from repro.launch.mesh import make_mesh_from_config, mesh_config
+from repro.models.layers import sanitize_pspec
+from repro.models.transformer import Model
+from repro.training.optimizer import OptimizerState, adamw
+from repro.training.train_loop import (
+    fsdp_param_pspecs, make_train_step, opt_state_pspecs, zero1_pspecs,
+)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_opt_state(abstract_params, moment_dtype):
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(moment_dtype)),
+                       abstract_params)
+    import copy
+    return OptimizerState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mom,
+                          nu=copy.deepcopy(mom))
+
+
+def lower_cell(cfg, shape, mesh, mesh_cfg: MeshConfig, verbose: bool = True):
+    """Lower + compile one cell.  Returns a result dict (or raises)."""
+    shard = S.shard_preset(cfg, shape)
+    model = Model(cfg, shard, mesh=mesh)
+    abstract_params = model.abstract_params()
+    pspecs = fsdp_param_pspecs(model.param_pspecs(mesh_cfg), abstract_params,
+                               mesh_cfg, shard)
+    dp = S.dp_axes(mesh_cfg, shape.global_batch)
+    n_groups = max(model.n_groups, 1)
+    known_loops = {"layer_scan": n_groups}
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = adamw(1e-4, moment_dtype=shard.moment_dtype)
+            step = make_train_step(model, opt, shard)
+            batch = S.batch_inputs(cfg, shape)
+            b_ps = S.batch_pspecs(cfg, mesh_cfg, shape.global_batch)
+            opt_ps = opt_state_pspecs(pspecs, abstract_params, mesh_cfg, shard)
+            in_sh = (_named(mesh, pspecs), _named(mesh, opt_ps), _named(mesh, b_ps))
+            out_sh = (_named(mesh, pspecs), _named(mesh, opt_ps), None)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
+                abstract_params, _abstract_opt_state(abstract_params, shard.moment_dtype),
+                batch)
+            known_loops["microbatches"] = shard.microbatches
+            n_tokens = shape.global_batch * shape.seq_len
+            mf_kind = "train"
+        elif shape.kind == "prefill":
+            inputs = S.prefill_inputs(cfg, shape)
+            enc_len = S.enc_len_for(cfg, shape)
+            cache_ps = model.cache_pspecs(mesh_cfg, shape.global_batch, shape.seq_len,
+                                          enc_len)
+            logits_ps = sanitize_pspec((shape.global_batch, 1, model.vocab_padded),
+                                       P(dp, None, "model"), mesh_cfg)
+
+            if cfg.enc_dec:
+                def serve_step(params, tokens, enc_embeds):
+                    return model.prefill(params, tokens, shape.seq_len,
+                                         enc_inputs=enc_embeds)
+                args = (abstract_params, inputs["tokens"], inputs["enc_embeds"])
+                in_sh = (_named(mesh, pspecs),
+                         NamedSharding(mesh, P(dp, None)),
+                         NamedSharding(mesh, P(dp, None, None)))
+            else:
+                def serve_step(params, tokens):
+                    return model.prefill(params, tokens, shape.seq_len)
+                args = (abstract_params, inputs["tokens"])
+                tok_ps = P(dp, None, None) if cfg.frontend == "vision" else P(dp, None)
+                in_sh = (_named(mesh, pspecs), NamedSharding(mesh, tok_ps))
+            out_sh = (NamedSharding(mesh, logits_ps), _named(mesh, cache_ps))
+            lowered = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+            n_tokens = shape.global_batch * shape.seq_len
+            mf_kind = "serve"
+        else:  # decode
+            enc_len = S.enc_len_for(cfg, shape)
+            cache_ps = model.cache_pspecs(mesh_cfg, shape.global_batch, shape.seq_len,
+                                          enc_len)
+            abstract_cache = model.abstract_cache(shape.global_batch, shape.seq_len,
+                                                  enc_len)
+            inputs = S.decode_inputs(cfg, shape)
+            tok_ps = P(dp, None, None) if cfg.frontend == "vision" else P(dp, None)
+            in_sh = (_named(mesh, pspecs), NamedSharding(mesh, tok_ps),
+                     _named(mesh, cache_ps))
+            logits_ps = sanitize_pspec((shape.global_batch, 1, model.vocab_padded),
+                                       P(dp, None, "model"), mesh_cfg)
+            out_sh = (NamedSharding(mesh, logits_ps), _named(mesh, cache_ps))
+            lowered = jax.jit(model.decode_step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                abstract_params, inputs["tokens"], abstract_cache)
+            n_tokens = shape.global_batch          # one token per sequence
+            mf_kind = "serve"
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    n_params = model.param_count()
+    active = n_params
+    if cfg.moe is not None:
+        m = cfg.moe
+        gated = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        expert_params = cfg.n_layers * m.n_experts * gated * cfg.d_model * m.d_expert
+        active_experts = cfg.n_layers * m.top_k * gated * cfg.d_model * m.d_expert
+        active = n_params - expert_params + active_experts
+    hbm = analytic_hbm_bytes(cfg, shape, shard, mesh_cfg, n_params, active)
+    rep = analyze_compiled(compiled, known_loops=known_loops, hbm_bytes=hbm)
+    # XLA-CPU upcasts bf16 dot operands to f32 and hoists whole-stack converts
+    # out of the layer scan; on TPU these buffers do not exist.  Report both.
+    upcast = cpu_upcast_bytes(compiled.as_text(), n_groups)
+    rep.mem_per_device["cpu_upcast_GB"] = upcast / 2**30
+    floor = rep.mem_per_device["args_GB"] + rep.mem_per_device["out_GB"]
+    rep.mem_per_device["peak_tpu_est_GB"] = max(
+        rep.mem_per_device["peak_GB"] - upcast / 2**30, floor)
+    mf = model_flops(active, n_tokens, mf_kind)
+    chips = mesh_cfg.n_devices
+    hlo_global_flops = rep.flops_per_device * chips
+    result = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(map(str, mesh_cfg.shape)),
+        "status": "ok",
+        "params_B": n_params / 1e9,
+        "active_params_B": active / 1e9,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global_flops,
+        "useful_ratio": mf / hlo_global_flops if hlo_global_flops else None,
+        "mem": rep.mem_per_device,
+        "roofline": rep.summary(),
+        "shard": {k: getattr(S.shard_preset(cfg, shape), k) for k in
+                  ("fsdp_params", "seq_shard_residual", "microbatches", "kv_seq_shard",
+                   "moment_dtype", "moe_dispatch", "remat")},
+    }
+    if verbose:
+        r = rep.summary()
+        print(f"  {cfg.name} × {shape.name} [{result['mesh']}]: "
+              f"compile {t_compile:.0f}s peak {rep.mem_per_device['peak_tpu_est_GB']:.1f}"
+              f"({rep.mem_per_device['peak_GB']:.1f})GB/chip "
+              f"compute {r['compute_s']:.3f}s mem {r['memory_s']:.3f}s "
+              f"coll {r['collective_s']:.3f}s → {r['dominant']} "
+              f"useful {result['useful_ratio'] and round(result['useful_ratio'], 2)}",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append((mesh_config(multi_pod=False), False))
+    if args.mesh in ("multi", "both"):
+        meshes.append((mesh_config(multi_pod=True), True))
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for mesh_cfg, multi in meshes:
+        mesh = make_mesh_from_config(mesh_cfg)
+        mesh_tag = "x".join(map(str, mesh_cfg.shape))
+        print(f"== mesh {mesh_tag} ({mesh_cfg.n_devices} chips) ==", flush=True)
+        for cfg, shape, ok, why in S.iter_cells(args.arch, args.shape):
+            key = (cfg.name, shape.name, mesh_tag)
+            if key in done:
+                continue
+            if not ok:
+                results.append({"arch": cfg.name, "shape": shape.name,
+                                "mesh": mesh_tag, "status": why})
+                print(f"  {cfg.name} × {shape.name}: {why}", flush=True)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                continue
+            try:
+                results.append(lower_cell(cfg, shape, mesh, mesh_cfg))
+            except Exception as e:   # noqa: BLE001 — record and continue
+                results.append({"arch": cfg.name, "shape": shape.name,
+                                "mesh": mesh_tag, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"})
+                print(f"  {cfg.name} × {shape.name}: ERROR {type(e).__name__}: "
+                      f"{str(e)[:300]}", flush=True)
+                traceback.print_exc()
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"].startswith("SKIP"))
+    n_err = len(results) - n_ok - n_skip
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skip, {n_err} error -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,154 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell,
+plus per-cell sharding presets.
+
+No device allocation happens here — the dry-run lowers/compiles purely from
+abstract shapes (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import (
+    MeshConfig, ModelConfig, ShapeConfig, ShardingConfig, SHAPE_SUITE, get_arch,
+    shape_applicable,
+)
+
+# encoder frame count for the enc-dec audio arch (≈30 s at 50 Hz + margin;
+# train uses seq_len frames to exercise the full encoder)
+AUDIO_ENC_FRAMES = 1536
+
+
+def shard_preset(cfg: ModelConfig, shape: ShapeConfig) -> ShardingConfig:
+    """Per-cell parallelism preset (the §Perf baselines).
+
+    Rationale (memory-driven, see DESIGN.md):
+      * ≥70B params: FSDP param storage + bf16 Adam moments + Megatron-SP
+        saved-activation sharding + deep grad accumulation.
+      * MoE: FSDP + moderate accumulation (expert weights dominate).
+      * decode cells: flash-decode KV sequence sharding for global-attention
+        archs (the KV cache is the footprint).
+    """
+    big = cfg.param_count() > 6e10
+    moe = cfg.moe is not None
+    kw: dict = {}
+    if moe and cfg.moe.n_experts % 16 == 0 and shape.kind != "train":
+        # §Perf cell 1: expert-parallel all-to-all dispatch (per-shard local
+        # ranking + one token A2A) replaces the naive activation gathers.
+        # (train ablation below decides the train-side dispatch)
+        kw.update(moe_dispatch="ep")
+    if shape.kind == "train":
+        # K/V layout pinning measured beneficial only for the FSDP+SP big-model
+        # train cells (nemotron 444 s pinned vs 620 s unpinned); small dense /
+        # MoE train cells regress with it (§Perf post-sweep ablation)
+        kw.update(pin_kv_layout=big)
+        if big:
+            # §Perf cell 2: FSDP weight gathers repeat per microbatch, so fewer
+            # larger microbatches cut the dominant collective term ~4×; SP
+            # keeps the per-microbatch activations small enough to afford it,
+            # and bf16 accumulation buffers keep the optimizer state in budget.
+            kw.update(fsdp_params=True, seq_shard_residual=True, microbatches=4,
+                      moment_dtype="bfloat16", acc_dtype="bfloat16")
+        elif moe:
+            kw.update(fsdp_params=True, microbatches=8)
+        elif cfg.param_count() > 5e9:
+            kw.update(fsdp_params=True, microbatches=4)
+        elif cfg.family in ("ssm", "hybrid"):
+            # chunked recurrences materialize per-chunk pair tensors; deeper
+            # accumulation keeps the per-microbatch working set in budget
+            kw.update(microbatches=8)
+        else:
+            kw.update(microbatches=2)
+        kw.update(remat="block")
+    else:
+        kw.update(remat="none", microbatches=1, pin_kv_layout=True)
+        if big:
+            kw.update(fsdp_params=True)
+        if shape.kind == "decode" and cfg.uses_kv_cache and not cfg.sub_quadratic:
+            kw.update(kv_seq_shard=True)
+        if shape.name == "prefill_32k":
+            kw.update(attn_q_block=2048, attn_kv_block=2048,
+                      kv_seq_shard=not cfg.sub_quadratic)
+        if shape.name == "long_500k":
+            kw.update(attn_q_block=2048, attn_kv_block=2048)
+    return ShardingConfig(**kw)
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract train-batch inputs {name: ShapeDtypeStruct}."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.enc_dec:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, min(AUDIO_ENC_FRAMES, S), cfg.d_model),
+                                                   jnp.bfloat16)
+    elif cfg.frontend == "vision":
+        # stub frontend: precomputed patch+text embeddings
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return specs
+
+
+def dp_axes(mesh_cfg: MeshConfig, batch: int):
+    """Data axes for a batch dim, dropped when not divisible (e.g. batch 1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh_cfg.axes)
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    n = 1
+    for a in dp:
+        n *= sizes[a]
+    return dp if (dp and batch % n == 0) else None
+
+
+def batch_pspecs(cfg: ModelConfig, mesh_cfg: MeshConfig, batch: int = 0) -> dict:
+    dp = dp_axes(mesh_cfg, batch) if batch else tuple(
+        a for a in ("pod", "data") if a in mesh_cfg.axes)
+    out = {"labels": P(dp, None)}
+    if cfg.enc_dec:
+        out["tokens"] = P(dp, None)
+        out["enc_embeds"] = P(dp, None, None)
+    elif cfg.frontend == "vision":
+        out["embeds"] = P(dp, None, None)
+    else:
+        out["tokens"] = P(dp, None)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    if cfg.frontend == "vision":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend == "vision":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.enc_dec:
+        out["enc_embeds"] = jax.ShapeDtypeStruct((B, AUDIO_ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def enc_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return AUDIO_ENC_FRAMES if cfg.enc_dec else 0
+
+
+def iter_cells(arch_filter: str = "all", shape_filter: str = "all"):
+    """All (arch, shape) cells with applicability verdicts."""
+    from repro.config import ARCH_IDS
+
+    archs = ARCH_IDS if arch_filter == "all" else [arch_filter]
+    shapes = list(SHAPE_SUITE) if shape_filter == "all" else [shape_filter]
+    for a in archs:
+        cfg = get_arch(a)
+        for s in shapes:
+            shape = SHAPE_SUITE[s]
+            ok, why = shape_applicable(cfg, shape)
+            yield cfg, shape, ok, why

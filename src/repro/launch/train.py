@@ -1,0 +1,72 @@
+"""Training launcher: any registered architecture, local run or production lower.
+
+Local (CPU-feasible, reduced config)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 50
+
+Production mesh compile-check of the full config (same path as the dry-run,
+exposed here for operators)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch nemotron-4-340b \
+        --mode lower --mesh multi
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--mode", choices=["local", "lower"], default="local")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.mode == "lower":
+        # production compile path needs the 512-device flag BEFORE jax init
+        os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    import jax
+
+    from repro.config import SHAPE_SUITE, ShardingConfig, get_arch
+    from repro.data.pipeline import ShardedPipeline, synthetic_lm_stream
+    from repro.models.transformer import Model
+    from repro.training.optimizer import adamw, cosine_schedule
+    from repro.training.train_loop import Trainer
+
+    if args.mode == "lower":
+        from repro.launch.dryrun import lower_cell
+        from repro.launch.mesh import make_mesh_from_config, mesh_config
+
+        mesh_cfg = mesh_config(multi_pod=args.mesh == "multi")
+        mesh = make_mesh_from_config(mesh_cfg)
+        res = lower_cell(get_arch(args.arch), SHAPE_SUITE["train_4k"], mesh, mesh_cfg)
+        print(res["roofline"])
+        return
+
+    cfg = get_arch(args.arch).reduced()
+    model = Model(cfg, ShardingConfig(remat="none", microbatches=args.microbatches))
+    opt = adamw(cosine_schedule(args.lr, warmup=10, total=args.steps), grad_clip=1.0)
+    trainer = Trainer(model, opt, model.shard, ckpt_dir=args.ckpt or None)
+    params, opt_state, start = trainer.restore_or_init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {model.param_count() / 1e6:.2f}M params, start step {start}")
+
+    stream = synthetic_lm_stream(cfg.vocab_size, args.batch, args.seq, seed=start)
+    pipeline = ShardedPipeline(stream)
+    n = max(args.steps - start, 0)
+    batches = (b for _, b in zip(range(n), pipeline))
+    params, opt_state, hist = trainer.fit(params, opt_state, batches,
+                                          start_step=start, log_every=10)
+    pipeline.close()
+    for h in hist:
+        print(f"  step {h['step']:5d} loss {h['loss']:.4f} ({h['time']:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

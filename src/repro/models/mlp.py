@@ -1,0 +1,35 @@
+"""Dense MLP variants: SwiGLU / GeGLU (gated), GeLU, squared-ReLU (Nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Builder, apply_dense, init_dense
+
+
+def init_mlp(b: Builder, cfg: ModelConfig, d: int | None = None, ff: int | None = None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    p = {}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["gate"] = init_dense(b, d, ff, ("embed", "mlp"))
+        p["up"] = init_dense(b, d, ff, ("embed", "mlp"))
+    else:
+        p["up"] = init_dense(b, d, ff, ("embed", "mlp"))
+    p["down"] = init_dense(b, ff, d, ("mlp", "embed"))
+    return p
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(apply_dense(p["gate"], x)) * apply_dense(p["up"], x)
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(apply_dense(p["gate"], x)) * apply_dense(p["up"], x)
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(apply_dense(p["up"], x))
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(apply_dense(p["up"], x)))
+    else:
+        raise ValueError(cfg.activation)
+    return apply_dense(p["down"], h)

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts layer: top-k router, shared experts, two dispatch paths.
+
+Dispatch paths (ShardingConfig.moe_dispatch):
+  * ``gather`` (default) — capacity-based sort-free dispatch: per-(token,slot)
+    ranks within the chosen expert via bincount offsets, gather to (E, C, d),
+    batched expert matmuls, weighted scatter-add back.  FLOPs ≈ active-expert
+    matmuls only.
+  * ``dense``  — classic GShard one-hot dispatch/combine einsums.  Simple and
+    exactly permutation-equivariant, but adds O(T·E·C·d) dispatch FLOPs; kept
+    as the naive baseline for the perf study and as the oracle in tests.
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism); with
+non-divisible expert counts (e.g. 60 over 16) GSPMD pads the final shard.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Builder, apply_dense, init_dense
+
+
+def init_moe(b: Builder, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    p = {"router": b.param((d, m.n_experts), ("embed", "experts"))}
+    gated = cfg.activation in ("swiglu", "geglu")
+    if gated:
+        p["gate"] = b.param((m.n_experts, d, m.d_expert), ("experts", "expert_in", "expert_mlp"))
+    p["up"] = b.param((m.n_experts, d, m.d_expert), ("experts", "expert_in", "expert_mlp"))
+    p["down"] = b.param((m.n_experts, m.d_expert, d), ("experts", "expert_mlp", "expert_in"))
+    if m.d_shared:
+        p["shared"] = {
+            "gate": init_dense(b, d, m.d_shared, ("embed", "mlp")),
+            "up": init_dense(b, d, m.d_shared, ("embed", "mlp")),
+            "down": init_dense(b, m.d_shared, d, ("mlp", "embed")),
+            # Qwen2-MoE gates the shared expert with a per-token sigmoid
+            "gate_proj": b.param((d, 1), ("embed", None)),
+        }
+    return p
+
+
+def _expert_ffn(p, cfg: ModelConfig, x):
+    """x: (E, C, d) -> (E, C, d) via per-expert batched matmuls."""
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", x, p["gate"])) * jnp.einsum("ecd,edf->ecf", x, p["up"])
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", x, p["up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["up"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+
+def apply_moe(p, cfg: ModelConfig, x, dispatch: str = "gather", exact: bool = False,
+              chunk_tokens: int = 65_536, dp_size: int = 1, constrain=None):
+    """x: (B, S, d).  Returns (out, aux_loss).
+
+    ``exact=True`` sets capacity C = T (no token drops) — used for decode
+    steps, where T is tiny and a capacity-factor C would drop live requests.
+
+    Long sequences dispatch in token chunks of ``chunk_tokens`` (lax.map):
+    the gathered (E, C, d) buffers scale with the chunk, not the full batch —
+    capacity limits then apply per chunk (statistically equivalent, noted in
+    DESIGN.md).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)                  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style): E · Σ_e f_e · P_e
+    f = jnp.zeros((m.n_experts,), jnp.float32)
+    f = f.at[top_i.reshape(-1)].add(1.0) / (T * m.top_k)
+    P = probs.mean(0)
+    aux = m.n_experts * jnp.sum(f * P) * m.router_aux_weight
+
+    if dispatch == "ep" and not exact:
+        out = _dispatch_ep(p, cfg, xt, top_p, top_i, dp_size=dp_size,
+                           constrain=constrain, chunk_tokens=chunk_tokens)
+    else:
+        fn = {"dense": _dispatch_dense, "gather": _dispatch_gather,
+              "ep": _dispatch_gather}[dispatch]
+        if exact or T <= chunk_tokens or T % chunk_tokens != 0:
+            C = T if exact else min(max(1, math.ceil(T * m.top_k / m.n_experts
+                                                     * m.capacity_factor)), T)
+            out = fn(p, cfg, xt, top_p, top_i, C)
+        else:
+            n_chunks = T // chunk_tokens
+            Tc = chunk_tokens
+            C = min(max(1, math.ceil(Tc * m.top_k / m.n_experts * m.capacity_factor)), Tc)
+            out = jax.lax.map(
+                lambda args: fn(p, cfg, args[0], args[1], args[2], C),
+                (xt.reshape(n_chunks, Tc, d), top_p.reshape(n_chunks, Tc, -1),
+                 top_i.reshape(n_chunks, Tc, -1)),
+            ).reshape(T, d)
+
+    if m.d_shared:
+        sp = p["shared"]
+        h = jax.nn.silu(apply_dense(sp["gate"], xt)) * apply_dense(sp["up"], xt)
+        sh = apply_dense(sp["down"], h)
+        gate = jax.nn.sigmoid(xt @ sp["gate_proj"].astype(xt.dtype))
+        out = out + gate * sh
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _pair_ranks(top_i, n_experts: int):
+    """Rank of each (token, slot) pair within its expert (dispatch order)."""
+    flat_e = top_i.reshape(-1)                                    # (P,)
+    P = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)                      # pairs grouped by expert
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                          # (E,)
+    ranks_sorted = jnp.arange(P, dtype=jnp.int32) - starts[flat_e[order]]
+    ranks = jnp.zeros((P,), jnp.int32).at[order].set(ranks_sorted)
+    return flat_e, ranks
+
+
+def _dispatch_ep(p, cfg: ModelConfig, xt, top_p, top_i, dp_size: int = 1,
+                 constrain=None, chunk_tokens: int = 65_536):
+    """Expert-parallel dispatch (beyond-paper §Perf cell 1).
+
+    Each data shard ranks and packs ITS OWN tokens into (E, C_local, d)
+    locally (no cross-shard sort, no activation all-gather); one
+    transpose-reshard then moves token rows to their expert shards — GSPMD
+    lowers it to the canonical MoE all-to-all.  Payload per layer is exactly
+    the dispatched rows (T·k·cf·d).  Capacity limits apply per shard per
+    chunk (statistically equivalent for shuffled batches).
+
+    Chunking happens INSIDE the shard dim (a flat token chunk would live
+    entirely on one data shard and serialize the mesh).
+    """
+    m = cfg.moe
+    T, d = xt.shape
+    k = m.top_k
+    D = dp_size if (dp_size > 1 and T % dp_size == 0) else 1
+    Tl = T // D
+    xt_s = xt.reshape(D, Tl, d)
+    ti = top_i.reshape(D, Tl, k)
+    tp = top_p.reshape(D, Tl, k)
+    if constrain is not None:
+        # the reshape is shard-aligned (contiguous rows per dp rank); pin it
+        # so GSPMD does not materialize a gathered copy
+        xt_s = constrain(xt_s, ("batch", None, None))
+
+    def run(x_loc_all, ti_all, tp_all):
+        """One chunk: x (D, Tc, d)."""
+        Tc = x_loc_all.shape[1]
+        C = min(max(1, math.ceil(Tc * k / m.n_experts * m.capacity_factor)), Tc)
+
+        def shard_pack(x_loc, ti_loc, tp_loc):
+            flat_e, ranks = _pair_ranks(ti_loc, m.n_experts)
+            flat_w = tp_loc.reshape(-1).astype(jnp.float32)
+            tok = jnp.repeat(jnp.arange(Tc, dtype=jnp.int32), k)
+            keep = ranks < C
+            slot = jnp.where(keep, flat_e * C + ranks, m.n_experts * C)
+            slot_tok = jnp.zeros((m.n_experts * C + 1,), jnp.int32).at[slot].set(tok, mode="drop")[:-1]
+            slot_w = jnp.zeros((m.n_experts * C + 1,), jnp.float32).at[slot].set(flat_w, mode="drop")[:-1]
+            g = x_loc[slot_tok].reshape(m.n_experts, C, d)
+            g = g * (slot_w.reshape(m.n_experts, C, 1) > 0)
+            return g, slot_tok, slot_w
+
+        gathered, slot_tok, slot_w = jax.vmap(shard_pack)(x_loc_all, ti_all, tp_all)
+        if constrain is not None:
+            gathered = constrain(gathered, ("batch", "experts", None, None))
+        # move rows to expert shards: (E, D·C, d) sharded over experts — the A2A
+        h_in = gathered.transpose(1, 0, 2, 3).reshape(m.n_experts, D * C, d)
+        if constrain is not None:
+            h_in = constrain(h_in, ("experts", None, None))
+        h = _expert_ffn(p, cfg, h_in)
+        h = h.reshape(m.n_experts, D, C, d).transpose(1, 0, 2, 3)
+        if constrain is not None:
+            h = constrain(h, ("batch", "experts", None, None))
+        h = h * slot_w.reshape(D, m.n_experts, C, 1).astype(h.dtype)
+
+        def shard_unpack(h_loc, slot_tok_loc):
+            return jnp.zeros((Tc, d), h.dtype).at[slot_tok_loc.reshape(-1)].add(
+                h_loc.reshape(-1, d))
+
+        return jax.vmap(shard_unpack)(h, slot_tok)                     # (D, Tc, d)
+
+    chunk_local = max(chunk_tokens // D, 1)
+    if Tl <= chunk_local or Tl % chunk_local != 0:
+        out = run(xt_s, ti, tp)
+    else:
+        n_ch = Tl // chunk_local
+        def chunked(t3):
+            return t3.reshape(D, n_ch, chunk_local, -1).transpose(1, 0, 2, 3)
+        out = jax.lax.map(lambda a: run(*a), (chunked(xt_s), chunked(ti), chunked(tp)))
+        out = out.transpose(1, 0, 2, 3).reshape(D, Tl, d)
+    return out.reshape(T, d)
+
+
+def _dispatch_gather(p, cfg: ModelConfig, xt, top_p, top_i, C: int):
+    m = cfg.moe
+    T, d = xt.shape
+    k = m.top_k
+    flat_e, ranks = _pair_ranks(top_i, m.n_experts)               # (P,)
+    flat_w = top_p.reshape(-1).astype(jnp.float32)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    keep = ranks < C
+    slot = flat_e * C + ranks                                     # (P,) in [0, E*C)
+    slot = jnp.where(keep, slot, m.n_experts * C)                 # dropped → OOB
+    # token index per (expert, capacity) slot; empty slots point at token 0
+    # with weight 0 so they contribute nothing.
+    slot_tok = jnp.zeros((m.n_experts * C + 1,), jnp.int32).at[slot].set(tok, mode="drop")
+    slot_w = jnp.zeros((m.n_experts * C + 1,), jnp.float32).at[slot].set(flat_w, mode="drop")
+    slot_tok, slot_w = slot_tok[:-1], slot_w[:-1]
+    gathered = xt[slot_tok].reshape(m.n_experts, C, d)
+    gathered = gathered * (slot_w.reshape(m.n_experts, C, 1) > 0)
+    h = _expert_ffn(p, cfg, gathered)                             # (E, C, d)
+    h = h * slot_w.reshape(m.n_experts, C, 1).astype(h.dtype)
+    out = jnp.zeros((T, d), h.dtype).at[slot_tok.reshape(-1)].add(h.reshape(-1, d))
+    return out
+
+
+def _dispatch_dense(p, cfg: ModelConfig, xt, top_p, top_i, C: int):
+    m = cfg.moe
+    T, d = xt.shape
+    flat_e, ranks = _pair_ranks(top_i, m.n_experts)
+    keep = (ranks < C).astype(jnp.float32)
+    # combine[t, e, c] = weight of token t in expert e's capacity slot c
+    onehot_e = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.float32)
+    onehot_c = jax.nn.one_hot(jnp.where(ranks < C, ranks, C), C + 1,
+                              dtype=jnp.float32)[..., :C]
+    pair = (onehot_e[:, :, None] * onehot_c[:, None, :]) * keep[:, None, None]
+    combine = (pair * top_p.reshape(-1)[:, None, None]).reshape(T, m.top_k, m.n_experts, C).sum(1)
+    dispatch = (combine > 0).astype(xt.dtype)                     # (T, E, C)
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, xt)
+    h = _expert_ffn(p, cfg, expert_in)
+    return jnp.einsum("tec,ecd->td", combine.astype(h.dtype), h)

@@ -1,0 +1,69 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+Block: x → [gate branch: linear → GeLU] ⊙ [linear → causal conv1d(width 4) →
+RG-LRU] → linear out.  RG-LRU: a_t = exp(−c·softplus(Λ)·σ(W_a x_t)),
+h_t = a_t h_{t−1} + √(1−a_t²)·(σ(W_x x_t) ⊙ x_t), with c = 8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import Builder, apply_dense, init_dense
+
+_C = 8.0
+
+
+def init_rglru_block(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    return {
+        "in_gate": init_dense(b, d, W, ("embed", "mlp")),
+        "in_rec": init_dense(b, d, W, ("embed", "mlp")),
+        "conv_w": b.param((cfg.conv_width, W), ("conv", "mlp"), scale=0.5),
+        "conv_b": b.param((W,), ("mlp",), init="zeros"),
+        # gate weights: output dim sharded with the recurrence width; the
+        # input dim stays replicated (one mesh axis per spec)
+        "gate_a": init_dense(b, W, W, (None, "mlp")),
+        "gate_x": init_dense(b, W, W, (None, "mlp")),
+        "lambda": b.param((W,), ("mlp",), init="uniform", scale=1.0),
+        "out": init_dense(b, W, d, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(w, bias, x, state=None):
+    """Per-channel causal conv.  x: (B, S, W); state: (B, cw−1, W) history."""
+    cw = w.shape[0]
+    B, S, W = x.shape
+    prev = jnp.zeros((B, cw - 1, W), x.dtype) if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                  # (B, S+cw−1, W)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(cw)) + bias
+    return out.astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def _log_a(p, u):
+    """log a_t = −c · softplus(Λ) · σ(W_a u) ≤ 0."""
+    r = jax.nn.sigmoid(apply_dense(p["gate_a"], u).astype(jnp.float32))
+    lam = jax.nn.softplus(p["lambda"].astype(jnp.float32))
+    return -_C * lam * r
+
+
+def rglru_block_full(p, cfg: ModelConfig, x, conv_state=None, h_state=None):
+    """Full-sequence recurrent branch.  x: (B, S, d).
+    Returns (out, (new_conv_state, new_h_state))."""
+    gate = jax.nn.gelu(apply_dense(p["in_gate"], x))
+    u = apply_dense(p["in_rec"], x)
+    u, conv_state = _causal_conv(p["conv_w"], p["conv_b"], u, conv_state)
+    a_log = _log_a(p, u)
+    gate_x = jax.nn.sigmoid(apply_dense(p["gate_x"], u).astype(jnp.float32))
+    inp = (gate_x * u.astype(jnp.float32)).astype(x.dtype)
+    h, h_state = ops.rglru_scan(inp, a_log, state=h_state)
+    out = apply_dense(p["out"], h * gate)
+    return out, (conv_state, h_state)
+
+
+def rglru_block_step(p, cfg: ModelConfig, x, conv_state, h_state):
+    """Single-token step; identical math at S = 1."""
+    return rglru_block_full(p, cfg, x, conv_state, h_state)

@@ -1,0 +1,114 @@
+"""RWKV6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+Follows arXiv:2404.05892: token-shift with data-dependent linear interpolation
+(ddlerp, LoRA-style), per-channel decay w_t = exp(−exp(ŵ_t)), WKV6 recurrence
+(chunked — :func:`repro.kernels.ops.wkv6`), per-head GroupNorm and output
+gating.  Channel-mix uses squared-ReLU keying.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import Builder, apply_dense, init_dense
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+_LORA_RANK = 32
+_DECAY_LORA_RANK = 64
+
+
+def init_time_mix(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    p = {
+        # ddlerp: shared down-projection + per-target up-projections
+        "mix_base": b.param((len(_MIX_NAMES), d), (None, "embed"), init="zeros"),
+        "mix_a": b.param((d, _LORA_RANK), ("embed", None), scale=0.1),
+        "mix_b": b.param((len(_MIX_NAMES), _LORA_RANK, d), (None, None, "embed"), scale=0.1),
+        "r": init_dense(b, d, d, ("embed", "heads")),
+        "k": init_dense(b, d, d, ("embed", "heads")),
+        "v": init_dense(b, d, d, ("embed", "heads")),
+        "g": init_dense(b, d, d, ("embed", "heads")),
+        "o": init_dense(b, d, d, ("heads", "embed")),
+        # data-dependent decay: w = exp(−exp(w0 + lora_w(x)))
+        "w0": b.param((d,), ("embed",), init="uniform", scale=0.5),
+        "w_a": b.param((d, _DECAY_LORA_RANK), ("embed", None), scale=0.1),
+        "w_b": b.param((_DECAY_LORA_RANK, d), (None, "embed"), scale=0.1),
+        "u": b.param((H, cfg.rwkv_head_dim), ("heads", "head_dim"), init="uniform", scale=0.5),
+        # per-head GroupNorm over the WKV output
+        "gn_scale": b.param((d,), ("embed",), init="ones"),
+        "gn_bias": b.param((d,), ("embed",), init="zeros"),
+    }
+    return p
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift interpolation → one mixed input per target."""
+    delta = xx - x
+    base = jax.nn.tanh((x + delta * 0.5) @ p["mix_a"])              # (B, S, rank)
+    outs = []
+    for i, _ in enumerate(_MIX_NAMES):
+        mix = p["mix_base"][i] + base @ p["mix_b"][i]               # (B, S, d)
+        outs.append(x + delta * mix)
+    return outs
+
+
+def _group_norm(x, scale, bias, n_heads, eps=1e-5):
+    """GroupNorm over heads: x (B, S, d) with d = H · hd."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, d) * scale + bias).astype(x.dtype)
+
+
+def time_mix_full(p, cfg: ModelConfig, x, shift_state=None, wkv_state=None):
+    """Full-sequence time-mix.  x: (B, S, d).
+    Returns (out, (new_shift_state, new_wkv_state))."""
+    B, S, d = x.shape
+    H, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    prev = jnp.zeros((B, 1, d), x.dtype) if shift_state is None else shift_state[:, None, :]
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)                 # token shift
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = apply_dense(p["r"], xr).reshape(B, S, H, hd)
+    k = apply_dense(p["k"], xk).reshape(B, S, H, hd)
+    v = apply_dense(p["v"], xv).reshape(B, S, H, hd)
+    g = jax.nn.silu(apply_dense(p["g"], xg))
+    w_raw = p["w0"] + jax.nn.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32))).reshape(B, S, H, hd)
+    out, wkv_state = ops.wkv6(r, k, v, w, p["u"], state=wkv_state)
+    out = _group_norm(out.reshape(B, S, d), p["gn_scale"], p["gn_bias"], H)
+    out = apply_dense(p["o"], out * g)
+    return out, (x[:, -1, :], wkv_state)
+
+
+def time_mix_step(p, cfg: ModelConfig, x, shift_state, wkv_state):
+    """Single-token decode step.  x: (B, 1, d); shift_state: (B, d);
+    wkv_state: (B, H, hd, hd)."""
+    out, (new_shift, new_wkv) = time_mix_full(p, cfg, x, shift_state, wkv_state)
+    return out, (new_shift, new_wkv)
+
+
+def init_channel_mix(b: Builder, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": b.param((d,), ("embed",), init="zeros"),
+        "mix_r": b.param((d,), ("embed",), init="zeros"),
+        "k": init_dense(b, d, ff, ("embed", "mlp")),
+        "v": init_dense(b, ff, d, ("mlp", "embed")),
+        "r": init_dense(b, d, d, ("embed", "embed")),
+    }
+
+
+def channel_mix_full(p, cfg: ModelConfig, x, shift_state=None):
+    B, S, d = x.shape
+    prev = jnp.zeros((B, 1, d), x.dtype) if shift_state is None else shift_state[:, None, :]
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xk = x + (xx - x) * p["mix_k"]
+    xr = x + (xx - x) * p["mix_r"]
+    kk = jnp.square(jax.nn.relu(apply_dense(p["k"], xk)))
+    out = jax.nn.sigmoid(apply_dense(p["r"], xr)) * apply_dense(p["v"], kk)
+    return out, x[:, -1, :]

@@ -1,0 +1,4 @@
+from repro.serving.engine import ServingEngine, Request
+from repro.serving.batcher import BatchPromptFormatter
+from repro.serving.pool import ServedPoolMember
+from repro.serving.fault import FaultTolerantInvoker, StragglerPolicy

@@ -1,0 +1,151 @@
+"""Serving engine: slot-based continuous batching over prefill/decode steps.
+
+One engine serves one model.  The KV cache is a fixed (max_slots, ...) pytree;
+requests are admitted into free slots (their prefilled single-request cache is
+scattered into the slot), all active slots decode in lockstep, and finished
+requests retire immediately so new ones can be admitted mid-stream — the vLLM
+iteration-level scheduling idea, realized with jit-static shapes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.transformer import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: list[int]
+    max_new: int = 32
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+    enqueued_at: float = field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class ServingEngine:
+    """Continuous-batching engine for a single model on the local device(s)."""
+
+    def __init__(self, model: Model, params, *, max_slots: int = 8, max_len: int = 1024,
+                 eos_id: int = ByteTokenizer.eos, pad_id: int = ByteTokenizer.pad):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.cache = model.init_cache(max_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self._prefill_len_cache: dict[int, Callable] = {}
+
+        @jax.jit
+        def _decode(params, tokens, cache):
+            return model.decode_step(params, tokens, cache)
+
+        self._decode = _decode
+
+        @partial(jax.jit, static_argnums=(3,))
+        def _prefill_one(params, tokens, lengths, max_len):
+            return model.prefill(params, tokens, max_len, lengths=lengths)
+
+        self._prefill_one = _prefill_one
+
+        @jax.jit
+        def _insert(cache, one_cache, slot):
+            def ins_axis(axis):
+                def ins(dst, src):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), slot, axis=axis)
+                return ins
+            out = {}
+            for key, sub in cache.items():
+                # "blocks" leaves are layer-stacked: batch dim is axis 1
+                axis = 1 if key == "blocks" else 0
+                out[key] = jax.tree.map(ins_axis(axis), sub, one_cache[key])
+            return out
+
+        self._insert = _insert
+
+    # ------------------------------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        """Pad prompt lengths to power-of-two buckets to bound jit variants."""
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _admit(self, req: Request, slot: int):
+        tok = ByteTokenizer()
+        L = self._bucket_len(len(req.tokens))
+        tokens, lengths = tok.pad_batch([req.tokens], L)
+        logits, one_cache = self._prefill_one(self.params, jnp.asarray(tokens),
+                                              jnp.asarray(lengths), self.max_len)
+        self.cache = self._insert(self.cache, one_cache, slot)
+        self.slot_req[slot] = req
+        req.started_at = time.time()
+        first = int(jnp.argmax(logits[0, 0]))
+        req.out_tokens.append(first)
+        if first == self.eos_id:
+            self._retire(slot)
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        if req is not None:
+            req.done = True
+            req.finished_at = time.time()
+        self.slot_req[slot] = None
+
+    def _active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
+        """Run all requests to completion with continuous batching."""
+        queue = list(requests)
+        while queue or self._active_slots():
+            # admission: fill free slots
+            for slot in range(self.max_slots):
+                if self.slot_req[slot] is None and queue:
+                    self._admit(queue.pop(0), slot)
+            active = self._active_slots()
+            if not active:
+                continue
+            # lockstep decode across all slots (inactive slots decode garbage
+            # into their own slot state; they are reset at admission)
+            last = np.full((self.max_slots, 1), self.pad_id, dtype=np.int32)
+            for i in active:
+                last[i, 0] = self.slot_req[i].out_tokens[-1]
+            logits, self.cache = self._decode(self.params, jnp.asarray(last), self.cache)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for i in active:
+                req = self.slot_req[i]
+                req.out_tokens.append(int(nxt[i]))
+                total_len = len(req.tokens) + len(req.out_tokens)
+                if (int(nxt[i]) == self.eos_id or len(req.out_tokens) >= req.max_new
+                        or total_len >= self.max_len - 1):
+                    self._retire(i)
+        return requests
+
+    # convenience --------------------------------------------------------
+    def generate_text(self, prompts: list[str], max_new: int = 32) -> list[str]:
+        tok = ByteTokenizer()
+        reqs = [Request(rid=i, tokens=tok.encode(p), max_new=max_new)
+                for i, p in enumerate(prompts)]
+        self.serve(reqs)
+        outs = []
+        for r in reqs:
+            ids = r.out_tokens
+            if self.eos_id in ids:
+                ids = ids[: ids.index(self.eos_id)]
+            outs.append(tok.decode(ids))
+        return outs

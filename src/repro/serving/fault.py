@@ -1,0 +1,112 @@
+"""Fault tolerance for pool invocations: deadlines, retries, straggler
+re-dispatch, health tracking.
+
+At 1000+ node scale, a routing scheduler's batches land on many serving
+replicas; slow or dead replicas must not stall the workload.  The invoker
+wraps any pool member and implements:
+
+  * deadline-based straggler detection (p50-adaptive or fixed),
+  * bounded retries with a backup replica (speculative re-dispatch),
+  * consecutive-failure health ejection with cool-down re-admission,
+  * an invocation journal so a crashed scheduler can re-enqueue in-flight
+    batches on recovery (no query silently dropped).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class StragglerPolicy:
+    deadline_factor: float = 3.0      # deadline = factor × running p50 latency
+    min_deadline_s: float = 2.0
+    max_retries: int = 2
+    eject_after: int = 3              # consecutive failures before ejection
+    cooldown_s: float = 30.0
+
+
+@dataclass
+class _Health:
+    consecutive_failures: int = 0
+    ejected_until: float = 0.0
+    latencies: list = field(default_factory=list)
+
+    def p50(self) -> float:
+        return float(np.median(self.latencies)) if self.latencies else 0.0
+
+
+class FaultTolerantInvoker:
+    """Wraps pool members; ``invoke(member_idx, fn)`` runs fn with deadline +
+    retry + journal semantics.  ``fn`` must be idempotent (batched LLM calls
+    are: re-invoking re-bills but returns equivalent results)."""
+
+    def __init__(self, n_members: int, policy: Optional[StragglerPolicy] = None,
+                 backup_of: Optional[Callable[[int], Optional[int]]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy or StragglerPolicy()
+        self.health = [_Health() for _ in range(n_members)]
+        self.backup_of = backup_of or (lambda k: None)
+        self.clock = clock
+        self.journal: list[dict] = []     # in-flight + completed invocations
+        self.n_redispatched = 0
+        self.n_retries = 0
+
+    def healthy(self, k: int) -> bool:
+        return self.clock() >= self.health[k].ejected_until
+
+    def _deadline(self, k: int) -> float:
+        p50 = self.health[k].p50()
+        return max(self.policy.min_deadline_s, self.policy.deadline_factor * p50)
+
+    def invoke(self, k: int, fn: Callable[[], object], *, latency_of=None,
+               tag: str = ""):
+        """Run fn() against member k with fault handling.
+
+        ``latency_of(result)``: extracts the (simulated or measured) latency;
+        when it exceeds the deadline the invocation counts as a straggler and
+        is re-dispatched to the backup member (if any) — the faster result
+        wins, which is exactly speculative execution.
+        """
+        entry = {"member": k, "tag": tag, "state": "inflight", "t": self.clock()}
+        self.journal.append(entry)
+        attempts = 0
+        last_err = None
+        while attempts <= self.policy.max_retries:
+            attempts += 1
+            try:
+                result = fn()
+                lat = latency_of(result) if latency_of else 0.0
+                h = self.health[k]
+                h.latencies.append(lat)
+                if len(h.latencies) > 256:
+                    h.latencies.pop(0)
+                if lat > self._deadline(k):
+                    backup = self.backup_of(k)
+                    if backup is not None and self.healthy(backup):
+                        self.n_redispatched += 1
+                        entry["state"] = "redispatched"
+                        return self.invoke(backup, fn, latency_of=latency_of, tag=tag)
+                h.consecutive_failures = 0
+                entry["state"] = "done"
+                return result
+            except Exception as e:              # noqa: BLE001 — replica fault
+                last_err = e
+                self.n_retries += 1
+                h = self.health[k]
+                h.consecutive_failures += 1
+                if h.consecutive_failures >= self.policy.eject_after:
+                    h.ejected_until = self.clock() + self.policy.cooldown_s
+                    backup = self.backup_of(k)
+                    if backup is not None and self.healthy(backup):
+                        entry["state"] = "redispatched"
+                        return self.invoke(backup, fn, latency_of=latency_of, tag=tag)
+        entry["state"] = "failed"
+        raise RuntimeError(f"member {k} failed after {attempts} attempts") from last_err
+
+    def inflight(self) -> list[dict]:
+        """Batches to re-enqueue after a scheduler crash (recovery path)."""
+        return [e for e in self.journal if e["state"] == "inflight"]

@@ -1,0 +1,78 @@
+"""Real served pool: adapts ServingEngines to the scheduler's PoolMember
+protocol, so Robatch routes across *actually running* models.
+
+A ``TextTask`` supplies the query/answer text for a Workload (the numeric
+Workload drives the scheduler; the TextTask drives real token-level serving).
+Utilities come from judging the parsed batched generations — accuracy
+degradation with batch size emerges from the models themselves, not a
+simulator.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.data.simulator import BatchResult
+from repro.data.workload import Workload
+from repro.serving.batcher import BatchPromptFormatter
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass
+class TextTask:
+    """Parallel text view of a workload: query/answer strings by index."""
+
+    queries: Sequence[str]
+    answers: Sequence[str]
+    judge: Callable[[str, str], float] = None   # (prediction, gold) -> utility
+
+    def __post_init__(self):
+        if self.judge is None:
+            self.judge = lambda pred, gold: float(pred.strip() == gold.strip())
+
+
+class ServedPoolMember:
+    """One pool member backed by a live ServingEngine."""
+
+    def __init__(self, name: str, engine: ServingEngine, formatter: BatchPromptFormatter,
+                 task: TextTask, c_in: float, c_out: float, context_len: int,
+                 max_answer_tokens: int = 8):
+        self.name = name
+        self.engine = engine
+        self.formatter = formatter
+        self.task = task
+        self.c_in = c_in
+        self.c_out = c_out
+        self.context_len = context_len
+        self.max_answer_tokens = max_answer_tokens
+
+    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
+        b = len(batch_idx)
+        queries = [self.task.queries[int(i)] for i in batch_idx]
+        prompt = self.formatter.format(queries)
+        t0 = time.perf_counter()
+        req = Request(rid=0, tokens=prompt, max_new=self.max_answer_tokens * b + b)
+        self.engine.serve([req])
+        latency = time.perf_counter() - t0
+        tok = self.formatter.tokenizer
+        out_ids = req.out_tokens
+        if self.engine.eos_id in out_ids:
+            out_ids = out_ids[: out_ids.index(self.engine.eos_id)]
+        text = tok.decode(out_ids)
+        answers = self.formatter.parse(text, b)
+        util = np.array([self.task.judge(a, self.task.answers[int(i)])
+                         for a, i in zip(answers, batch_idx)])
+        return BatchResult(utilities=util, in_tokens=len(prompt),
+                           out_tokens=len(req.out_tokens), latency_s=latency)
+
+    def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
+                 rng=None) -> np.ndarray:
+        idx = np.asarray(idx)
+        out = np.zeros(len(idx))
+        for s in range(0, len(idx), batch_size):
+            chunk = idx[s:s + batch_size]
+            out[s:s + len(chunk)] = self.invoke_batch(wl, chunk).utilities
+        return out

@@ -1,0 +1,96 @@
+"""AdamW optimizer (pure JAX, pytree-based) with ZeRO-1 support hooks.
+
+No optax in this environment — this is the framework's own optimizer substrate.
+The API mirrors the (init, update) pair convention so the train loop and the
+router trainer share it.
+
+ZeRO-1: the train loop shards ``OptimizerState`` over the data axes by passing
+sharded out_shardings for the optimizer state; moments live fp32 (sharded),
+params bf16 (replicated over data, TP-sharded over model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    mu: any                  # first moment (pytree, fp32)
+    nu: any                  # second moment (pytree, fp32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw(
+    learning_rate: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = None,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """``moment_dtype=bfloat16`` halves optimizer memory (updates still
+    computed in fp32) — required to fit 340B-class training on 16 GB chips."""
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params) -> OptimizerState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+        return OptimizerState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                              nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: OptimizerState, params):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        lr = lr_fn(step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            d = (m32 / b1t) / (jnp.sqrt(v32 / b2t) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * d).astype(p.dtype),
+                    m32.astype(mdt), v32.astype(mdt))
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        mflat = treedef.flatten_up_to(state.mu)
+        vflat = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptimizerState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)

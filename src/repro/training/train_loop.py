@@ -1,0 +1,177 @@
+"""Distributed training loop: pjit train_step with TP/DP/EP sharding, ZeRO-1
+optimizer-state sharding, gradient accumulation, checkpoint/restart.
+
+``make_train_step`` builds the canonical step the multi-pod dry-run lowers:
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.config import MeshConfig, ModelConfig, ShardingConfig
+from repro.models.layers import logical_rules, logical_to_pspec
+from repro.models.transformer import Model
+from repro.training.optimizer import Optimizer, OptimizerState, adamw
+
+
+def batch_pspec(mesh_cfg: MeshConfig) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh_cfg.axes)
+    return P(dp)
+
+
+def _dp_size(mesh_cfg: MeshConfig, dp: tuple) -> int:
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    n = 1
+    for a in dp:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _claim_dp(shape, pspec: P, dp: tuple, dp_n: int, start_dim: int) -> P:
+    """Claim the data axes on the first unsharded, divisible dim ≥ start_dim.
+    No-op if any dim already uses a data axis (a mesh axis may appear in at
+    most one position of a PartitionSpec)."""
+    parts = list(pspec) if len(pspec) else []
+    parts = parts + [None] * (len(shape) - len(parts))
+    used = {a for part in parts if part is not None
+            for a in ((part,) if isinstance(part, str) else tuple(part))}
+    if used & set(dp):
+        return pspec
+    for i in range(start_dim, len(parts)):
+        if parts[i] is None and shape[i] % dp_n == 0 and shape[i] > 0:
+            parts[i] = dp
+            return P(*parts)
+    return pspec
+
+
+def zero1_pspecs(param_pspecs, abstract_params, mesh_cfg: MeshConfig,
+                 shard_cfg: ShardingConfig):
+    """Optimizer-moment shardings.  ZeRO-1: additionally shard each moment over
+    the data axes on its first unsharded divisible dim (moments dominate
+    training memory)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh_cfg.axes)
+    if not shard_cfg.zero1 or not dp:
+        return param_pspecs
+    dp_n = _dp_size(mesh_cfg, dp)
+    return jax.tree.map(lambda a, s: _claim_dp(a.shape, s, dp, dp_n, 0),
+                        abstract_params, param_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_param_pspecs(param_pspecs, abstract_params, mesh_cfg: MeshConfig,
+                      shard_cfg: ShardingConfig):
+    """ZeRO-3-style parameter *storage* sharding: claim the data axes on each
+    weight's first unsharded divisible dim past the scan 'layers' dim.  GSPMD
+    inserts the per-layer all-gathers (FSDP semantics); required to store
+    340B-class weights on 16 GB chips."""
+    if not shard_cfg.fsdp_params:
+        return param_pspecs
+    dp = tuple(a for a in ("pod", "data") if a in mesh_cfg.axes)
+    if not dp:
+        return param_pspecs
+    dp_n = _dp_size(mesh_cfg, dp)
+    return jax.tree.map(
+        lambda a, s: _claim_dp(a.shape, s, dp, dp_n, 1) if len(a.shape) > 1 else s,
+        abstract_params, param_pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_pspecs(param_pspecs, abstract_params, mesh_cfg: MeshConfig,
+                     shard_cfg: ShardingConfig) -> OptimizerState:
+    mom = zero1_pspecs(param_pspecs, abstract_params, mesh_cfg, shard_cfg)
+    return OptimizerState(step=P(), mu=mom, nu=mom)
+
+
+def make_train_step(model: Model, opt: Optimizer, shard_cfg: ShardingConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: ``shard_cfg.microbatches`` > 1 splits the batch on
+    the leading axis and accumulates grads in fp32 via lax.scan (per-microbatch
+    reduce keeps peak activation memory at one microbatch).
+    """
+    n_micro = shard_cfg.microbatches
+    acc_dt = jnp.bfloat16 if shard_cfg.acc_dtype == "bfloat16" else jnp.float32
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32), gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                             for g in jax.tree.leaves(grads)))}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+@dataclass
+class Trainer:
+    """Host-side loop: data pipeline in, checkpoints out, resume on restart."""
+
+    model: Model
+    opt: Optimizer
+    shard_cfg: ShardingConfig
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+
+    def __post_init__(self):
+        self._step_fn = jax.jit(make_train_step(self.model, self.opt, self.shard_cfg),
+                                donate_argnums=(0, 1))
+        self._mgr = CheckpointManager(self.ckpt_dir, self.keep) if self.ckpt_dir else None
+
+    def init_state(self, key):
+        params = self.model.init(key)
+        return params, self.opt.init(params)
+
+    def restore_or_init(self, key):
+        params, opt_state = self.init_state(key)
+        start = 0
+        if self._mgr and self._mgr.latest_step() is not None:
+            (params, opt_state), start = self._mgr.restore((params, opt_state))
+        return params, opt_state, start
+
+    def fit(self, params, opt_state, batches, start_step: int = 0, log_every: int = 10):
+        """batches: iterable of batch dicts.  Returns (params, opt_state, history)."""
+        history = []
+        t0 = time.time()
+        step = start_step
+        for batch in batches:
+            params, opt_state, metrics = self._step_fn(params, opt_state, batch)
+            step += 1
+            if step % log_every == 0 or step == start_step + 1:
+                history.append({"step": step, "loss": float(metrics["loss"]),
+                                "grad_norm": float(metrics["grad_norm"]),
+                                "time": time.time() - t0})
+            if self._mgr and step % self.ckpt_every == 0:
+                self._mgr.save((params, opt_state), step)
+        if self._mgr:
+            self._mgr.save((params, opt_state), step)
+        return params, opt_state, history

@@ -1,0 +1,25 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_bytes(tree) -> int:
+    """Total byte footprint of a pytree (uses declared dtypes)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_summary(tree, name: str = "tree") -> str:
+    n = tree_size(tree)
+    b = tree_bytes(tree)
+    return f"{name}: {n / 1e6:.2f}M params, {b / 2**30:.3f} GiB"

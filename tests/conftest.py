@@ -1,0 +1,32 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own 512-device
+# flag in a subprocess; never set it globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.data import make_simulated_pool, make_workload
+
+
+@pytest.fixture(scope="session")
+def agnews():
+    return make_workload("agnews", n_train=512, n_val=128, n_test=256, seed=1)
+
+
+@pytest.fixture(scope="session")
+def gsm8k():
+    return make_workload("gsm8k", n_train=512, n_val=128, n_test=256, seed=1)
+
+
+@pytest.fixture(scope="session")
+def pool():
+    return make_simulated_pool("qwen3")
+
+
+@pytest.fixture(scope="session")
+def fitted_rb(agnews, pool):
+    from repro.core import Robatch
+
+    return Robatch(pool, agnews, coreset_size=64, router_kind="knn").fit()

@@ -1,0 +1,49 @@
+"""Dry-run machinery on a small (2×4) mesh in a subprocess (its own
+XLA_FLAGS device count — never pollutes the test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from jax.sharding import AxisType
+from repro.config import MeshConfig, SHAPE_SUITE, ShapeConfig, get_arch
+from repro.launch.dryrun import lower_cell
+
+mesh_cfg = MeshConfig(shape=(2, 4), axes=("data", "model"))
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = get_arch(sys.argv[1]).reduced()
+shape = ShapeConfig(sys.argv[2], sys.argv[3], int(sys.argv[4]), int(sys.argv[5]))
+res = lower_cell(cfg, shape, mesh, mesh_cfg, verbose=False)
+print("RESULT:" + json.dumps({k: res[k] for k in ("status", "useful_ratio")}))
+"""
+
+
+def _run(arch, name, kind, seq, batch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT, arch, name, kind,
+                          str(seq), str(batch)],
+                         capture_output=True, text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("qwen1.5-0.5b", "train"),
+    ("qwen3-moe-30b-a3b", "train"),
+    ("rwkv6-3b", "decode"),
+    ("recurrentgemma-9b", "prefill"),
+])
+def test_lower_cell_small_mesh(arch, kind):
+    res = _run(arch, f"small_{kind}", kind, 64, 8)
+    assert res["status"] == "ok"
+    assert res["useful_ratio"] is None or res["useful_ratio"] > 0

@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finiteness (assignment
+requirement).  The FULL configs are exercised only by the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCH_IDS, ShardingConfig, get_arch
+from repro.models.transformer import Model
+from repro.training.optimizer import adamw
+
+
+def _inputs_for(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.frontend in ("vision", "audio") and not cfg.enc_dec:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.enc_dec:
+        batch["enc_embeds"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    model = Model(cfg, ShardingConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _inputs_for(cfg)
+
+    # forward: shapes + finite
+    logits, aux = model.forward(params, batch.get("tokens", batch.get("embeds")),
+                                enc_inputs=batch.get("enc_embeds"))
+    B, S = batch["labels"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    # one train step: loss decreases over two steps on the same batch
+    opt = adamw(3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    params, state, l0 = step(params, state, batch)
+    params, state, l1 = step(params, state, batch)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+    assert float(l1) < float(l0) + 1e-3, (float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if get_arch(a).uses_kv_cache or get_arch(a).sub_quadratic])
+def test_arch_smoke_decode(arch):
+    """Prefill + one decode step matches the full forward on the extended seq."""
+    cfg = get_arch(arch).reduced()
+    if cfg.frontend == "vision":
+        pytest.skip("decode consistency needs token inputs; VLM decode covered via dense trunks")
+    model = Model(cfg, ShardingConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    enc = (jnp.asarray(rng.normal(size=(B, 8, cfg.d_model)), jnp.float32)
+           if cfg.enc_dec else None)
+    logits, _ = model.forward(params, tokens, enc_inputs=enc)
+    lg_pre, cache = model.prefill(params, tokens, max_len=S + 4, enc_inputs=enc)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, 0]), np.asarray(logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+    tok = jnp.argmax(lg_pre[:, 0], -1).astype(jnp.int32)[:, None]
+    lg_dec, _ = model.decode_step(params, tok, cache)
+    logits2, _ = model.forward(params, jnp.concatenate([tokens, tok], axis=1), enc_inputs=enc)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]), np.asarray(logits2[:, -1]),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_scan_vs_unrolled_equivalence():
+    """scan-over-groups must match the unrolled stack bit-for-bit-ish."""
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 10)), jnp.int32)
+    m_scan = Model(cfg, ShardingConfig(remat="none", scan_layers=True))
+    params = m_scan.init(jax.random.PRNGKey(2))
+    m_unroll = Model(cfg, ShardingConfig(remat="none", scan_layers=False))
+    # re-key unrolled params from the scanned tree: rem{j} <- blocks stacked[j]
+    up = {k: v for k, v in params.items() if k not in ("blocks",)}
+    for j in range(cfg.n_layers):
+        up[f"rem{j}"] = jax.tree.map(lambda x: x[j], params["blocks"]["b0"])
+    l1, _ = m_scan.forward(params, tokens)
+    l2, _ = m_unroll.forward(up, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,50 @@
+"""Data pipeline (prefetch, placement) and launcher CLIs (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ShardedPipeline, synthetic_lm_stream
+
+
+def test_synthetic_stream_shapes_and_structure():
+    it = synthetic_lm_stream(vocab=128, batch=4, seq=16, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # next-token relationship holds
+    b2 = next(it)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # learnable structure: token marginal is far from uniform
+    flat = np.concatenate([b["tokens"].ravel(), b2["tokens"].ravel()])
+    assert len(np.unique(flat)) < 100
+
+
+def test_pipeline_prefetch_and_close():
+    it = (dict(x=np.full((2, 2), i)) for i in range(5))
+    pipe = ShardedPipeline(it, prefetch=2)
+    got = [int(b["x"][0, 0]) for b in pipe]
+    assert got == list(range(5))
+    pipe.close()
+
+
+def _run_cli(mod, *args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-m", mod, *args],
+                         capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-1500:]
+    return out.stdout
+
+
+def test_train_cli_local():
+    out = _run_cli("repro.launch.train", "--arch", "tiny-s", "--steps", "12",
+                   "--batch", "4", "--seq", "32")
+    assert "params" in out and "loss" in out
+
+
+def test_serve_cli():
+    out = _run_cli("repro.launch.serve", "--arch", "tiny-s", "--requests", "3",
+                   "--max-new", "4")
+    assert "served 3/3" in out

@@ -1,0 +1,71 @@
+"""Cost-model identities (Eqs. 1–4, 13) and batch-plan invariants."""
+import numpy as np
+import pytest
+
+from repro.core.problem import Assignment, CostModel, State, group_into_batches
+
+
+@pytest.fixture()
+def cm(agnews, pool):
+    return CostModel(pool, agnews)
+
+
+def test_sys_cost_matches_eq2(cm, agnews, pool):
+    for k, m in enumerate(pool):
+        assert cm.sys_cost(k) == pytest.approx(agnews.sys_tokens * m.c_in / 1e6)
+
+
+def test_query_cost_matches_eq2(cm, agnews, pool):
+    idx = agnews.subset_indices("test")[:7]
+    for k, m in enumerate(pool):
+        want = agnews.in_tokens[idx] * m.c_in / 1e6 + agnews.out_tokens[idx] * m.c_out / 1e6
+        np.testing.assert_allclose(cm.query_cost(k, idx), want)
+
+
+def test_state_cost_amortizes_sys_prompt(cm, agnews):
+    idx = agnews.subset_indices("test")[:5]
+    c1 = cm.state_cost(0, 1, idx)
+    c8 = cm.state_cost(0, 8, idx)
+    np.testing.assert_allclose(c1 - c8, cm.sys_cost(0) * (1 - 1 / 8))
+
+
+def test_exact_total_uses_ceiling(cm, agnews):
+    # 10 queries at b=4 => ceil(10/4)=3 invocations
+    idx = agnews.subset_indices("test")[:10]
+    a = Assignment(query_idx=idx, model=np.zeros(10, int), batch=np.full(10, 4))
+    want = 3 * cm.sys_cost(0) + cm.query_cost(0, idx).sum()
+    assert cm.exact_total(a) == pytest.approx(want)
+
+
+def test_amortized_vs_exact_equal_on_full_batches(cm, agnews):
+    idx = agnews.subset_indices("test")[:16]
+    a = Assignment(query_idx=idx, model=np.zeros(16, int), batch=np.full(16, 4))
+    assert cm.amortized_total(a) == pytest.approx(cm.exact_total(a))
+
+
+def test_amortized_lower_bounds_exact_on_partial_batches(cm, agnews):
+    idx = agnews.subset_indices("test")[:10]
+    a = Assignment(query_idx=idx, model=np.zeros(10, int), batch=np.full(10, 4))
+    assert cm.amortized_total(a) <= cm.exact_total(a) + 1e-12
+
+
+def test_group_into_batches_partitions_queries(cm, agnews):
+    idx = agnews.subset_indices("test")[:33]
+    rng = np.random.default_rng(0)
+    a = Assignment(query_idx=idx, model=rng.integers(0, 3, 33),
+                   batch=np.array([1, 2, 4])[rng.integers(0, 3, 33)])
+    plan = group_into_batches(a)
+    seen = np.concatenate([m for _, m in plan])
+    assert sorted(seen.tolist()) == sorted(idx.tolist())
+    for st, members in plan:
+        assert 1 <= len(members) <= st.batch
+
+
+def test_single_model_cost_reference(cm, agnews):
+    idx = agnews.subset_indices("test")
+    c_b1 = cm.single_model_cost(0, idx, 1)
+    c_b8 = cm.single_model_cost(0, idx, 8)
+    assert c_b8 < c_b1  # amortization always saves money
+    saved = c_b1 - c_b8
+    max_save = cm.sys_cost(0) * len(idx) * (1 - 1 / 8)
+    assert saved <= max_save + 1e-9

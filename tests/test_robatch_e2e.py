@@ -1,0 +1,129 @@
+"""End-to-end Robatch behaviour + baselines + ablations on the simulated pool."""
+import os
+import numpy as np
+import pytest
+
+from repro.core import CostModel, Robatch, execute, execute_plan
+from repro.core.baselines import (
+    batch_only, batcher_assignment_plan, frugalgpt_execute, obp_plan,
+    router_only, routellm_assignment, single_model_assignment,
+    vanilla_router_assignment,
+)
+from repro.core.scheduler import greedy_schedule
+
+
+@pytest.fixture(scope="module")
+def budgets(fitted_rb, agnews):
+    cm = fitted_rb.cost_model
+    test = agnews.subset_indices("test")
+    cheap = cm.single_model_cost(0, test, 1)
+    exp = cm.single_model_cost(2, test, 1)
+    return cheap, (cheap + exp) / 2, exp
+
+
+def test_fit_produces_calibrations(fitted_rb, pool):
+    assert len(fitted_rb.calibrations) == len(pool)
+    for cal in fitted_rb.calibrations:
+        assert cal.b_effect >= 1
+        assert cal.u_mean_at[1] > 0.3
+
+
+def test_resilience_ordering(fitted_rb):
+    """Larger models tolerate larger batches (Fig. 3) — b_effect ordering."""
+    effs = [c.b_effect for c in fitted_rb.calibrations]
+    assert effs[0] <= effs[-1]
+
+
+def test_accuracy_increases_with_budget(fitted_rb, agnews, pool, budgets):
+    test = agnews.subset_indices("test")
+    accs = []
+    for b in budgets:
+        res = fitted_rb.schedule(test, b)
+        accs.append(execute(pool, agnews, res.assignment).accuracy)
+    assert accs[0] <= accs[1] + 0.02 and accs[1] <= accs[2] + 0.02
+    assert accs[2] > accs[0]
+
+
+def test_robatch_beats_single_model_frontier(fitted_rb, agnews, pool, budgets):
+    """At the mid budget Robatch should dominate serving everything on the
+    mid model at b=1 (the paper's headline claim, qualitatively)."""
+    test = agnews.subset_indices("test")
+    cm = fitted_rb.cost_model
+    mid_cost = cm.single_model_cost(1, test, 1)
+    res = fitted_rb.schedule(test, mid_cost)
+    ours = execute(pool, agnews, res.assignment)
+    mid = execute(pool, agnews, single_model_assignment(test, 1, 1))
+    assert ours.exact_cost <= mid.exact_cost * 1.05
+    assert ours.accuracy >= mid.accuracy - 0.01
+
+
+def test_schedule_timed_breakdown(fitted_rb, agnews, budgets):
+    test = agnews.subset_indices("test")
+    res, t = fitted_rb.schedule_timed(test, budgets[1])
+    assert set(t) == {"router", "proxy", "greedy", "total"}
+    assert t["total"] >= t["greedy"]
+
+
+def test_router_only_ablation(fitted_rb, agnews, pool, budgets):
+    ro = router_only(fitted_rb)
+    test = agnews.subset_indices("test")
+    res = ro.schedule(test, budgets[1])
+    assert np.all(res.assignment.batch == 1)
+    out = execute(pool, agnews, res.assignment)
+    # full Robatch at the same budget is at least as good (joint optimization)
+    full = execute(pool, agnews, fitted_rb.schedule(test, budgets[1]).assignment)
+    assert full.accuracy >= out.accuracy - 0.03
+
+
+def test_batch_only_ablation(fitted_rb, agnews, pool, budgets):
+    bo = batch_only(fitted_rb, k=0)
+    test = agnews.subset_indices("test")
+    res = bo.schedule(test, budgets[0])
+    assert np.all(res.assignment.model == 0)
+    out = execute(pool, agnews, res.assignment)
+    assert 0.0 <= out.accuracy <= 1.0
+
+
+def test_routellm_baseline(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    a = routellm_assignment(fitted_rb, test, tau=0.6, b=8)
+    assert set(np.unique(a.model)) <= {0, len(pool) - 1}
+    out = execute(pool, agnews, a)
+    assert 0.3 <= out.accuracy <= 1.0
+
+
+def test_frugalgpt_cascade_bills_every_level(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:64]
+    out_low = frugalgpt_execute(fitted_rb, test, tau=0.05, b=8)
+    out_high = frugalgpt_execute(fitted_rb, test, tau=0.9, b=8)
+    # more escalation => strictly more cost
+    assert out_high.exact_cost > out_low.exact_cost * 0.99
+
+
+def test_batcher_sim_div_plans_cover_queries(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")[:128]
+    for mode in ["sim", "div"]:
+        a, plan = batcher_assignment_plan(fitted_rb, test, tau=0.5, b=8, mode=mode)
+        seen = np.concatenate([m for _, m in plan])
+        assert sorted(seen.tolist()) == sorted(test.tolist())
+        out = execute_plan(pool, agnews, plan, test)
+        assert 0.3 <= out.accuracy <= 1.0
+
+
+def test_obp_respects_context_window(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")[:128]
+    a, plan = obp_plan(fitted_rb, test, tau=0.5, target_b=8)
+    for st, members in plan:
+        total = agnews.sys_tokens + agnews.in_tokens[members].sum()
+        assert total <= pool[st.model].context_len
+
+
+def test_profile_save_load_roundtrip(fitted_rb, agnews, pool, tmp_path, budgets):
+    p = str(tmp_path / "profile.pkl")
+    fitted_rb.save_profile(p)
+    rb2 = Robatch(pool, agnews, router_kind=fitted_rb.router_kind).load_profile(p)
+    test = agnews.subset_indices("test")
+    r1 = fitted_rb.schedule(test, budgets[1])
+    r2 = rb2.schedule(test, budgets[1])
+    np.testing.assert_array_equal(r1.assignment.model, r2.assignment.model)
+    np.testing.assert_array_equal(r1.assignment.batch, r2.assignment.batch)

@@ -1,0 +1,82 @@
+import json, sys
+sys.path.insert(0, "src")
+from repro.analysis.report import dryrun_tables, roofline_table
+
+PATH = "results/dryrun_final.json"
+rows = json.load(open(PATH))
+ok16 = [r for r in rows if r["status"]=="ok" and r["mesh"]=="16x16"]
+ok512 = [r for r in rows if r["status"]=="ok" and r["mesh"]=="2x16x16"]
+
+header = f"""# EXPERIMENTS
+
+All dry-run artifacts: `results/dryrun_final.json` (post-§Perf code; the
+pre-optimization baseline table is preserved in `results/dryrun.json`).
+Regenerate: `PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both --out results/dryrun_final.json`.
+Benchmarks: `PYTHONPATH=src python -m benchmarks.run` (per-figure JSON under `results/bench/`).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+Meshes: single pod 16×16 = 256 chips ("data","model"); multi-pod 2×16×16 = 512
+chips ("pod","data","model"; pods are DP replicas).
+
+## §Reproduction — paper-claims validation (faithful baseline)
+
+The simulated pool is calibrated to §2's empirical studies; the *algorithm* under
+test is the real Robatch implementation.  Claims checked (see benchmarks):
+
+| Paper claim | Our measured result | Artifact |
+|---|---|---|
+| Routing beats single models on cost-accuracy (Fig. 2) | MLP/KNN router sweeps trace a frontier above the single-model points on AGNews/GSM8K | `results/bench/fig2_routing_impact.json` |
+| Accuracy stable to a knee then collapses; small models collapse earlier (Fig. 3: 4B knee b≈16 AGNews / b≈8 GSM8K) | 4B accuracy halves at b=24 (AGNews) / b=8 (GSM8K); 14B/32B resilient ≥2× longer | `fig34_batching_impact.json` |
+| Sys-prompt cost amortizes 1/b (Fig. 4: share 59.5%→8.4% AGNews, 90.1%→53.2% GSM8K) | measured shares 0.55→0.07 (AGNews b=1→16), 0.62→0.14 (GSM8K b=1→8).  GSM8K's b=1 share is below the paper's 90.1% because our billing uses a 1:4 output:input price ratio with difficulty-inflated CoT outputs; the amortization *shape* (÷8, ÷4.4) matches | same |
+| RCU is V-shaped; ternary search finds b_effect cheaply (Fig. 5) | V-shape in all 6 tasks × 3 models; ~34 search probes vs ~100–135 exhaustive grid points | `fig5_rcu.json` |
+| Robatch dominates adapted baselines' Pareto front (Fig. 7); gaps narrower on Gemma3/easy tasks | budget-matched Robatch non-dominated in 38/48 (79%) of (family, task, level) cells (71/96 counting both budget tags); losses concentrate exactly where the paper reports narrow gaps (gemma3 + easy classification at high budget) | `fig7_overall.json` |
+| Joint > Router-Only and > Batch-Only, biggest at low/mid budget (Fig. 8) | low-budget accuracy: GSM8K 0.647 vs 0.564 (Router-Only) vs 0.610 (Batch-Only-mid); AGNews 0.813/0.783/0.797; curves converge at high budget as in the paper | `fig8_ablation.json` |
+| Robust to coreset / embeddings / fit choice: differences ≤2% (Table 3, Fig. 9/10); KNN sensitive to k, k=1 clearly inferior | per-task mid-budget spreads: coreset method ≤0.018, coreset size ≤0.021, embeddings ≤0.029, scaling fit ≤0.040, MLP width ≤0.027; KNN k-sweep spread ≤0.081 with k=1 worst — matching the paper's sensitivity ordering | `table3_sensitivity.json` |
+| Greedy scheduling dominates latency (76–86%), scales ~linearly (Fig. 11/12) | greedy 90–96% of routing-stage time; ≈linear growth 1k→16k queries; beyond-paper vectorized scheduler 4.6× faster at 16k queries (2.61→0.57 s) at parity 0.97–1.01 | `fig11/12 json` |
+| NP-hardness reduction (Thm. 3.2) | max-coverage optimum ≡ constructed-instance optimum (brute-force equality, hypothesis-property-tested) | `tests/test_np_hardness.py` |
+
+## §Dry-run — multi-pod compile results (post-§Perf code)
+
+Every (architecture × applicable shape) cell lowered + compiled on both
+production meshes: **{len(ok16)}/32 ok on 16×16 and {len(ok512)}/32 ok on 2×16×16 (8
+`long_500k` cells per mesh are SKIP(full-attention) by assignment rule; 0 errors).**
+`train_4k` lowers the full train step (fwd+bwd+AdamW update, grad accumulation,
+ZeRO-1/FSDP shardings); `prefill_32k` the batched prefill with cache emission;
+`decode_*` one token against a seq_len KV cache.
+
+Memory columns: `tpu-est` removes XLA-**CPU** lowering artifacts that a TPU
+build does not materialize (whole-stack f32 upcasts of bf16 dot operands —
+MXU consumes bf16 natively — and loop-hoisted whole-stack FSDP all-gathers,
+which TPU's scheduler keeps per-layer); `raw-cpu` is the uncorrected
+memory_analysis of this CPU dry-run.  Known marginal cell: nemotron-4-340b
+train_4k on a single pod is at the HBM edge even in theory (fp32 gradient
+accumulation + moments for 340B on 256 × 16 GB chips); the multi-pod mesh
+halves per-chip state and is the intended deployment for 340B training.
+
+"""
+tables = dryrun_tables(PATH)
+
+roof = f"""
+
+## §Roofline — per (arch × shape), single-pod 16×16 (post-§Perf code)
+
+Terms (seconds/step, per chip): compute = HLO dot FLOPs / 197 TF/s;
+memory = analytic HBM traffic / 819 GB/s (XLA-CPU 'bytes accessed' counts
+unfused intermediates and is unusable; the analytic model's formulas are in
+`repro/analysis/roofline.py` with constants documented inline); collective =
+parsed per-device collective payload bytes / 50 GB/s, with the bf16-basis
+value in parentheses (XLA-CPU upcasts bf16 payloads to f32; TPU moves bf16).
+FLOPs and collective bytes are extracted from the optimized HLO with
+while-loop trip-count multiplication (XLA's cost model counts loop bodies
+once — verified).  `useful ratio` = MODEL_FLOPS / HLO FLOPs (6·N·D train,
+2·N·D serve; N = active params for MoE) — values < 1 expose
+remat/causal-waste/dispatch overhead; slightly > 1 means the 6ND convention
+overcounts (GQA).  Decode/long cells are latency cells: per-step FLOPs are
+tiny and the memory term (KV/state streaming) is the natural floor.
+
+{roofline_table(PATH)}
+
+"""
+perf = open("tools/perf_section.md").read()
+open("EXPERIMENTS.md","w").write(header + tables + roof + perf)
+print("EXPERIMENTS.md rebuilt")
