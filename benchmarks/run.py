@@ -11,8 +11,8 @@ import traceback
 
 from benchmarks import (
     fig2_routing_impact, fig34_batching_impact, fig5_rcu, fig7_overall,
-    fig8_ablation, fig11_scalability, fig12_breakdown, roofline_table,
-    table3_sensitivity,
+    fig8_ablation, fig11_scalability, fig12_breakdown, online_throughput,
+    roofline_table, table3_sensitivity,
 )
 
 MODULES = [
@@ -24,6 +24,7 @@ MODULES = [
     ("table3_sensitivity", table3_sensitivity),
     ("fig11_scalability", fig11_scalability),
     ("fig12_breakdown", fig12_breakdown),
+    ("online_throughput", online_throughput),
     ("roofline_table", roofline_table),
 ]
 

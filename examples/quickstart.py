@@ -3,22 +3,33 @@
     PYTHONPATH=src python examples/quickstart.py [task] [family]
 
 Fits the modeling stage (router + coreset + batch-size calibration), then
-schedules the test workload at three budgets and executes the plan.
+schedules the test workload at three budgets and executes the plan.  The
+``--n-train/--n-val/--n-test/--coreset`` flags shrink the instance for smoke
+runs (tools/smoke.sh).
 """
-import sys
-
-import numpy as np
+import argparse
 
 from repro.core import Robatch, execute
 from repro.core.baselines import single_model_assignment
 from repro.data import make_simulated_pool, make_workload
 
 
-def main(task: str = "agnews", family: str = "qwen3"):
-    print(f"== Robatch quickstart: {task} / {family} ==")
-    wl = make_workload(task)
-    pool = make_simulated_pool(family)
-    rb = Robatch(pool, wl).fit()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("task", nargs="?", default="agnews")
+    ap.add_argument("family", nargs="?", default="qwen3")
+    ap.add_argument("--n-train", type=int, default=2048)
+    ap.add_argument("--n-val", type=int, default=512)
+    ap.add_argument("--n-test", type=int, default=1024)
+    ap.add_argument("--coreset", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    print(f"== Robatch quickstart: {args.task} / {args.family} ==")
+    wl = make_workload(args.task, n_train=args.n_train, n_val=args.n_val,
+                       n_test=args.n_test, seed=args.seed)
+    pool = make_simulated_pool(args.family)
+    rb = Robatch(pool, wl, coreset_size=min(args.coreset, args.n_train // 2)).fit()
 
     print("\nModeling stage (per model): b_max, ternary-searched b_effect, ρ(b_eff):")
     for cal, m in zip(rb.calibrations, pool):
@@ -48,4 +59,4 @@ def main(task: str = "agnews", family: str = "qwen3"):
 
 
 if __name__ == "__main__":
-    main(*sys.argv[1:3])
+    main()

@@ -9,76 +9,31 @@ This is the full-stack counterpart of the paper's API experiments:
      decode) behind the PoolMember protocol with API-style per-token prices;
   3. runs the full Robatch pipeline — offline b=1 labeling, router training,
      coreset profiling with *real* batched invocations, ternary-searched
-     b_effect, greedy scheduling — and executes the plan on the live pool.
+     b_effect, greedy scheduling — and executes the plan on the live pool;
+  4. optionally (--online-seconds N) streams a Poisson arrival workload
+     through the online serving layer: windowed scheduling under a rolling
+     budget, concurrent dispatch across the three live engines, response
+     caching, circuit breaking.
 
-Accuracy-vs-batch-size degradation here is an emergent property of the
-trained models, not a simulator assumption.
+The pool/workload construction lives in :mod:`repro.serving.tinypool` (shared
+with benchmarks/online_throughput.py).  Accuracy-vs-batch-size degradation
+here is an emergent property of the trained models, not a simulator
+assumption.
 
-    PYTHONPATH=src python examples/serve_pool.py [--steps 400] [--n-train 96]
+    PYTHONPATH=src python examples/serve_pool.py [--steps 400] [--n-train 96] \
+        [--online-seconds 30]
 """
 import argparse
 import functools
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 print = functools.partial(print, flush=True)  # noqa: A001 — visible progress
 
-from repro.config import ShardingConfig, get_arch
 from repro.core import Robatch, execute
-from repro.data.tokenizer import ByteTokenizer
-from repro.data.workload import BenchmarkSpec, Workload
-from repro.models.transformer import Model
-from repro.serving.batcher import BatchPromptFormatter
-from repro.serving.engine import ServingEngine
-from repro.serving.pool import ServedPoolMember, TextTask
-from repro.training.optimizer import adamw
+from repro.serving.tinypool import build_tiny_pool
 
-SYSTEM_PROMPT = ("You are a calculator. For each question output the last digit "
-                 "of the sum, answers separated by ';'.")
-
-
-# ---------------------------------------------------------------------------
-# task
-# ---------------------------------------------------------------------------
-
-def gen_query(rng) -> tuple[str, str, float]:
-    """Two-term addition with difficulty tiers by operand size.
-    Answer = last digit of the sum (single token)."""
-    tier = int(rng.integers(0, 3))               # 0 easy … 2 hard
-    hi = (10, 50, 100)[tier]
-    a_, b_ = int(rng.integers(0, hi)), int(rng.integers(0, hi))
-    q = f"{a_}+{b_}"
-    ans = str((a_ + b_) % 10)
-    return q, ans, tier / 2.0
-
-
-def format_training_example(rng, fmt: BatchPromptFormatter, max_b: int = 6):
-    b = int(rng.integers(1, max_b + 1))
-    qas = [gen_query(rng) for _ in range(b)]
-    prompt = fmt.format([q for q, _, _ in qas])
-    answer = ";".join(a for _, a, _ in qas)
-    tok = fmt.tokenizer
-    full = prompt + tok.encode(answer, add_bos=False, add_eos=True)
-    return full
-
-
-def make_batches(rng, fmt, vocab, batch_size, seq_len, n_steps):
-    tok = fmt.tokenizer
-    for _ in range(n_steps):
-        seqs = [format_training_example(rng, fmt) for _ in range(batch_size)]
-        tokens, lengths = tok.pad_batch(seqs, seq_len + 1)
-        labels = tokens[:, 1:].copy()
-        labels[labels == tok.pad] = -100
-        yield {"tokens": jnp.asarray(tokens[:, :-1]),
-               "labels": jnp.asarray(np.where(labels == -100, -100, labels))}
-
-
-# ---------------------------------------------------------------------------
-# main
-# ---------------------------------------------------------------------------
 
 def main():
     ap = argparse.ArgumentParser()
@@ -86,78 +41,18 @@ def main():
     ap.add_argument("--n-train", type=int, default=48)
     ap.add_argument("--n-test", type=int, default=48)
     ap.add_argument("--coreset", type=int, default=16)
+    ap.add_argument("--online-seconds", type=float, default=0.0,
+                    help="stream the test set through the online layer this long")
+    ap.add_argument("--online-qps", type=float, default=8.0)
+    ap.add_argument("--online-window", type=float, default=0.5)
+    ap.add_argument("--budget-x", type=float, default=3.0)
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    fmt = BatchPromptFormatter(SYSTEM_PROMPT)
-    tok = fmt.tokenizer
 
-    # ---- 1. train the pool -------------------------------------------------
-    engines = {}
-    for name, steps_scale in [("tiny-s", 1.0), ("tiny-m", 1.0), ("tiny-l", 1.0)]:
-        cfg = get_arch(name)
-        model = Model(cfg, ShardingConfig(remat="none"))
-        params = model.init(jax.random.PRNGKey(hash(name) % 2**31))
-        opt = adamw(3e-3, grad_clip=1.0)
-        state = opt.init(params)
-
-        @jax.jit
-        def step(params, state, batch):
-            loss, grads = jax.value_and_grad(model.loss)(params, batch)
-            params, state = opt.update(grads, state, params)
-            return params, state, loss
-
-        t0 = time.time()
-        losses = []
-        print(f"training {name} ({model.param_count() / 1e6:.2f}M params)...")
-        for batch in make_batches(rng, fmt, cfg.vocab_size, 8, 160,
-                                  int(args.steps * steps_scale)):
-            params, state, loss = step(params, state, batch)
-            losses.append(float(loss))   # blocks: real per-step time on CPU
-        print(f"trained {name}: loss {losses[0]:.2f} -> {np.mean(losses[-20:]):.2f} "
-              f"({time.time() - t0:.0f}s, {len(losses)} steps)")
-        engines[name] = ServingEngine(model, params, max_slots=4, max_len=512)
-
-    # ---- 2. build the workload + text task ---------------------------------
-    n = args.n_train + args.n_test
-    queries, answers, difficulty = [], [], []
-    for _ in range(n):
-        q, a, d = gen_query(rng)
-        queries.append(q)
-        answers.append(a)
-        difficulty.append(d)
-    difficulty = np.array(difficulty, np.float32)
-    # embeddings: simple text features (the real system would use a sentence
-    # embedding model; tiny pool queries are fully described by these)
-    feats = np.stack([
-        [len(q), sum(int(c) for c in q if c.isdigit()) / 20.0,
-         max(len(t) for t in q.split("+")), min(len(t) for t in q.split("+"))]
-        for q in queries
-    ]).astype(np.float32)
-    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-6)
-    emb = np.concatenate([feats, rng.normal(0, 0.1, (n, 4)).astype(np.float32)], axis=1)
-    emb /= np.linalg.norm(emb, axis=1, keepdims=True) + 1e-8
-
-    in_tokens = np.array([fmt.query_tokens(q) for q in queries], np.int32)
-    spec = BenchmarkSpec("tiny-add", "reasoning", 10, fmt.sys_tokens,
-                         (float(in_tokens.mean()), 0.2), (2, 0.1), (2.0, 2.0), 3, 5.0)
-    wl = Workload(
-        name="tiny-add", spec=spec, embeddings=emb, difficulty=difficulty,
-        topic=np.zeros(n, np.int32), in_tokens=in_tokens,
-        out_tokens=np.full(n, 2, np.int32), sys_tokens=fmt.sys_tokens,
-        split={"train": np.arange(args.n_train),
-               "val": np.arange(0),
-               "test": np.arange(args.n_train, n)},
-    )
-    task = TextTask(queries=queries, answers=answers)
-    pool = [
-        ServedPoolMember("tiny-s", engines["tiny-s"], fmt, task, c_in=0.1, c_out=0.4,
-                         context_len=512),
-        ServedPoolMember("tiny-m", engines["tiny-m"], fmt, task, c_in=0.3, c_out=1.2,
-                         context_len=512),
-        ServedPoolMember("tiny-l", engines["tiny-l"], fmt, task, c_in=0.8, c_out=3.2,
-                         context_len=512),
-    ]
+    # ---- 1–2. train + serve the pool ---------------------------------------
+    wl, pool, fmt = build_tiny_pool(rng, steps=args.steps,
+                                    n_train=args.n_train, n_test=args.n_test)
 
     # ---- 3. Robatch over the live pool --------------------------------------
     print("\nfitting Robatch on the live pool (real batched invocations)...")
@@ -184,6 +79,27 @@ def main():
             states[(pool[k].name, int(b))] = states.get((pool[k].name, int(b)), 0) + 1
         print(f"  budget ${budget:.5f}: acc={out.accuracy:.3f} "
               f"spent=${out.exact_cost:.5f} states={states}")
+
+    # ---- 4. online streaming over the live pool -----------------------------
+    if args.online_seconds > 0:
+        from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
+                                          poisson_arrivals)
+
+        base = float(cm.state_cost(0, rb.calibrations[0].b_effect, test).mean())
+        rate = args.online_qps * base * args.budget_x
+        srv = OnlineRobatchServer(rb, pool, wl, OnlineConfig(
+            budget_per_s=rate, window_s=args.online_window))
+        arrivals = poisson_arrivals(rng, args.online_qps, args.online_seconds,
+                                    test, repeat_frac=0.25)
+        print(f"\nonline: streaming {len(arrivals)} arrivals at "
+              f"{args.online_qps} qps through the live engines "
+              f"(window {args.online_window}s, budget ${rate:.6f}/s)...")
+        t0 = time.time()
+        stats = srv.run(arrivals)
+        srv.close()
+        print(stats.summary())
+        print(f"(wall clock {time.time() - t0:.0f}s; latencies above are "
+              f"virtual-stream seconds incl. measured engine time)")
 
 
 if __name__ == "__main__":

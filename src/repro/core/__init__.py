@@ -9,5 +9,8 @@ from repro.core.scaling import (
     calibrate_model, fit_scaling, ternary_search_rcu,
 )
 from repro.core.pareto import CandidateSpace, build_candidate_space, build_frontiers, pareto_frontier
-from repro.core.scheduler import ScheduleResult, brute_force_schedule, greedy_schedule
+from repro.core.scheduler import (
+    ScheduleResult, brute_force_schedule, greedy_schedule, greedy_schedule_window,
+    restrict_space,
+)
 from repro.core.robatch import ExecutionOutcome, Robatch, collect_router_labels, execute, execute_plan

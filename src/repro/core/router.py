@@ -113,7 +113,8 @@ class KNNRouter:
     def predict(self, embeddings: np.ndarray) -> np.ndarray:
         q = np.asarray(embeddings, dtype=np.float32)
         sims = q @ self.train_embeddings.T            # cosine (normalized)
-        nn = np.argpartition(-sims, self.k - 1, axis=1)[:, : self.k]
+        k = min(self.k, sims.shape[1])                # tiny train sets: k ≤ n
+        nn = np.argpartition(-sims, k - 1, axis=1)[:, :k]
         return self.train_labels[nn].mean(axis=1).astype(np.float64)
 
     @property

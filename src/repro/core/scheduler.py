@@ -1,9 +1,13 @@
 """Greedy budget-constrained scheduling — Algorithm 1 (§5).
 
-Two implementations:
-  * ``greedy_schedule``      — faithful Alg. 1: heap keyed by Δ (Eq. 14).
-  * ``brute_force_schedule`` — exact enumeration for micro instances; used by
-    the property tests to bound greedy sub-optimality and to validate the
+Implementations:
+  * ``greedy_schedule``          — faithful Alg. 1: heap keyed by Δ (Eq. 14).
+  * ``greedy_schedule_window``   — windowed/online entry point: restricts the
+    candidate space to the surviving models (circuit breaking) and re-anchors
+    the initial state, then runs Alg. 1 over one admission window against the
+    rolling-budget slice handed down by :mod:`repro.serving.online`.
+  * ``brute_force_schedule``     — exact enumeration for micro instances; used
+    by the property tests to bound greedy sub-optimality and to validate the
     NP-hardness reduction (Thm. 3.2).
 """
 from __future__ import annotations
@@ -18,6 +22,7 @@ from repro.core.pareto import CandidateSpace, build_frontiers
 from repro.core.problem import Assignment
 
 __all__ = ["ScheduleResult", "greedy_schedule", "greedy_schedule_vectorized",
+           "greedy_schedule_window", "restrict_space", "take_rows",
            "brute_force_schedule"]
 
 
@@ -166,6 +171,56 @@ def greedy_schedule_vectorized(
         est_utility=est_u, amortized_cost=amort,
         spent_budget=budget - remaining if not infeasible else amort,
         n_upgrades=upgrades, infeasible=bool(infeasible))
+
+
+def restrict_space(space: CandidateSpace, allowed_models: set[int]) -> CandidateSpace:
+    """Project a candidate space onto the states of ``allowed_models``.
+
+    This is how circuit breaking reaches the scheduler: an open breaker
+    removes every (m_k, b) state of the tripped model from the decision space,
+    so rescheduled queries can only land on surviving models.  The initial
+    state is re-anchored to the cheapest surviving column (total cost over the
+    window) — if m_1 itself tripped, the upgrade chain now starts at the
+    cheapest surviving model's state, preserving Alg. 1's anchor invariant.
+    """
+    keep = [j for j, s in enumerate(space.states) if s.model in allowed_models]
+    if not keep:
+        raise ValueError("restrict_space: no states survive the model mask")
+    cost = space.cost[:, keep]
+    util = space.util[:, keep]
+    if space.states[space.initial_state].model in allowed_models:
+        initial = keep.index(space.initial_state)
+    else:
+        initial = int(np.argmin(cost.sum(axis=0)))
+    return CandidateSpace(states=[space.states[j] for j in keep],
+                          cost=cost, util=util, initial_state=initial)
+
+
+def take_rows(space: CandidateSpace, rows: np.ndarray) -> CandidateSpace:
+    """Row-subset of a candidate space (admission control keeps a prefix of
+    the window; the deferred suffix is rescheduled next tick)."""
+    rows = np.asarray(rows)
+    return CandidateSpace(states=space.states, cost=space.cost[rows],
+                          util=space.util[rows], initial_state=space.initial_state)
+
+
+def greedy_schedule_window(
+    space: CandidateSpace,
+    query_idx: np.ndarray,
+    budget: float,
+    allowed_models: set[int] | None = None,
+) -> ScheduleResult:
+    """One online scheduling round: Alg. 1 over a single admission window.
+
+    The offline algorithm sees the whole test set and the whole budget; the
+    online server calls this once per deadline window with (a) the queries
+    that arrived inside the window and (b) the budget slice currently in the
+    token bucket.  The frontier machinery is reused unchanged — only the
+    candidate space is restricted to surviving models first.
+    """
+    if allowed_models is not None:
+        space = restrict_space(space, set(allowed_models))
+    return greedy_schedule(space, query_idx, budget)
 
 
 def brute_force_schedule(space: CandidateSpace, query_idx: np.ndarray, budget: float) -> ScheduleResult:

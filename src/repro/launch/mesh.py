@@ -11,15 +11,25 @@ pods.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax ≥ 0.5 takes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are Auto implicitly
+    AxisType = None
 
 from repro.config import MeshConfig
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -29,5 +39,4 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 
 def make_mesh_from_config(cfg: MeshConfig):
-    return jax.make_mesh(tuple(cfg.shape), tuple(cfg.axes),
-                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+    return _make_mesh(tuple(cfg.shape), tuple(cfg.axes))

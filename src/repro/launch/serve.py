@@ -1,14 +1,27 @@
-"""Serving launcher: bring up a continuous-batching engine for an architecture
-and serve a batched-prompt workload (Robatch's data plane as a CLI).
+"""Serving launcher: RoBatch's data plane as a CLI, in two modes.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tiny-m --requests 12
+``engine`` — bring up one continuous-batching engine for an architecture and
+serve a batched-prompt workload (the original single-model path)::
+
+    PYTHONPATH=src python -m repro.launch.serve engine --arch tiny-m --requests 12
+
+``online`` — the full online serving layer: fit RoBatch on a simulated pool,
+then stream a Poisson arrival workload through windowed scheduling, a rolling
+budget, the response cache and the circuit breakers::
+
+    PYTHONPATH=src python -m repro.launch.serve online --task agnews --qps 40 \
+        --duration 20 --window 0.25 --budget-x 3.0
+
+Legacy flag-only invocations (no subcommand) default to ``engine`` mode, so
+existing scripts keep working.
 """
 import argparse
+import sys
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def engine_main(argv):
+    ap = argparse.ArgumentParser(prog="serve engine")
     ap.add_argument("--arch", default="tiny-s")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-prompt", type=int, default=0,
@@ -18,7 +31,7 @@ def main():
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--reduced", action="store_true",
                     help="serve the reduced (smoke) config of a big arch")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     import jax
     import numpy as np
@@ -58,6 +71,77 @@ def main():
     for r in reqs[:3]:
         print(f"  req{r.rid}: prompt {len(r.tokens)} toks -> "
               f"{tok.decode(r.out_tokens)[:48]!r}")
+
+
+def online_main(argv):
+    ap = argparse.ArgumentParser(prog="serve online")
+    ap.add_argument("--task", default="agnews", help="workload benchmark name")
+    ap.add_argument("--family", default="qwen3", help="simulated pool family")
+    ap.add_argument("--qps", type=float, default=40.0, help="offered load")
+    ap.add_argument("--duration", type=float, default=20.0, help="stream length (s, virtual)")
+    ap.add_argument("--window", type=float, default=0.25, help="admission window (s)")
+    ap.add_argument("--budget-x", type=float, default=3.0,
+                    help="budget rate = qps × cheapest-state cost × this factor")
+    ap.add_argument("--repeat-frac", type=float, default=0.2,
+                    help="fraction of arrivals re-asking an earlier query (cache hits)")
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--coreset", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.core import Robatch
+    from repro.data import BENCHMARKS, make_simulated_pool, make_workload
+    from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
+
+    if args.qps <= 0:
+        raise SystemExit("serve online: --qps must be positive")
+    if args.task not in BENCHMARKS:
+        raise SystemExit(f"serve online: unknown task {args.task!r}; "
+                         f"known: {sorted(BENCHMARKS)}")
+    wl = make_workload(args.task, n_train=args.n_train, n_val=128, n_test=512,
+                       seed=args.seed)
+    pool = make_simulated_pool(args.family)
+    print(f"fitting RoBatch on {args.task}/{args.family} "
+          f"({args.n_train} train, coreset {args.coreset})...")
+    rb = Robatch(pool, wl, coreset_size=args.coreset, router_kind="knn").fit()
+
+    test = wl.subset_indices("test")
+    base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
+    rate = args.qps * base * args.budget_x
+    cfg = OnlineConfig(budget_per_s=rate, window_s=args.window)
+    srv = OnlineRobatchServer(rb, pool, wl, cfg)
+    rng = np.random.default_rng(args.seed)
+    arrivals = poisson_arrivals(rng, args.qps, args.duration, test,
+                                repeat_frac=args.repeat_frac)
+    print(f"streaming {len(arrivals)} arrivals at {args.qps} qps, "
+          f"window {args.window}s, budget ${rate:.6f}/s...")
+    stats = srv.run(arrivals)
+    srv.close()
+
+    print(stats.summary())
+    by_model = {}
+    for r in srv.completed:
+        if r.model is not None and not r.cache_hit:
+            key = (pool[r.model].name, r.batch)
+            by_model[key] = by_model.get(key, 0) + 1
+    print("dispatch mix (model, batch) -> queries:")
+    for key in sorted(by_model, key=lambda t: (t[0], t[1] or 0)):
+        print(f"  {key[0]:12s} b={key[1]}: {by_model[key]}")
+    deferred = sum(w.n_deferred for w in stats.windows)
+    print(f"windows={len(stats.windows)} deferred={deferred} "
+          f"shed={sum(w.n_shed for w in stats.windows)} "
+          f"cache_entries={len(srv.cache)}")
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv and argv[0] in ("engine", "online"):
+        mode, rest = argv[0], argv[1:]
+    else:
+        mode, rest = "engine", argv     # legacy: bare flags mean engine mode
+    (online_main if mode == "online" else engine_main)(rest)
 
 
 if __name__ == "__main__":

@@ -35,6 +35,29 @@ from repro.models.layers import (
 __all__ = ["Model", "StackedBuilder"]
 
 
+@jax.custom_vjp
+def _weight_barrier(tree):
+    """Differentiable loop-invariant-hoisting fence for scanned weight groups.
+
+    ``jax.lax.optimization_barrier`` keeps the CPU backend from hoisting (and
+    materializing) an f32 copy of the whole stacked weights out of the scan
+    body, but the primitive has no differentiation rule — the fence is an
+    identity, so its gradient is the identity too.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _weight_barrier_fwd(tree):
+    return jax.lax.optimization_barrier(tree), None
+
+
+def _weight_barrier_bwd(_, ct):
+    return (ct,)
+
+
+_weight_barrier.defvjp(_weight_barrier_fwd, _weight_barrier_bwd)
+
+
 class StackedBuilder:
     """Wraps a Builder so every parameter gets a leading (n_groups,) 'layers'
     dim — the whole pattern-group stack is created as one leaf for lax.scan."""
@@ -341,7 +364,7 @@ class Model:
         pos = self._positions(B, S)
 
         def body(h, gp):
-            gp = jax.lax.optimization_barrier(gp)
+            gp = _weight_barrier(gp)
             h, _, _ = _block_full(gp["b0"], cfg, "attn", h, pos, causal=False,
                                   flags=self._flags())
             return h, None
@@ -378,7 +401,7 @@ class Model:
             # block loop-invariant hoisting of per-layer weight converts (the
             # CPU backend would otherwise materialize an f32 copy of the WHOLE
             # stacked weights; on TPU bf16 dots are native and this is free)
-            gp = jax.lax.optimization_barrier(gp)
+            gp = _weight_barrier(gp)
             aux = jnp.zeros((), jnp.float32)
             for i, kind in enumerate(self.pattern):
                 h, _, a = _block_full(gp[f"b{i}"], cfg, kind, h, pos,
@@ -463,7 +486,7 @@ class Model:
 
         if self.n_groups > 0:
             def group_body(h, gp):
-                gp = jax.lax.optimization_barrier(gp)
+                gp = _weight_barrier(gp)
                 caches = {}
                 for i, kind in enumerate(self.pattern):
                     h, c, _ = _block_full(gp[f"b{i}"], cfg, kind, h, pos, enc_out=enc_out,
@@ -504,7 +527,7 @@ class Model:
         if self.n_groups > 0:
             def group_body(h, xs):
                 gp, gc = xs
-                gp = jax.lax.optimization_barrier(gp)
+                gp = _weight_barrier(gp)
                 new_gc = {}
                 for i, kind in enumerate(self.pattern):
                     h, nc = _block_step(gp[f"b{i}"], cfg, kind, h, gc[f"b{i}"], flags=flags)

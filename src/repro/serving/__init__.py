@@ -1,4 +1,11 @@
 from repro.serving.engine import ServingEngine, Request
 from repro.serving.batcher import BatchPromptFormatter
-from repro.serving.pool import ServedPoolMember
-from repro.serving.fault import FaultTolerantInvoker, StragglerPolicy
+from repro.serving.pool import ServedPoolMember, TextTask
+from repro.serving.fault import (
+    BreakerPolicy, CircuitBreaker, CircuitState, FaultTolerantInvoker,
+    FlakyMember, StragglerPolicy,
+)
+from repro.serving.online import (
+    BudgetBucket, OnlineConfig, OnlineRequest, OnlineRobatchServer,
+    ResponseCache, ServerStats, poisson_arrivals,
+)

@@ -1,13 +1,16 @@
 """Batch prompting at the token level: pack b queries behind one shared
 system prompt, parse b answers back out (§2.2 made real).
 
-Format (byte tokenizer)::
+Wire format (byte tokenizer; full spec + billing semantics in
+docs/batch_format.md)::
 
-    <bos> SYSTEM_PROMPT \n Q1: <q1> \n Q2: <q2> ... \n A1:
+    <bos>SYSTEM_PROMPT\\nQ1:<q1>\\nQ2:<q2>...\\nQb:<qb>\\nA:
 
 The model is trained (examples/train_lm.py / serve_pool.py) to emit
-``<a1> ; <a2> ; ... <eos>``.  The formatter also *bills* the token counts so
-the cost model's C_sys / C_q split matches exactly what was served.
+``<a1>;<a2>;...;<ab><eos>`` — a single shared answer cue (``\\nA:``), with the
+separator splitting the answers back out positionally.  The formatter also
+*bills* the token counts so the cost model's C_sys / C_q split matches exactly
+what was served.
 """
 from __future__ import annotations
 

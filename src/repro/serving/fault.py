@@ -1,20 +1,28 @@
 """Fault tolerance for pool invocations: deadlines, retries, straggler
-re-dispatch, health tracking.
+re-dispatch, health tracking, circuit breaking, chaos injection.
 
 At 1000+ node scale, a routing scheduler's batches land on many serving
-replicas; slow or dead replicas must not stall the workload.  The invoker
-wraps any pool member and implements:
+replicas; slow or dead replicas must not stall the workload.  Two layers:
+
+``FaultTolerantInvoker`` wraps any pool member and implements:
 
   * deadline-based straggler detection (p50-adaptive or fixed),
   * bounded retries with a backup replica (speculative re-dispatch),
   * consecutive-failure health ejection with cool-down re-admission,
   * an invocation journal so a crashed scheduler can re-enqueue in-flight
     batches on recovery (no query silently dropped).
+
+``CircuitBreaker`` is the online-serving counterpart (closed → open →
+half-open): an open breaker removes its model from the scheduler's candidate
+space entirely (see :func:`repro.core.scheduler.restrict_space`), instead of
+retrying per invocation.  ``FlakyMember`` injects failures deterministically
+so tests and benchmarks can drive the trip/reroute/recovery paths.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Callable, Optional
 
 import numpy as np
@@ -110,3 +118,110 @@ class FaultTolerantInvoker:
     def inflight(self) -> list[dict]:
         """Batches to re-enqueue after a scheduler crash (recovery path)."""
         return [e for e in self.journal if e["state"] == "inflight"]
+
+
+# ---------------------------------------------------------------------------
+# circuit breaking (online serving)
+# ---------------------------------------------------------------------------
+
+class CircuitState(str, Enum):
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+
+@dataclass
+class BreakerPolicy:
+    failure_threshold: int = 3        # consecutive failures before tripping
+    recovery_time_s: float = 30.0     # open → half-open probe delay
+
+
+class CircuitBreaker:
+    """Per-model breaker: closed → (failures ≥ threshold) → open →
+    (recovery time elapsed) → half-open → one probe decides.
+
+    Unlike the invoker's per-call retry, the breaker acts at the *scheduling*
+    level: while open, the model is absent from the candidate space and every
+    query that would have landed on it is rescheduled onto survivors.  While
+    half-open, the online server sends exactly one probe group per window
+    (probe failures don't burn the queries' reroute budget).  The clock is
+    injectable so the online server's virtual time drives recovery.
+    """
+
+    def __init__(self, policy: Optional[BreakerPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy or BreakerPolicy()
+        self.clock = clock
+        self.state = CircuitState.CLOSED
+        self.failure_count = 0
+        self.last_failure_at: Optional[float] = None
+        self.n_trips = 0
+
+    def allow_request(self) -> bool:
+        if self.state == CircuitState.CLOSED:
+            return True
+        if self.state == CircuitState.OPEN:
+            if (self.last_failure_at is not None
+                    and self.clock() - self.last_failure_at >= self.policy.recovery_time_s):
+                self.state = CircuitState.HALF_OPEN
+                return True
+            return False
+        return True                    # HALF_OPEN: allow the probe
+
+    def record_success(self) -> None:
+        self.failure_count = 0
+        self.state = CircuitState.CLOSED
+        self.last_failure_at = None
+
+    def record_failure(self) -> None:
+        self.failure_count += 1
+        self.last_failure_at = self.clock()
+        if self.state == CircuitState.HALF_OPEN or \
+                self.failure_count >= self.policy.failure_threshold:
+            if self.state != CircuitState.OPEN:
+                self.n_trips += 1
+            self.state = CircuitState.OPEN
+
+
+class FlakyMember:
+    """Chaos wrapper around a pool member: raises on invocations in
+    ``[fail_from, fail_until)`` (counted per wrapper), proxies otherwise.
+
+    Deterministic by construction, so tests and benchmarks can script a
+    mid-run outage (breaker trips, queries reroute) and — by bounding the
+    span — a recovery (half-open probe succeeds, breaker closes).
+    """
+
+    def __init__(self, inner, fail_from: int = 0, fail_until: int = 10**9):
+        self.inner = inner
+        self.fail_from = fail_from
+        self.fail_until = fail_until
+        self.n_calls = 0
+        self.n_faults = 0
+
+    @property
+    def name(self):
+        return self.inner.name
+
+    @property
+    def c_in(self):
+        return self.inner.c_in
+
+    @property
+    def c_out(self):
+        return self.inner.c_out
+
+    @property
+    def context_len(self):
+        return self.inner.context_len
+
+    def invoke_batch(self, wl, batch_idx):
+        call = self.n_calls
+        self.n_calls += 1
+        if self.fail_from <= call < self.fail_until:
+            self.n_faults += 1
+            raise RuntimeError(f"{self.name}: injected fault (call {call})")
+        return self.inner.invoke_batch(wl, batch_idx)
+
+    def evaluate(self, wl, idx, batch_size, rng=None):
+        return self.inner.evaluate(wl, idx, batch_size, rng)

@@ -1,0 +1,460 @@
+"""Online RoBatch serving: streaming admission, windowed scheduling under a
+rolling budget, and concurrent cross-model dispatch.
+
+The paper's routing stage (§5, Alg. 1) schedules a *fixed* query set against a
+*fixed* budget.  This layer runs the same greedy budget/batch-size assignment
+over a live arrival stream:
+
+    arrivals ──► admission window (deadline) ──► response cache
+        ──► windowed Alg. 1 against a token-bucket budget ($/s)
+        ──► batch packing (group_into_batches) ──► concurrent dispatch
+        ──► circuit breaking + rescheduling onto surviving models
+
+Design points:
+
+* **Deadline windows.**  Requests accumulate for ``window_s`` seconds, then
+  one scheduling round assigns every pending query a (model, batch) state.
+  Larger windows amortize the shared system prompt better (more queries per
+  physical batch) at the price of queueing latency — the knob benchmarked by
+  ``benchmarks/online_throughput.py``.
+* **Rolling budget.**  A token bucket refills at ``budget_per_s`` dollars/s up
+  to ``burst_s`` seconds of burst.  Each round schedules against the current
+  balance; the *realized* (exact, Eq. 4) cost of dispatched batches is then
+  drawn down, so estimate-vs-actual drift self-corrects next round.  A query
+  whose cheapest state exceeds the bucket *capacity* can never be afforded and
+  is shed immediately; one that is merely unaffordable *now* waits.
+* **Circuit breaking.**  Each pool member carries a
+  :class:`repro.serving.fault.CircuitBreaker`.  An open breaker removes the
+  model from the candidate space (``restrict_space``) and the failed window's
+  queries are rescheduled onto survivors next round.
+* **Response cache.**  The batch-prompt wire format is a pure function of the
+  query text (docs/batch_format.md), so responses are cacheable by query
+  identity; a hit completes immediately and bills zero cost.  Duplicate
+  queries *within* one window coalesce onto a single scheduled instance.
+* **Virtual time.**  The server is tick-driven on an injectable clock: service
+  latencies come from ``BatchResult.latency_s`` (measured for real engines,
+  simulated for the calibrated pool), so benchmarks never sleep.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.problem import group_into_batches
+from repro.core.scheduler import greedy_schedule_window, restrict_space, take_rows
+from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
+
+__all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
+           "WindowReport", "ServerStats", "OnlineRobatchServer",
+           "poisson_arrivals"]
+
+
+@dataclass
+class OnlineRequest:
+    """One streamed query: a workload index plus serving lifecycle state."""
+
+    rid: int
+    query_idx: int
+    arrived_at: float
+    completed_at: Optional[float] = None
+    utility: Optional[float] = None
+    model: Optional[int] = None
+    batch: Optional[int] = None
+    cost: float = 0.0                 # this request's share of billed cost
+    cache_hit: bool = False
+    n_reroutes: int = 0
+    dropped: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.completed_at - self.arrived_at
+
+
+class BudgetBucket:
+    """Token bucket in dollars: refills at ``rate_per_s``, holds at most
+    ``burst_s`` seconds of budget.  ``spend`` may overdraw slightly (realized
+    cost of an already-dispatched batch exceeding its amortized estimate);
+    the debt suppresses admission until refills cover it."""
+
+    def __init__(self, rate_per_s: float, burst_s: float = 2.0):
+        self.rate = float(rate_per_s)
+        self.capacity = self.rate * burst_s
+        self._balance = self.capacity
+        self._last: Optional[float] = None
+        self.total_spent = 0.0
+
+    def balance(self, now: float) -> float:
+        if self._last is not None and now > self._last:
+            self._balance = min(self.capacity, self._balance + self.rate * (now - self._last))
+        self._last = now
+        return self._balance
+
+    def spend(self, amount: float) -> None:
+        self._balance -= amount
+        self.total_spent += amount
+
+
+class ResponseCache:
+    """Bounded LRU cache keyed by query identity.
+
+    The byte-level batch prompt is deterministic in the query text, so a
+    repeated query is served from cache at zero cost.  Values are
+    ``(utility, model_idx)`` — what the judge scored when the query was first
+    served, and where."""
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[int, tuple[float, int]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: int) -> Optional[tuple[float, int]]:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: int, value: tuple[float, int]) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+@dataclass
+class OnlineConfig:
+    budget_per_s: float               # rolling budget rate ($/s)
+    window_s: float = 0.25            # admission deadline window
+    burst_s: float = 2.0              # bucket capacity in seconds of budget
+    max_window: int = 512             # queries per scheduling round (backpressure)
+    max_reroutes: int = 3             # reschedules before a query is shed
+    cache_entries: int = 4096
+    breaker: BreakerPolicy = field(default_factory=BreakerPolicy)
+    max_workers: Optional[int] = None # dispatch threads (default: pool size)
+
+
+@dataclass
+class WindowReport:
+    """One scheduling round's accounting (the server keeps the full list)."""
+
+    t: float
+    n_pending: int = 0                # queue depth entering the round
+    n_cache_hits: int = 0
+    n_coalesced: int = 0              # duplicate queries merged in-window
+    n_admitted: int = 0               # scheduled this round
+    n_deferred: int = 0               # unaffordable/over-cap, retried next round
+    n_shed: int = 0                   # can never afford → dropped
+    n_failed: int = 0                 # queries whose dispatch group faulted
+    n_groups: int = 0                 # physical batches dispatched
+    avail: float = 0.0                # bucket balance when the round started
+    est_cost: float = 0.0             # amortized cost the scheduler committed
+    spent: float = 0.0                # realized billed cost (Eq. 4 semantics)
+    open_models: tuple = ()           # breaker-open member names
+
+
+@dataclass
+class ServerStats:
+    n_submitted: int
+    n_completed: int
+    n_cache_hits: int
+    n_coalesced: int
+    n_dropped: int
+    n_reroutes: int
+    duration_s: float
+    qps: float
+    latency_p50: float
+    latency_p99: float
+    mean_utility: float
+    total_cost: float
+    budget_allowance: float           # rate·duration + burst capacity
+    windows: list = field(default_factory=list)
+
+    def summary(self) -> str:
+        return (f"served {self.n_completed}/{self.n_submitted} "
+                f"({self.n_cache_hits} cached, {self.n_dropped} dropped, "
+                f"{self.n_reroutes} reroutes) in {self.duration_s:.1f}s · "
+                f"{self.qps:.1f} qps · p50 {self.latency_p50:.2f}s "
+                f"p99 {self.latency_p99:.2f}s · util {self.mean_utility:.3f} · "
+                f"${self.total_cost:.5f} of ${self.budget_allowance:.5f} allowed")
+
+
+class OnlineRobatchServer:
+    """Streams queries through a fitted :class:`repro.core.robatch.Robatch`.
+
+    ``rb`` must be fitted (router + calibrations); ``pool`` is the member list
+    the dispatcher bills and invokes — usually ``rb.pool``, but it may wrap
+    members (e.g. :class:`repro.serving.fault.FlakyMember`) as long as order
+    matches, since assignments refer to members by index.
+    """
+
+    def __init__(self, rb, pool: Sequence, wl, config: OnlineConfig):
+        assert rb.router is not None, "Robatch must be fitted before serving"
+        assert len(pool) == len(rb.pool), "pool must mirror rb.pool by index"
+        self.rb = rb
+        self.pool = list(pool)
+        self.wl = wl
+        self.cfg = config
+        self.now = 0.0
+        self.bucket = BudgetBucket(config.budget_per_s, config.burst_s)
+        self.cache = ResponseCache(config.cache_entries)
+        self.breakers = [CircuitBreaker(config.breaker, clock=lambda: self.now)
+                         for _ in self.pool]
+        self.pending: deque[OnlineRequest] = deque()
+        self.completed: list[OnlineRequest] = []
+        self.windows: list[WindowReport] = []
+        self._locks = [threading.Lock() for _ in self.pool]
+        self._pool_exec = ThreadPoolExecutor(
+            max_workers=config.max_workers or max(1, len(self.pool)))
+        self._next_rid = 0
+        self.n_coalesced = 0
+
+    # ------------------------------------------------------------- admission
+    def submit(self, query_idx: int, at: Optional[float] = None) -> OnlineRequest:
+        req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
+                            arrived_at=self.now if at is None else at)
+        self._next_rid += 1
+        self.pending.append(req)
+        return req
+
+    def allowed_models(self) -> list[int]:
+        return [k for k, br in enumerate(self.breakers) if br.allow_request()]
+
+    # -------------------------------------------------------------- serving
+    def _complete(self, req: OnlineRequest, *, at: float, utility: float,
+                  model: Optional[int], batch: Optional[int], cost: float,
+                  cache_hit: bool = False, dropped: bool = False) -> None:
+        req.completed_at = at
+        req.utility = utility
+        req.model = model
+        req.batch = batch
+        req.cost = cost
+        req.cache_hit = cache_hit
+        req.dropped = dropped
+        self.completed.append(req)
+
+    def _invoke(self, k: int, members: np.ndarray):
+        with self._locks[k]:          # engines are not thread-safe; members are
+            return self.pool[k].invoke_batch(self.wl, members)
+
+    def step(self, now: Optional[float] = None) -> WindowReport:
+        """Run one scheduling round over the queries pending at ``now``."""
+        self.now = self.now + self.cfg.window_s if now is None else now
+        now = self.now
+        rep = WindowReport(t=now, n_pending=len(self.pending))
+        take = [self.pending.popleft()
+                for _ in range(min(len(self.pending), self.cfg.max_window))]
+
+        # 1. response cache: hits complete immediately and bill nothing
+        misses: list[OnlineRequest] = []
+        for req in take:
+            hit = self.cache.get(req.query_idx)
+            if hit is not None:
+                u, k = hit
+                self._complete(req, at=now, utility=u, model=k, batch=None,
+                               cost=0.0, cache_hit=True)
+                rep.n_cache_hits += 1
+            else:
+                misses.append(req)
+
+        # 2. coalesce duplicates: one scheduled instance answers them all
+        by_idx: "OrderedDict[int, list[OnlineRequest]]" = OrderedDict()
+        for req in misses:
+            by_idx.setdefault(req.query_idx, []).append(req)
+        rep.n_coalesced = len(misses) - len(by_idx)
+        self.n_coalesced += rep.n_coalesced
+
+        allowed = self.allowed_models()
+        rep.open_models = tuple(self.pool[k].name for k, br in enumerate(self.breakers)
+                                if br.state == CircuitState.OPEN)
+        if not by_idx or not allowed:
+            # requeue front-of-queue in FCFS order (iterate groups backwards)
+            for reqs in reversed(list(by_idx.values())):
+                self.pending.extendleft(reversed(reqs))
+            rep.n_deferred = len(misses)
+            self.windows.append(rep)
+            return rep
+
+        # 3. candidate space over the window, restricted to surviving models
+        idx = np.fromiter(by_idx.keys(), dtype=int)
+        full = self.rb.candidate_space(idx)
+        space = restrict_space(full, set(allowed))
+
+        # 4. budget admission: affordable FCFS prefix at initial-state cost
+        avail = rep.avail = self.bucket.balance(now)
+        base = space.cost[:, space.initial_state]
+        affordable = np.cumsum(base) <= max(avail, 0.0) + 1e-12
+        n_adm = int(affordable.sum())
+        if n_adm == 0 and float(full.cost[0].min()) > self.bucket.capacity + 1e-12:
+            # head query can *never* be afforded at this budget rate — judged
+            # against the FULL pool, so queries that are only expensive while
+            # a breaker is open are deferred (and served after recovery), not
+            # shed
+            for req in by_idx[int(idx[0])]:
+                self._complete(req, at=now, utility=0.0, model=None, batch=None,
+                               cost=0.0, dropped=True)
+                rep.n_shed += 1
+            idx = idx[1:]
+        deferred = idx[n_adm:]
+        for q in deferred[::-1]:
+            self.pending.extendleft(reversed(by_idx[int(q)]))
+        rep.n_deferred = int(sum(len(by_idx[int(q)]) for q in deferred))
+        idx = idx[:n_adm]
+        rep.n_admitted = int(sum(len(by_idx[int(q)]) for q in idx))
+        if n_adm == 0:
+            self.windows.append(rep)
+            return rep
+
+        # 5. windowed Alg. 1 against the bucket's current balance (the server
+        #    restricted the space up front for admission control, so no
+        #    further model mask is needed here)
+        res = greedy_schedule_window(take_rows(space, np.arange(n_adm)), idx, avail)
+        # assignment batch/model refer to the *restricted* state list; map the
+        # model column back to pool indices via the restricted states
+        plan = group_into_batches(res.assignment)
+
+        # half-open breakers get exactly ONE probe group: any further groups
+        # scheduled on a recovering member are deferred to the next window
+        # (without burning reroute budget) instead of risking a reroute storm
+        half_open = {k for k, br in enumerate(self.breakers)
+                     if br.state == CircuitState.HALF_OPEN}
+        probed: set[int] = set()
+        dispatch, held = [], []
+        for state, members in plan:
+            k = int(state.model)
+            if k in half_open:
+                if k in probed:
+                    held.extend(req for q in members for req in by_idx[int(q)])
+                    continue
+                probed.add(k)
+            dispatch.append((state, members))
+        rep.n_deferred += len(held)
+        rep.n_admitted -= len(held)   # held groups were never attempted
+        # committed cost covers dispatched groups only
+        col_of = {s: j for j, s in enumerate(space.states)}
+        row_of = {int(q): r for r, q in enumerate(idx)}
+        rep.est_cost = float(sum(
+            space.cost[[row_of[int(q)] for q in members], col_of[state]].sum()
+            for state, members in dispatch))
+
+        # 6. concurrent dispatch across pool members
+        futures = {}
+        for state, members in dispatch:
+            k = int(state.model)
+            fut = self._pool_exec.submit(self._invoke, k, members)
+            futures[fut] = (state, members)
+        rep.n_groups = len(dispatch)
+
+        requeue: list[OnlineRequest] = []
+        for fut, (state, members) in futures.items():
+            k = int(state.model)
+            try:
+                out = fut.result()
+            except Exception:         # noqa: BLE001 — member fault
+                probe_failed = k in half_open     # expected-risk probe traffic
+                self.breakers[k].record_failure()
+                for q in members:
+                    for req in by_idx[int(q)]:
+                        rep.n_failed += 1
+                        if not probe_failed:
+                            req.n_reroutes += 1
+                        if req.n_reroutes > self.cfg.max_reroutes:
+                            self._complete(req, at=now, utility=0.0, model=None,
+                                           batch=None, cost=0.0, dropped=True)
+                        else:
+                            requeue.append(req)
+                continue
+            self.breakers[k].record_success()
+            cost = (out.in_tokens * self.pool[k].c_in
+                    + out.out_tokens * self.pool[k].c_out) / 1e6
+            self.bucket.spend(cost)
+            rep.spent += cost
+            done_at = now + float(out.latency_s)
+            share = cost / max(1, len(members))
+            for q, u in zip(members, out.utilities):
+                self.cache.put(int(q), (float(u), k))
+                for req in by_idx[int(q)]:
+                    self._complete(req, at=done_at, utility=float(u), model=k,
+                                   batch=int(state.batch), cost=share)
+        retry = sorted(requeue + held, key=lambda r: r.rid)
+        if retry:                     # FCFS: oldest retried request re-enters first
+            self.pending.extendleft(reversed(retry))
+        self.windows.append(rep)
+        return rep
+
+    def run(self, arrivals: Sequence[tuple[float, int]], *,
+            max_ticks: int = 100_000) -> ServerStats:
+        """Drive a pre-generated arrival stream to completion.
+
+        ``arrivals`` is a time-sorted list of ``(t, query_idx)``.  The clock is
+        virtual: each tick advances ``window_s``, admits everything that has
+        arrived, and runs one scheduling round; it keeps ticking until the
+        stream is exhausted and the queue drains.
+        """
+        arrivals = list(arrivals)
+        pos = 0
+        for _ in range(max_ticks):
+            if pos >= len(arrivals) and not self.pending:
+                break
+            t = self.now + self.cfg.window_s
+            while pos < len(arrivals) and arrivals[pos][0] <= t:
+                at, q = arrivals[pos]
+                self.submit(q, at=at)
+                pos += 1
+            self.step(t)
+        return self.stats()
+
+    # ------------------------------------------------------------- reporting
+    def stats(self) -> ServerStats:
+        done = self.completed
+        served = [r for r in done if not r.dropped]
+        lats = np.array([r.latency for r in served]) if served else np.array([0.0])
+        t0 = min((r.arrived_at for r in done), default=0.0)
+        dur = max(self.now - t0, 1e-9)
+        return ServerStats(
+            n_submitted=self._next_rid,
+            n_completed=len(done),
+            n_cache_hits=self.cache.hits,
+            n_coalesced=self.n_coalesced,
+            n_dropped=sum(r.dropped for r in done),
+            n_reroutes=sum(r.n_reroutes for r in done),
+            duration_s=dur,
+            qps=len(served) / dur,
+            latency_p50=float(np.percentile(lats, 50)),
+            latency_p99=float(np.percentile(lats, 99)),
+            mean_utility=float(np.mean([r.utility for r in served])) if served else 0.0,
+            total_cost=self.bucket.total_spent,
+            budget_allowance=self.bucket.rate * dur + self.bucket.capacity,
+            windows=self.windows,
+        )
+
+    def close(self) -> None:
+        self._pool_exec.shutdown(wait=True)
+
+
+def poisson_arrivals(rng: np.random.Generator, qps: float, duration_s: float,
+                     universe: np.ndarray, repeat_frac: float = 0.0) -> list[tuple[float, int]]:
+    """Poisson stream over ``universe`` indices; with probability
+    ``repeat_frac`` an arrival re-asks an earlier query (drives cache hits)."""
+    out: list[tuple[float, int]] = []
+    t = 0.0
+    seen: list[int] = []
+    while True:
+        t += float(rng.exponential(1.0 / qps))
+        if t >= duration_s:
+            return out
+        if seen and float(rng.random()) < repeat_frac:
+            q = int(seen[int(rng.integers(0, len(seen)))])
+        else:
+            q = int(universe[int(rng.integers(0, len(universe)))])
+            seen.append(q)
+        out.append((t, q))

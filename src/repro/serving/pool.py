@@ -1,14 +1,26 @@
 """Real served pool: adapts ServingEngines to the scheduler's PoolMember
 protocol, so Robatch routes across *actually running* models.
 
+The pool-member protocol (docs/architecture.md) is what lets the calibrated
+simulator (:mod:`repro.data.simulator`) and this real pool interchange:
+
+    name: str; c_in, c_out: float ($/1M tokens); context_len: int
+    invoke_batch(workload, batch_idx) -> BatchResult
+    evaluate(workload, idx, batch_size) -> per-query utilities
+
 A ``TextTask`` supplies the query/answer text for a Workload (the numeric
 Workload drives the scheduler; the TextTask drives real token-level serving).
 Utilities come from judging the parsed batched generations — accuracy
 degradation with batch size emerges from the models themselves, not a
 simulator.
+
+Members are safe to invoke from the online dispatcher's worker threads: each
+member serializes access to its engine (the KV-cache slots are mutable state),
+while different members run genuinely concurrently.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Sequence
@@ -48,6 +60,7 @@ class ServedPoolMember:
         self.c_out = c_out
         self.context_len = context_len
         self.max_answer_tokens = max_answer_tokens
+        self._lock = threading.Lock()
 
     def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
         b = len(batch_idx)
@@ -55,7 +68,8 @@ class ServedPoolMember:
         prompt = self.formatter.format(queries)
         t0 = time.perf_counter()
         req = Request(rid=0, tokens=prompt, max_new=self.max_answer_tokens * b + b)
-        self.engine.serve([req])
+        with self._lock:              # one engine, one in-flight batch
+            self.engine.serve([req])
         latency = time.perf_counter() - t0
         tok = self.formatter.tokenizer
         out_ids = req.out_tokens

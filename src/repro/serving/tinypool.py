@@ -1,0 +1,166 @@
+"""Tiny *real* model pool builder: train the tiny-s/m/l byte-level LMs on an
+addition task (batched-prompt examples in-distribution) and wrap them as
+``ServedPoolMember``s.
+
+Shared by ``examples/serve_pool.py`` and ``benchmarks/online_throughput.py``:
+both need an actually-served pool whose accuracy-vs-batch-size behaviour is
+emergent rather than simulated.  Architectures come from
+``repro.configs.tiny_pool`` (tiny-s/m/l); prices follow the ascending
+cost/capability convention the scheduler assumes (§3).
+"""
+from __future__ import annotations
+
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ShardingConfig, get_arch
+from repro.data.workload import BenchmarkSpec, Workload
+from repro.models.transformer import Model
+from repro.serving.batcher import BatchPromptFormatter
+from repro.serving.engine import ServingEngine
+from repro.serving.pool import ServedPoolMember, TextTask
+from repro.training.optimizer import adamw
+
+__all__ = ["SYSTEM_PROMPT", "TINY_PRICES", "gen_query",
+           "format_training_example", "train_engines", "build_task_workload",
+           "build_tiny_pool"]
+
+SYSTEM_PROMPT = ("You are a calculator. For each question output the last digit "
+                 "of the sum, answers separated by ';'.")
+
+# (c_in, c_out) $/1M tokens, ascending with capacity; context fits max_len.
+TINY_PRICES = {"tiny-s": (0.1, 0.4), "tiny-m": (0.3, 1.2), "tiny-l": (0.8, 3.2)}
+
+
+def gen_query(rng) -> tuple[str, str, float]:
+    """Two-term addition with difficulty tiers by operand size.
+    Answer = last digit of the sum (single token)."""
+    tier = int(rng.integers(0, 3))               # 0 easy … 2 hard
+    hi = (10, 50, 100)[tier]
+    a_, b_ = int(rng.integers(0, hi)), int(rng.integers(0, hi))
+    q = f"{a_}+{b_}"
+    ans = str((a_ + b_) % 10)
+    return q, ans, tier / 2.0
+
+
+def format_training_example(rng, fmt: BatchPromptFormatter, max_b: int = 6):
+    b = int(rng.integers(1, max_b + 1))
+    qas = [gen_query(rng) for _ in range(b)]
+    prompt = fmt.format([q for q, _, _ in qas])
+    answer = ";".join(a for _, a, _ in qas)
+    tok = fmt.tokenizer
+    return prompt + tok.encode(answer, add_bos=False, add_eos=True)
+
+
+def _make_batches(rng, fmt, batch_size, seq_len, n_steps):
+    tok = fmt.tokenizer
+    for _ in range(n_steps):
+        seqs = [format_training_example(rng, fmt) for _ in range(batch_size)]
+        tokens, lengths = tok.pad_batch(seqs, seq_len + 1)
+        labels = tokens[:, 1:].copy()
+        labels[labels == tok.pad] = -100
+        yield {"tokens": jnp.asarray(tokens[:, :-1]),
+               "labels": jnp.asarray(np.where(labels == -100, -100, labels))}
+
+
+def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
+                  names=("tiny-s", "tiny-m", "tiny-l"), *, batch_size: int = 8,
+                  seq_len: int = 192, max_slots: int = 4, max_len: int = 512,
+                  verbose: bool = True) -> dict[str, ServingEngine]:
+    """Train one engine per tiny architecture on the addition task.
+
+    ``seq_len`` must cover the longest batched example: at the previous
+    default of 160 the b=5/6 examples were silently truncated by
+    ``pad_batch`` — cutting off exactly the answers they were meant to teach.
+
+    Caveat for benchmark consumers: at smoke-scale step counts (a few
+    hundred) these tiny byte-level LMs learn the *format* reliably but sit
+    near the task's chance floor on the arithmetic itself, so measured
+    utilities are low; the serving/routing machinery above them is exercised
+    either way, and the calibrated simulator pool is the right target for
+    utility-sensitive numbers."""
+    engines = {}
+    for name in names:
+        cfg = get_arch(name)
+        model = Model(cfg, ShardingConfig(remat="none"))
+        params = model.init(jax.random.PRNGKey(zlib.crc32(name.encode()) % 2**31))
+        opt = adamw(3e-3, grad_clip=1.0)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, state = opt.update(grads, state, params)
+            return params, state, loss
+
+        t0 = time.time()
+        losses = []
+        if verbose:
+            print(f"training {name} ({model.param_count() / 1e6:.2f}M params)...",
+                  flush=True)
+        for batch in _make_batches(rng, fmt, batch_size, seq_len, steps):
+            params, state, loss = step(params, state, batch)
+            losses.append(float(loss))   # blocks: real per-step time on CPU
+        if verbose:
+            print(f"trained {name}: loss {losses[0]:.2f} -> "
+                  f"{np.mean(losses[-20:]):.2f} "
+                  f"({time.time() - t0:.0f}s, {len(losses)} steps)", flush=True)
+        engines[name] = ServingEngine(model, params, max_slots=max_slots,
+                                      max_len=max_len)
+    return engines
+
+
+def build_task_workload(rng, fmt: BatchPromptFormatter, n_train: int,
+                        n_test: int) -> tuple[Workload, TextTask]:
+    """Addition-task workload + parallel text view (see examples/serve_pool.py)."""
+    n = n_train + n_test
+    queries, answers, difficulty = [], [], []
+    for _ in range(n):
+        q, a, d = gen_query(rng)
+        queries.append(q)
+        answers.append(a)
+        difficulty.append(d)
+    difficulty = np.array(difficulty, np.float32)
+    # embeddings: simple text features (the real system would use a sentence
+    # embedding model; tiny pool queries are fully described by these)
+    feats = np.stack([
+        [len(q), sum(int(c) for c in q if c.isdigit()) / 20.0,
+         max(len(t) for t in q.split("+")), min(len(t) for t in q.split("+"))]
+        for q in queries
+    ]).astype(np.float32)
+    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-6)
+    emb = np.concatenate([feats, rng.normal(0, 0.1, (n, 4)).astype(np.float32)], axis=1)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True) + 1e-8
+
+    in_tokens = np.array([fmt.query_tokens(q) for q in queries], np.int32)
+    spec = BenchmarkSpec("tiny-add", "reasoning", 10, fmt.sys_tokens,
+                         (float(in_tokens.mean()), 0.2), (2, 0.1), (2.0, 2.0), 3, 5.0)
+    wl = Workload(
+        name="tiny-add", spec=spec, embeddings=emb, difficulty=difficulty,
+        topic=np.zeros(n, np.int32), in_tokens=in_tokens,
+        out_tokens=np.full(n, 2, np.int32), sys_tokens=fmt.sys_tokens,
+        split={"train": np.arange(n_train),
+               "val": np.arange(0),
+               "test": np.arange(n_train, n)},
+    )
+    return wl, TextTask(queries=queries, answers=answers)
+
+
+def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 48,
+                    verbose: bool = True):
+    """Everything the routing stack needs: (workload, pool, formatter).
+
+    The returned members satisfy the pool-member protocol, so ``Robatch`` and
+    ``OnlineRobatchServer`` use them exactly like the simulator."""
+    fmt = BatchPromptFormatter(SYSTEM_PROMPT)
+    engines = train_engines(rng, fmt, steps, verbose=verbose)
+    wl, task = build_task_workload(rng, fmt, n_train, n_test)
+    pool = [ServedPoolMember(name, engines[name], fmt, task,
+                             c_in=TINY_PRICES[name][0], c_out=TINY_PRICES[name][1],
+                             context_len=512)
+            for name in ("tiny-s", "tiny-m", "tiny-l")]
+    return wl, pool, fmt

@@ -1,0 +1,49 @@
+"""Documentation stays truthful: every file path and module reference in
+README.md and docs/*.md must resolve to something in the repo."""
+import glob
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = [os.path.join(ROOT, "README.md")] + \
+    sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+# backticked repo-relative paths like `src/repro/serving/online.py`
+PATH_RE = re.compile(r"`((?:src|tests|examples|benchmarks|tools|docs|configs)"
+                     r"/[\w\-/\.]+\.(?:py|sh|md|ini))`")
+# backticked dotted module refs like `repro.serving.online`
+MOD_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def _doc_ids():
+    return [os.path.relpath(p, ROOT) for p in DOC_FILES]
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_referenced_paths_resolve(doc):
+    assert os.path.exists(doc), f"{doc} missing"
+    text = open(doc).read()
+    missing = [p for p in PATH_RE.findall(text)
+               if not os.path.exists(os.path.join(ROOT, p))]
+    assert not missing, f"{os.path.basename(doc)} references missing paths: {missing}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_referenced_modules_resolve(doc):
+    text = open(doc).read()
+    missing = []
+    for mod in MOD_RE.findall(text):
+        rel = mod.replace(".", "/")
+        if not (os.path.exists(os.path.join(ROOT, "src", rel + ".py"))
+                or os.path.isdir(os.path.join(ROOT, "src", rel))):
+            missing.append(mod)
+    assert not missing, f"{os.path.basename(doc)} references missing modules: {missing}"
+
+
+def test_readme_and_architecture_exist():
+    assert os.path.exists(os.path.join(ROOT, "README.md"))
+    assert os.path.exists(os.path.join(ROOT, "docs", "architecture.md"))
+    assert os.path.exists(os.path.join(ROOT, "docs", "batch_format.md"))

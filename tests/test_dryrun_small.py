@@ -12,12 +12,12 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax
-from jax.sharding import AxisType
 from repro.config import MeshConfig, SHAPE_SUITE, ShapeConfig, get_arch
 from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_mesh_from_config
 
 mesh_cfg = MeshConfig(shape=(2, 4), axes=("data", "model"))
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_from_config(mesh_cfg)
 cfg = get_arch(sys.argv[1]).reduced()
 shape = ShapeConfig(sys.argv[2], sys.argv[3], int(sys.argv[4]), int(sys.argv[5]))
 res = lower_cell(cfg, shape, mesh, mesh_cfg, verbose=False)

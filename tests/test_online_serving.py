@@ -1,0 +1,212 @@
+"""Online serving layer: windowed scheduling under a rolling budget, circuit
+breaking + rescheduling, response caching, duplicate coalescing."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import greedy_schedule, greedy_schedule_window, restrict_space
+from repro.serving.fault import BreakerPolicy, CircuitState, FlakyMember
+from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
+                                  poisson_arrivals)
+
+
+def _rate(rb, test_idx, qps, budget_x=3.0):
+    base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect,
+                                          test_idx).mean())
+    return qps * base * budget_x
+
+
+def _server(rb, pool, wl, *, qps=40.0, budget_x=3.0, window_s=0.25,
+            threshold=1, recovery_s=1e9):
+    test = wl.subset_indices("test")
+    cfg = OnlineConfig(
+        budget_per_s=_rate(rb, test, qps, budget_x), window_s=window_s,
+        breaker=BreakerPolicy(failure_threshold=threshold,
+                              recovery_time_s=recovery_s))
+    return OnlineRobatchServer(rb, pool, wl, cfg)
+
+
+# ---------------------------------------------------------------------------
+# windowed scheduler
+# ---------------------------------------------------------------------------
+
+def test_windowed_scheduler_restricts_to_allowed_models(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:32]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost[:, space.initial_state].sum()) * 4
+    res = greedy_schedule_window(space, test, budget, allowed_models={1, 2})
+    assert set(np.unique(res.assignment.model)) <= {1, 2}
+    assert res.amortized_cost <= budget + 1e-9
+    # the unrestricted schedule can only do at least as well
+    full = greedy_schedule(space, test, budget)
+    assert full.est_utility >= res.est_utility - 1e-9
+
+
+def test_restrict_space_reanchors_when_anchor_model_trips(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:16]
+    space = fitted_rb.candidate_space(test)
+    assert space.states[space.initial_state].model == 0
+    sub = restrict_space(space, {1, 2})
+    assert sub.states[sub.initial_state].model in {1, 2}
+    # re-anchored initial state is the cheapest surviving column
+    totals = sub.cost.sum(axis=0)
+    assert np.argmin(totals) == sub.initial_state
+    with pytest.raises(ValueError):
+        restrict_space(space, set())
+
+
+# ---------------------------------------------------------------------------
+# rolling budget
+# ---------------------------------------------------------------------------
+
+def test_window_scheduling_respects_rolling_budget(fitted_rb, agnews, pool):
+    srv = _server(fitted_rb, pool, agnews, qps=40.0, budget_x=2.0)
+    rng = np.random.default_rng(0)
+    arrivals = poisson_arrivals(rng, 40.0, 10.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    # every round's committed (amortized) cost stayed within the bucket balance
+    for w in stats.windows:
+        if w.n_admitted:
+            assert w.est_cost <= w.avail + 1e-9
+    # realized total stays within the rolling allowance (small drift tolerance
+    # for exact-vs-amortized partial batches)
+    assert stats.total_cost <= stats.budget_allowance * 1.05 + 1e-9
+
+
+def test_tight_budget_defers_instead_of_overspending(fitted_rb, agnews, pool):
+    # a rate 10× lower must not spend more than its own allowance
+    srv = _server(fitted_rb, pool, agnews, qps=40.0, budget_x=0.2)
+    rng = np.random.default_rng(1)
+    arrivals = poisson_arrivals(rng, 40.0, 10.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.total_cost <= stats.budget_allowance * 1.05 + 1e-9
+    assert sum(w.n_deferred for w in stats.windows) > 0   # backpressure engaged
+
+
+def test_zero_budget_sheds_all_queries(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    cfg = OnlineConfig(budget_per_s=0.0, window_s=0.25)
+    srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg)
+    stats = srv.run([(0.1 * i, int(q)) for i, q in enumerate(test[:8])])
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    assert stats.n_dropped == stats.n_submitted
+    assert stats.total_cost == 0.0
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_reschedules_to_surviving_models(fitted_rb, agnews, pool):
+    flaky_k = 2
+    pool_f = [FlakyMember(m, fail_from=0) if k == flaky_k else m
+              for k, m in enumerate(pool)]
+    srv = _server(fitted_rb, pool_f, agnews, qps=40.0, budget_x=4.0)
+    rng = np.random.default_rng(2)
+    arrivals = poisson_arrivals(rng, 40.0, 10.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert srv.breakers[flaky_k].state == CircuitState.OPEN
+    assert stats.n_reroutes > 0
+    assert stats.n_completed == stats.n_submitted
+    assert stats.n_dropped == 0                      # survivors absorbed everything
+    served_on = {r.model for r in srv.completed if not r.dropped}
+    assert flaky_k not in served_on
+
+
+def test_anchor_model_outage_reanchors_and_survives(fitted_rb, agnews, pool):
+    # model 0 anchors the upgrade chain; its outage exercises re-anchoring
+    pool_f = [FlakyMember(pool[0], fail_from=2)] + list(pool[1:])
+    srv = _server(fitted_rb, pool_f, agnews, qps=30.0, budget_x=6.0)
+    rng = np.random.default_rng(3)
+    arrivals = poisson_arrivals(rng, 30.0, 8.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert srv.breakers[0].state == CircuitState.OPEN
+    assert stats.n_completed == stats.n_submitted
+    late = [r for r in srv.completed
+            if not r.dropped and not r.cache_hit and r.n_reroutes > 0]
+    assert late and all(r.model in {1, 2} for r in late)
+
+
+def test_half_open_breaker_recovers_after_outage_ends(fitted_rb, agnews, pool):
+    # outage spans calls [0, 3); the half-open probe after recovery_time
+    # succeeds and the breaker closes, readmitting the model
+    flaky_k = 0
+    flaky = FlakyMember(pool[0], fail_from=0, fail_until=3)
+    pool_f = [flaky] + list(pool[1:])
+    srv = _server(fitted_rb, pool_f, agnews, qps=30.0, budget_x=4.0,
+                  threshold=1, recovery_s=2.0)
+    rng = np.random.default_rng(4)
+    arrivals = poisson_arrivals(rng, 30.0, 12.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert srv.breakers[flaky_k].state == CircuitState.CLOSED
+    assert stats.n_completed == stats.n_submitted and stats.n_dropped == 0
+    # the model serves real traffic again after recovery
+    late = [r for r in srv.completed
+            if r.model == flaky_k and not r.cache_hit and r.completed_at > 4.0]
+    assert late
+
+
+def test_half_open_probe_is_one_group_and_burns_no_reroute_budget(
+        fitted_rb, agnews, pool):
+    # permanently-down member with fast recovery probes: invocation count must
+    # stay ~one per recovery period (no probe storms), and probe failures must
+    # not drop queries through reroute exhaustion
+    flaky = FlakyMember(pool[0], fail_from=0)        # never recovers
+    pool_f = [flaky] + list(pool[1:])
+    srv = _server(fitted_rb, pool_f, agnews, qps=30.0, budget_x=4.0,
+                  threshold=1, recovery_s=1.0)
+    rng = np.random.default_rng(5)
+    arrivals = poisson_arrivals(rng, 30.0, 12.0, agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.n_dropped == 0
+    assert stats.n_completed == stats.n_submitted
+    # 12s stream, 1s recovery: ≲ 1 initial failure + ~1 probe per period
+    assert flaky.n_calls <= 16
+
+
+# ---------------------------------------------------------------------------
+# response cache + coalescing
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_bill_zero_cost(fitted_rb, agnews, pool):
+    srv = _server(fitted_rb, pool, agnews, qps=10.0, budget_x=5.0)
+    q = int(agnews.subset_indices("test")[0])
+    first = srv.submit(q, at=0.0)
+    srv.step(1.0)
+    assert first.completed_at is not None and not first.cache_hit
+    spent_before = srv.bucket.total_spent
+    assert spent_before > 0
+    second = srv.submit(q, at=1.0)
+    srv.step(2.0)
+    srv.close()
+    assert second.cache_hit and second.cost == 0.0
+    assert second.utility == first.utility
+    assert srv.bucket.total_spent == spent_before    # nothing new billed
+
+
+def test_duplicates_coalesce_within_a_window(fitted_rb, agnews, pool):
+    srv = _server(fitted_rb, pool, agnews, qps=10.0, budget_x=5.0)
+    q = int(agnews.subset_indices("test")[1])
+    r1, r2 = srv.submit(q, at=0.0), srv.submit(q, at=0.1)
+    rep = srv.step(1.0)
+    srv.close()
+    assert rep.n_coalesced == 1 and rep.n_groups == 1
+    assert r1.completed_at is not None and r2.completed_at is not None
+    assert r1.utility == r2.utility
+    assert r1.cost == r2.cost                        # same share of one bill
+
+
+def test_poisson_arrivals_sorted_and_in_universe(agnews):
+    rng = np.random.default_rng(0)
+    test = agnews.subset_indices("test")
+    arr = poisson_arrivals(rng, 25.0, 5.0, test, repeat_frac=0.5)
+    ts = [t for t, _ in arr]
+    assert ts == sorted(ts) and all(0 <= t < 5.0 for t in ts)
+    assert all(int(q) in set(test.tolist()) for _, q in arr)

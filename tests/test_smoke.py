@@ -1,0 +1,23 @@
+"""Slow smoke target: tools/smoke.sh runs the quickstart, the tiny real pool
+(small step count) and the online serving CLI end-to-end.
+
+Deselected by default (pytest.ini adds ``-m "not slow"``); run with::
+
+    PYTHONPATH=src python -m pytest -m slow tests/test_smoke.py
+"""
+import os
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_smoke_script():
+    out = subprocess.run(["bash", os.path.join(ROOT, "tools", "smoke.sh")],
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "Routing stage" in out.stdout          # quickstart ran
+    assert "fitting Robatch on the live pool" in out.stdout   # tiny pool ran
+    assert "smoke: OK" in out.stdout

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI-friendly smoke target: exercises the three entry points end-to-end with
+# shrunken instances —
+#   1. the offline RoBatch pipeline on the calibrated simulator (quickstart),
+#   2. the REAL tiny pool (src/repro/configs/tiny_pool.py) trained under a
+#      small step count, scheduled offline AND streamed online,
+#   3. the online serving CLI over the simulator.
+# Wired into the suite as a slow-marked test:
+#   PYTHONPATH=src python -m pytest -m slow tests/test_smoke.py
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python examples/quickstart.py agnews qwen3 \
+    --n-train 192 --n-val 48 --n-test 96 --coreset 32
+
+python examples/serve_pool.py --steps "${SMOKE_STEPS:-60}" \
+    --n-train 16 --n-test 16 --coreset 8 \
+    --online-seconds 4 --online-qps 4
+
+python -m repro.launch.serve online --qps 20 --duration 5 \
+    --n-train 128 --coreset 32
+
+echo "smoke: OK"
