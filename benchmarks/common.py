@@ -1,5 +1,10 @@
-"""Shared benchmark infrastructure: cached fitted pipelines, budget levels,
-CSV emission (`name,us_per_call,derived`)."""
+"""Shared benchmark infrastructure: cached fitted gateways, budget levels,
+CSV emission (`name,us_per_call,derived`).
+
+Experiments are declared as :class:`repro.api.RunSpec`s and fitted through
+the :class:`repro.api.Gateway`; ``setup`` keeps its legacy
+``(wl, pool, rb)`` return shape for the figure scripts that still drive
+``Robatch`` directly."""
 from __future__ import annotations
 
 import functools
@@ -7,27 +12,36 @@ import json
 import os
 import time
 
-import numpy as np
-
-from repro.core import CostModel, Robatch, execute
-from repro.data import make_simulated_pool, make_workload
+from repro.api import Gateway, PoolSpec, RunSpec
+from repro.core import Robatch
 
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 
 
 @functools.lru_cache(maxsize=32)
+def setup_gateway(task: str, family: str = "qwen3", router: str = "mlp",
+                  coreset: str = "kcenter", coreset_size: int = 256,
+                  scaling_fit: str = "piecewise", seed: int = 0) -> Gateway:
+    """Fitted Gateway over the simulated pool (cached across benchmarks);
+    every policy requested from it shares one modeling stage."""
+    n_train, n_val, n_test = (512, 128, 256) if QUICK else (2048, 512, 1024)
+    spec = RunSpec(
+        pool=PoolSpec(task=task, family=family, n_train=n_train, n_val=n_val,
+                      n_test=n_test, seed=seed),
+        router=router, coreset_method=coreset, coreset_size=coreset_size,
+        scaling_fit=scaling_fit, seed=seed)
+    return Gateway.from_spec(spec).fit()
+
+
 def setup(task: str, family: str = "qwen3", router: str = "mlp",
           coreset: str = "kcenter", coreset_size: int = 256,
           scaling_fit: str = "piecewise", seed: int = 0):
-    """Workload + pool + fitted Robatch (cached across benchmarks)."""
-    n_train, n_val, n_test = (512, 128, 256) if QUICK else (2048, 512, 1024)
-    wl = make_workload(task, n_train=n_train, n_val=n_val, n_test=n_test, seed=seed)
-    pool = make_simulated_pool(family)
-    rb = Robatch(pool, wl, router_kind=router, coreset_method=coreset,
-                 coreset_size=min(coreset_size, n_train // 2),
-                 scaling_fit=scaling_fit, seed=seed).fit()
-    return wl, pool, rb
+    """Workload + pool + fitted Robatch (legacy shape, same cached gateway)."""
+    gw = setup_gateway(task, family=family, router=router, coreset=coreset,
+                       coreset_size=coreset_size, scaling_fit=scaling_fit,
+                       seed=seed)
+    return gw.wl, gw.pool, gw.robatch
 
 
 def fixed_b_cost_levels(rb: Robatch, test_idx, bs=(16, 8, 4, 1)):

@@ -2,21 +2,29 @@
 
 Protocol (§6.2): baselines run at fixed b ∈ {16, 8, 4, 1} (four cost levels);
 Robatch is given the min and max actual baseline cost at each level as
-budgets.  The x-axis is actual spent cost."""
+budgets.  The x-axis is actual spent cost.
+
+Every method is a registered policy invoked through the shared
+:class:`repro.api.Gateway`, so the whole figure reuses one modeling stage per
+(task, family) and adding a strategy to the comparison is one
+``(name, params)`` row below."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import QUICK, emit, save, setup
-from repro.core import execute, execute_plan
-from repro.core.baselines import (
-    batcher_assignment_plan, frugalgpt_execute, obp_plan, routellm_assignment,
-)
+from benchmarks.common import QUICK, emit, save, setup_gateway
 
 TASKS = ["agnews", "gsm8k", "mmlu", "snli", "mrpc", "imdb"]
 FAMILIES = ["qwen3", "gemma3"]
+
+# display name -> registry name; every baseline runs at (tau=0.5, b=level)
+BASELINES = [
+    ("RouteLLM", "routellm"),
+    ("FrugalGPT", "frugalgpt"),
+    ("BATCHER-SIM", "batcher-sim"),
+    ("BATCHER-DIV", "batcher-div"),
+    ("OBP", "obp"),
+]
 
 
 def run(tasks=None, families=None):
@@ -26,35 +34,18 @@ def run(tasks=None, families=None):
     t0 = time.perf_counter()
     for family in families:
         for task in tasks:
-            wl, pool, rb = setup(task, family=family)
-            test = wl.subset_indices("test")
+            gw = setup_gateway(task, family=family)
+            test = gw.wl.subset_indices("test")
             for b in [16, 8, 4, 1]:
                 level_costs = []
-                # RouteLLM: threshold mid-sweep at this batch size
-                for tau in [0.5]:
-                    out = execute(pool, wl, routellm_assignment(rb, test, tau=tau, b=b))
-                    rows.append(dict(family=family, task=task, method="RouteLLM",
+                for method, name in BASELINES:
+                    out = gw.submit(test, policy=name, tau=0.5, b=b)
+                    rows.append(dict(family=family, task=task, method=method,
                                      level=b, cost=out.exact_cost, acc=out.accuracy))
                     level_costs.append(out.exact_cost)
-                out = frugalgpt_execute(rb, test, tau=0.5, b=b)
-                rows.append(dict(family=family, task=task, method="FrugalGPT",
-                                 level=b, cost=out.exact_cost, acc=out.accuracy))
-                level_costs.append(out.exact_cost)
-                for mode, name in [("sim", "BATCHER-SIM"), ("div", "BATCHER-DIV")]:
-                    _, plan = batcher_assignment_plan(rb, test, tau=0.5, b=b, mode=mode)
-                    out = execute_plan(pool, wl, plan, test)
-                    rows.append(dict(family=family, task=task, method=name,
-                                     level=b, cost=out.exact_cost, acc=out.accuracy))
-                    level_costs.append(out.exact_cost)
-                _, plan = obp_plan(rb, test, tau=0.5, target_b=b)
-                out = execute_plan(pool, wl, plan, test)
-                rows.append(dict(family=family, task=task, method="OBP",
-                                 level=b, cost=out.exact_cost, acc=out.accuracy))
-                level_costs.append(out.exact_cost)
                 # Robatch at the level's min and max actual cost as budgets
                 for tag, budget in [("min", min(level_costs)), ("max", max(level_costs))]:
-                    res = rb.schedule(test, budget)
-                    out = execute(pool, wl, res.assignment)
+                    out = gw.submit(test, budget=budget, policy="robatch")
                     rows.append(dict(family=family, task=task, method=f"Robatch-{tag}",
                                      level=b, cost=out.exact_cost, acc=out.accuracy))
     dt = time.perf_counter() - t0

@@ -1,37 +1,37 @@
 """Fig. 8 — ablations: full Robatch vs Router-Only vs Batch-Only (cheap /
-middle / expensive model), on AGNews, GSM8K, IMDB."""
+middle / expensive model), on AGNews, GSM8K, IMDB — all as registered
+policies through the shared Gateway."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, save, setup
-from repro.core import execute
-from repro.core.baselines import batch_only, router_only
+from benchmarks.common import emit, save, setup_gateway
 
 
 def run():
     rows = []
     t0 = time.perf_counter()
     for task in ["agnews", "gsm8k", "imdb"]:
-        wl, pool, rb = setup(task)
-        test = wl.subset_indices("test")
-        cm = rb.cost_model
+        gw = setup_gateway(task)
+        test = gw.wl.subset_indices("test")
+        cm = gw.robatch.cost_model
         cheap = cm.single_model_cost(0, test, 1)
         exp = cm.single_model_cost(2, test, 1)
         budgets = np.linspace(cheap * 0.4, exp, 6)
-        variants = {"Robatch": rb, "Router-Only": router_only(rb)}
+        variants = [("Robatch", "robatch", {}),
+                    ("Router-Only", "router-only", {})]
         for k, tag in [(0, "cheap"), (1, "mid"), (2, "expensive")]:
-            variants[f"Batch-Only({tag})"] = batch_only(rb, k)
-        for name, variant in variants.items():
-            vpool = variant.pool
+            variants.append((f"Batch-Only({tag})", "batch-only", dict(model=k)))
+        for name, policy, params in variants:
+            pol = gw.policy(policy, **params)
             for budget in budgets:
-                res = variant.schedule(test, budget)
-                out = execute(vpool, wl, res.assignment)
+                plan = pol.plan(test, float(budget))
+                out = pol.commit(plan)
                 rows.append(dict(task=task, method=name, budget=float(budget),
                                  cost=out.exact_cost, acc=out.accuracy,
-                                 infeasible=res.infeasible))
+                                 infeasible=plan.schedule.infeasible))
     dt = time.perf_counter() - t0
     save("fig8_ablation", rows)
     for task in ["agnews", "gsm8k", "imdb"]:

@@ -1,23 +1,25 @@
 """Quickstart: Robatch end-to-end on a simulated pool in ~1 minute.
 
-    PYTHONPATH=src python examples/quickstart.py [task] [family]
+    PYTHONPATH=src python examples/quickstart.py [task] [family] [--policy NAME]
 
-Fits the modeling stage (router + coreset + batch-size calibration), then
-schedules the test workload at three budgets and executes the plan.  The
-``--n-train/--n-val/--n-test/--coreset`` flags shrink the instance for smoke
-runs (tools/smoke.sh).
+Declares the experiment as a :class:`repro.api.RunSpec`, fits the modeling
+stage once through the :class:`repro.api.Gateway`, then plans + commits the
+test workload at three budgets.  ``--policy`` swaps in any registered
+strategy (``repro.api.list_policies()``).  The ``--n-train/--n-val/--n-test/
+--coreset`` flags shrink the instance for smoke runs (tools/smoke.sh).
 """
 import argparse
 
-from repro.core import Robatch, execute
+from repro.api import Gateway, PolicySpec, PoolSpec, RunSpec, list_policies
+from repro.core import execute
 from repro.core.baselines import single_model_assignment
-from repro.data import make_simulated_pool, make_workload
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("task", nargs="?", default="agnews")
     ap.add_argument("family", nargs="?", default="qwen3")
+    ap.add_argument("--policy", default="robatch", choices=list_policies())
     ap.add_argument("--n-train", type=int, default=2048)
     ap.add_argument("--n-val", type=int, default=512)
     ap.add_argument("--n-test", type=int, default=1024)
@@ -25,11 +27,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    print(f"== Robatch quickstart: {args.task} / {args.family} ==")
-    wl = make_workload(args.task, n_train=args.n_train, n_val=args.n_val,
-                       n_test=args.n_test, seed=args.seed)
-    pool = make_simulated_pool(args.family)
-    rb = Robatch(pool, wl, coreset_size=min(args.coreset, args.n_train // 2)).fit()
+    spec = RunSpec(
+        pool=PoolSpec(task=args.task, family=args.family, n_train=args.n_train,
+                      n_val=args.n_val, n_test=args.n_test, seed=args.seed),
+        policy=PolicySpec(args.policy),
+        coreset_size=args.coreset, seed=args.seed)
+
+    print(f"== Robatch quickstart: {args.task} / {args.family} "
+          f"(policy {args.policy}) ==")
+    gw = Gateway.from_spec(spec).fit()
+    rb, pool = gw.robatch, gw.pool
 
     print("\nModeling stage (per model): b_max, ternary-searched b_effect, ρ(b_eff):")
     for cal, m in zip(rb.calibrations, pool):
@@ -39,22 +46,24 @@ def main(argv=None):
     print(f"  profiling probes billed: {rb.profile.n_probes} "
           f"({rb.profile.billed_tokens / 1e6:.2f}M tokens)")
 
-    test = wl.subset_indices("test")
+    test = gw.wl.subset_indices("test")
     cm = rb.cost_model
     cheap = cm.single_model_cost(0, test, 1)
     exp = cm.single_model_cost(2, test, 1)
 
+    pol = gw.policy()
     print("\nRouting stage:")
     print(f"  {'budget':>10} {'accuracy':>9} {'spent':>9} {'upgrades':>9}")
     for budget in [cheap, (cheap + exp) / 2, exp]:
-        res = rb.schedule(test, budget)
-        out = execute(pool, wl, res.assignment)
+        plan = pol.plan(test, budget)
+        out = pol.commit(plan)
+        upgrades = plan.schedule.n_upgrades if plan.schedule is not None else 0
         print(f"  ${budget:9.4f} {out.accuracy:9.3f} ${out.exact_cost:8.4f} "
-              f"{res.n_upgrades:9d}")
+              f"{upgrades:9d}")
 
     print("\nReference points (single model, b=1):")
     for k, m in enumerate(pool):
-        out = execute(pool, wl, single_model_assignment(test, k, 1))
+        out = execute(pool, gw.wl, single_model_assignment(test, k, 1))
         print(f"  {m.name:12s} acc={out.accuracy:.3f} cost=${out.exact_cost:.4f}")
 
 

@@ -15,13 +15,15 @@ This is the full-stack counterpart of the paper's API experiments:
      budget, concurrent dispatch across the three live engines, response
      caching, circuit breaking.
 
-The pool/workload construction lives in :mod:`repro.serving.tinypool` (shared
-with benchmarks/online_throughput.py).  Accuracy-vs-batch-size degradation
-here is an emergent property of the trained models, not a simulator
-assumption.
+The pool/workload construction lives in :mod:`repro.serving.tinypool`
+(shared with benchmarks/online_throughput.py), declared here as a
+``PoolSpec(kind="tiny")`` and driven through the :class:`repro.api.Gateway`;
+``--policy`` swaps any registered strategy onto the same live pool.
+Accuracy-vs-batch-size degradation here is an emergent property of the
+trained models, not a simulator assumption.
 
     PYTHONPATH=src python examples/serve_pool.py [--steps 400] [--n-train 96] \
-        [--online-seconds 30]
+        [--online-seconds 30] [--policy robatch]
 """
 import argparse
 import functools
@@ -31,8 +33,7 @@ import numpy as np
 
 print = functools.partial(print, flush=True)  # noqa: A001 — visible progress
 
-from repro.core import Robatch, execute
-from repro.serving.tinypool import build_tiny_pool
+from repro.api import Gateway, PolicySpec, PoolSpec, RunSpec, list_policies
 
 
 def main():
@@ -41,6 +42,7 @@ def main():
     ap.add_argument("--n-train", type=int, default=48)
     ap.add_argument("--n-test", type=int, default=48)
     ap.add_argument("--coreset", type=int, default=16)
+    ap.add_argument("--policy", default="robatch", choices=list_policies())
     ap.add_argument("--online-seconds", type=float, default=0.0,
                     help="stream the test set through the online layer this long")
     ap.add_argument("--online-qps", type=float, default=8.0)
@@ -48,17 +50,21 @@ def main():
     ap.add_argument("--budget-x", type=float, default=3.0)
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
+    spec = RunSpec(
+        pool=PoolSpec(kind="tiny", steps=args.steps, n_train=args.n_train,
+                      n_test=args.n_test, seed=0),
+        policy=PolicySpec(args.policy),
+        router="knn", coreset_size=args.coreset, grid_multiple=2)
 
-    # ---- 1–2. train + serve the pool ---------------------------------------
-    wl, pool, fmt = build_tiny_pool(rng, steps=args.steps,
-                                    n_train=args.n_train, n_test=args.n_test)
+    # ---- 1–2. train + serve the pool (PoolSpec materialization) -------------
+    gw = Gateway.from_spec(spec)
+    pool, wl = gw.pool, gw.wl
 
-    # ---- 3. Robatch over the live pool --------------------------------------
+    # ---- 3. the modeling stage over the live pool ---------------------------
     print("\nfitting Robatch on the live pool (real batched invocations)...")
     t0 = time.time()
-    rb = Robatch(pool, wl, coreset_size=args.coreset, router_kind="knn",
-                 grid_multiple=2).fit()
+    gw.fit()
+    rb = gw.robatch
     print(f"modeling stage done in {time.time() - t0:.0f}s; "
           f"probes={rb.profile.n_probes} billed_tokens={rb.profile.billed_tokens}")
     for cal, m in zip(rb.calibrations, pool):
@@ -70,33 +76,33 @@ def main():
     budgets = [cm.single_model_cost(0, test, 1),
                cm.single_model_cost(1, test, 1),
                cm.single_model_cost(2, test, 1)]
+    pol = gw.policy()
     print("\nserving the test workload through the scheduled plan:")
     for budget in budgets:
-        res = rb.schedule(test, budget)
-        out = execute(pool, wl, res.assignment)
+        plan = pol.plan(test, budget)
+        out = pol.commit(plan)
         states = {}
-        for k, b in zip(res.assignment.model, res.assignment.batch):
-            states[(pool[k].name, int(b))] = states.get((pool[k].name, int(b)), 0) + 1
+        for state, members in plan.groups or []:
+            key = (pol.exec_pool[state.model].name, int(state.batch))
+            states[key] = states.get(key, 0) + len(members)
         print(f"  budget ${budget:.5f}: acc={out.accuracy:.3f} "
               f"spent=${out.exact_cost:.5f} states={states}")
 
     # ---- 4. online streaming over the live pool -----------------------------
     if args.online_seconds > 0:
-        from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
-                                          poisson_arrivals)
+        from repro.serving.online import OnlineConfig, poisson_arrivals
 
+        rng = np.random.default_rng(0)
         base = float(cm.state_cost(0, rb.calibrations[0].b_effect, test).mean())
         rate = args.online_qps * base * args.budget_x
-        srv = OnlineRobatchServer(rb, pool, wl, OnlineConfig(
-            budget_per_s=rate, window_s=args.online_window))
         arrivals = poisson_arrivals(rng, args.online_qps, args.online_seconds,
                                     test, repeat_frac=0.25)
         print(f"\nonline: streaming {len(arrivals)} arrivals at "
               f"{args.online_qps} qps through the live engines "
               f"(window {args.online_window}s, budget ${rate:.6f}/s)...")
         t0 = time.time()
-        stats = srv.run(arrivals)
-        srv.close()
+        stats = gw.serve(arrivals, OnlineConfig(
+            budget_per_s=rate, window_s=args.online_window))
         print(stats.summary())
         print(f"(wall clock {time.time() - t0:.0f}s; latencies above are "
               f"virtual-stream seconds incl. measured engine time)")

@@ -1,0 +1,26 @@
+"""Unified control-plane API: policy registry, declarative specs, gateway.
+
+The three pieces (see docs/architecture.md, docs/policies.md):
+
+* :mod:`repro.api.policy` — the :class:`SchedulingPolicy` protocol, the
+  :class:`Plan` it produces, and the ``@register_policy`` registry.
+* :mod:`repro.api.policies` — RoBatch (heap + vectorized), the five adapted
+  baselines and both ablations, ported onto the protocol.  Importing
+  :mod:`repro.api` registers all of them.
+* :mod:`repro.api.specs` / :mod:`repro.api.gateway` — ``RunSpec`` declarative
+  experiments and the ``Gateway`` facade running them offline or online.
+"""
+
+from repro.api.policy import (
+    Plan, SchedulingPolicy, UnknownPolicyError, amortized_group_costs,
+    fit_artifacts, get_policy, list_policies, register_policy,
+)
+from repro.api import policies as _policies  # noqa: F401 — registers built-ins
+from repro.api.specs import PolicySpec, PoolSpec, RunSpec
+from repro.api.gateway import Gateway
+
+__all__ = [
+    "Plan", "SchedulingPolicy", "UnknownPolicyError", "amortized_group_costs",
+    "fit_artifacts", "get_policy", "list_policies", "register_policy",
+    "PolicySpec", "PoolSpec", "RunSpec", "Gateway",
+]

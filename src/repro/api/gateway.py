@@ -1,0 +1,120 @@
+"""Gateway — one facade over the whole control plane, offline and online.
+
+::
+
+    gw = Gateway.from_spec(RunSpec(...)).fit()        # pool + artifacts, once
+    out = gw.submit(test_idx, budget)                 # offline commit
+    out = gw.submit(test_idx, policy="routellm", tau=0.6, b=8)
+    stats = gw.serve(arrivals, OnlineConfig(...))     # streaming (PR-1 layer)
+
+One modeling stage (router, calibrations, profiling cache) is fitted per
+gateway and shared by every policy requested from it, so sweeping strategies
+(fig7/fig8) never re-bills the offline evaluation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.policy import Plan, SchedulingPolicy, get_policy
+from repro.api.specs import RunSpec
+from repro.core.robatch import ExecutionOutcome, Robatch
+
+__all__ = ["Gateway"]
+
+
+class Gateway:
+    """Facade binding a (pool, workload) to the policy registry.
+
+    ``artifacts`` is the shared fitted :class:`Robatch` bundle; pass a
+    pre-fitted one to reuse an existing modeling stage (the parity tests do),
+    otherwise :meth:`fit` fits it from the spec's hyper-parameters.
+    """
+
+    def __init__(self, pool: Sequence, wl, spec: Optional[RunSpec] = None,
+                 artifacts: Optional[Robatch] = None):
+        self.pool = list(pool)
+        self.wl = wl
+        self.spec = spec if spec is not None else RunSpec()
+        self.robatch = artifacts            # the shared modeling artifacts
+        self.server = None                  # last online server (post-serve)
+        self._policies: dict = {}
+
+    # ----------------------------------------------------------- construction
+    @classmethod
+    def from_spec(cls, spec: Union[RunSpec, dict, str]) -> "Gateway":
+        """Build the pool/workload a spec describes (dict and JSON accepted)."""
+        if isinstance(spec, str):
+            spec = RunSpec.from_json(spec)
+        elif isinstance(spec, dict):
+            spec = RunSpec.from_dict(spec)
+        wl, pool = spec.pool.build()
+        return cls(pool, wl, spec=spec)
+
+    def fit(self) -> "Gateway":
+        """Fit the shared modeling stage once (no-op when already fitted)."""
+        if self.robatch is None:
+            kw = self.spec.robatch_kwargs()
+            n_train = len(self.wl.subset_indices("train"))
+            kw["coreset_size"] = min(kw["coreset_size"], max(1, n_train // 2))
+            self.robatch = Robatch(self.pool, self.wl, **kw).fit()
+        return self
+
+    # ---------------------------------------------------------------- policies
+    def policy(self, name: Optional[str] = None, **params) -> SchedulingPolicy:
+        """A fitted policy sharing this gateway's artifacts.
+
+        ``name=None`` uses the spec's policy (params merged over the spec's);
+        an explicit name uses exactly the given params.  Instances are cached
+        per (name, params)."""
+        self.fit()
+        if name is None:
+            name = self.spec.policy.name
+            merged = dict(self.spec.policy.params)
+            merged.update(params)
+            params = merged
+        try:
+            key = (name, tuple(sorted(params.items())))
+            cached = self._policies.get(key)
+        except TypeError:                    # unhashable param → skip cache
+            key, cached = None, None
+        if cached is None:
+            cached = get_policy(name)(**params).fit(self.pool, self.wl,
+                                                    artifacts=self.robatch)
+            if key is not None:
+                self._policies[key] = cached
+        return cached
+
+    # ----------------------------------------------------------------- offline
+    def plan(self, query_idx: Optional[np.ndarray] = None,
+             budget: Optional[float] = None, policy: Optional[str] = None,
+             **params) -> Plan:
+        """Plan without committing (inspect the decisions / Pareto stats)."""
+        idx = self.wl.subset_indices("test") if query_idx is None else query_idx
+        return self.policy(policy, **params).plan(idx, budget)
+
+    def submit(self, query_idx: Optional[np.ndarray] = None,
+               budget: Optional[float] = None, policy: Optional[str] = None,
+               **params) -> ExecutionOutcome:
+        """Offline commit: plan the query set and execute the batch plan."""
+        idx = self.wl.subset_indices("test") if query_idx is None else query_idx
+        return self.policy(policy, **params).run(idx, budget)
+
+    # ------------------------------------------------------------------ online
+    def serve(self, arrivals, config, policy: Optional[str] = None,
+              pool: Optional[Sequence] = None, **params):
+        """Stream an arrival list through the online serving layer (PR 1)
+        under the selected policy; returns :class:`ServerStats` and leaves the
+        drained server on ``self.server`` for inspection."""
+        from repro.serving.online import OnlineRobatchServer
+
+        pol = self.policy(policy, **params)
+        srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
+                                  self.wl, config)
+        try:
+            stats = srv.run(arrivals)
+        finally:
+            srv.close()
+        self.server = srv
+        return stats

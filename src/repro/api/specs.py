@@ -1,0 +1,148 @@
+"""Declarative experiment specs with dict/JSON round-trip.
+
+An experiment is data, not wiring code: a :class:`RunSpec` names the pool
+(:class:`PoolSpec` — calibrated simulator family or the trained tiny real
+pool), the strategy (:class:`PolicySpec` — a registry name plus params) and
+the shared modeling-stage hyper-parameters.  ``Gateway.from_spec`` turns one
+into a runnable system; ``serve --spec run.json`` does the same from the
+command line.
+
+Round-trip contract (tested in ``tests/test_api.py``)::
+
+    spec == RunSpec.from_json(spec.to_json())
+    spec == RunSpec.from_dict(spec.to_dict())
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field, fields
+
+__all__ = ["PoolSpec", "PolicySpec", "RunSpec"]
+
+
+def _from_known_fields(cls, d: dict):
+    known = {f.name for f in fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"{cls.__name__}: unknown spec keys {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    return cls(**d)
+
+
+@dataclass
+class PoolSpec:
+    """Where the pool and its workload come from.
+
+    ``kind="simulated"`` — the calibrated simulator (`repro.data.simulator`)
+    over a benchmark workload; subsumes the ad-hoc construction previously
+    wired by ``benchmarks/common.py`` and the serve CLI's flag soup.
+    ``kind="tiny"`` — the REAL trained tiny-s/m/l pool
+    (`repro.serving.tinypool`), served by the continuous-batching engine.
+    """
+
+    kind: str = "simulated"          # simulated | tiny
+    family: str = "qwen3"            # simulated: POOL_SPECS family
+    task: str = "agnews"             # simulated: workload benchmark name
+    n_train: int = 2048
+    n_val: int = 512
+    n_test: int = 1024
+    seed: int = 0
+    steps: int = 300                 # tiny: LM training steps
+
+    def build(self):
+        """Materialize → (workload, pool)."""
+        if self.kind == "simulated":
+            from repro.data import make_simulated_pool, make_workload
+
+            wl = make_workload(self.task, n_train=self.n_train, n_val=self.n_val,
+                               n_test=self.n_test, seed=self.seed)
+            return wl, make_simulated_pool(self.family)
+        if self.kind == "tiny":
+            import numpy as np
+
+            from repro.serving.tinypool import build_tiny_pool
+
+            rng = np.random.default_rng(self.seed)
+            wl, pool, _fmt = build_tiny_pool(rng, steps=self.steps,
+                                             n_train=self.n_train,
+                                             n_test=self.n_test)
+            return wl, pool
+        raise ValueError(f"PoolSpec.kind must be 'simulated' or 'tiny', "
+                         f"got {self.kind!r}")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PoolSpec":
+        return _from_known_fields(cls, dict(d))
+
+
+@dataclass
+class PolicySpec:
+    """A registry name plus its constructor params."""
+
+    name: str = "robatch"
+    params: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicySpec":
+        return _from_known_fields(cls, dict(d))
+
+    def build(self):
+        """Instantiate the (unfitted) policy from the registry."""
+        from repro.api.policy import get_policy
+
+        return get_policy(self.name)(**self.params)
+
+
+@dataclass
+class RunSpec:
+    """One full experiment: pool + policy + shared modeling hyper-parameters
+    (§6.1.4 defaults — these configure the once-fitted artifact bundle that
+    every policy reuses)."""
+
+    pool: PoolSpec = field(default_factory=PoolSpec)
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    router: str = "mlp"              # mlp | knn
+    knn_k: int = 16
+    coreset_method: str = "kcenter"
+    coreset_size: int = 256
+    scaling_fit: str = "piecewise"   # piecewise | powerlaw | knn
+    epsilon: float = 0.01
+    grid_multiple: int = 4
+    seed: int = 0
+
+    def robatch_kwargs(self) -> dict:
+        """Modeling-stage kwargs for :class:`repro.core.robatch.Robatch`."""
+        return dict(router_kind=self.router, knn_k=self.knn_k,
+                    coreset_method=self.coreset_method,
+                    coreset_size=self.coreset_size,
+                    scaling_fit=self.scaling_fit, epsilon=self.epsilon,
+                    grid_multiple=self.grid_multiple, seed=self.seed)
+
+    # ------------------------------------------------------------ round-trip
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["pool"] = self.pool.to_dict()
+        d["policy"] = self.policy.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunSpec":
+        d = dict(d)
+        if "pool" in d:
+            d["pool"] = PoolSpec.from_dict(d["pool"])
+        if "policy" in d:
+            d["policy"] = PolicySpec.from_dict(d["policy"])
+        return _from_known_fields(cls, d)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSpec":
+        return cls.from_dict(json.loads(text))

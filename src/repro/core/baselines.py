@@ -22,8 +22,8 @@ from repro.data.workload import Workload
 
 __all__ = [
     "single_model_assignment", "vanilla_router_assignment", "routellm_assignment",
-    "frugalgpt_execute", "batcher_assignment_plan", "obp_plan",
-    "router_only", "batch_only", "kmeans",
+    "frugalgpt_execute", "batcher_group", "batcher_assignment_plan",
+    "obp_group", "obp_plan", "router_only", "batch_only", "kmeans",
 ]
 
 
@@ -151,16 +151,17 @@ def frugalgpt_execute(rb: Robatch, query_idx: np.ndarray, tau: float, b: int) ->
 # BATCHER-SIM / BATCHER-DIV (adapted): router assignment + clustered batching
 # ---------------------------------------------------------------------------
 
-def batcher_assignment_plan(rb: Robatch, query_idx: np.ndarray, tau: float, b: int,
-                            mode: str = "sim", seed: int = 0):
-    """Model per query from Robatch's router (threshold τ); batches per model
-    built from k-means clusters: SIM fills batches within a cluster, DIV
-    round-robins across clusters (Fan et al., ICDE'24)."""
-    a = vanilla_router_assignment(rb, query_idx, tau, b)
+def batcher_group(wl: Workload, a: Assignment, b: int, mode: str = "sim",
+                  seed: int = 0) -> list[tuple[State, np.ndarray]]:
+    """Batches per model from k-means clusters over a fixed model assignment:
+    SIM fills batches within a cluster, DIV round-robins across clusters
+    (Fan et al., ICDE'24).  Shared by the legacy entry point and the
+    ``batcher-sim``/``batcher-div`` registered policies (offline and per
+    online window)."""
     plan = []
     for k in np.unique(a.model):
         members = a.query_idx[a.model == k]
-        emb = rb.wl.embeddings[members]
+        emb = wl.embeddings[members]
         n_clusters = max(1, len(members) // max(b, 1))
         cl = kmeans(emb, n_clusters, seed=seed)
         if mode == "sim":
@@ -176,24 +177,31 @@ def batcher_assignment_plan(rb: Robatch, query_idx: np.ndarray, tau: float, b: i
         ordered = members[order]
         for s in range(0, len(ordered), b):
             plan.append((State(int(k), b), ordered[s:s + b]))
-    return a, plan
+    return plan
+
+
+def batcher_assignment_plan(rb: Robatch, query_idx: np.ndarray, tau: float, b: int,
+                            mode: str = "sim", seed: int = 0):
+    """Model per query from Robatch's router (threshold τ), then
+    :func:`batcher_group` clustering per model."""
+    a = vanilla_router_assignment(rb, query_idx, tau, b)
+    return a, batcher_group(rb.wl, a, b, mode=mode, seed=seed)
 
 
 # ---------------------------------------------------------------------------
 # OBP (adapted): adaptive clustering + refinement, variable batch sizes
 # ---------------------------------------------------------------------------
 
-def obp_plan(rb: Robatch, query_idx: np.ndarray, tau: float, target_b: int,
-             seed: int = 0):
-    """Optimized Batch Prompting: cluster related queries, refine groups to
-    balance affinity / context length (Ji et al., VLDB'25 adaptation)."""
-    wl = rb.wl
-    a = vanilla_router_assignment(rb, query_idx, tau, target_b)
+def obp_group(wl: Workload, pool, a: Assignment, target_b: int,
+              seed: int = 0) -> list[tuple[State, np.ndarray]]:
+    """OBP grouping over a fixed model assignment: cluster related queries,
+    refine groups to balance affinity / context length (Ji et al., VLDB'25
+    adaptation).  Shared by the legacy entry point and the ``obp`` policy."""
     plan = []
     for k in np.unique(a.model):
         members = a.query_idx[a.model == k]
         emb = wl.embeddings[members]
-        ctx = rb.pool[k].context_len
+        ctx = pool[k].context_len
         n_clusters = max(1, len(members) // max(target_b, 1))
         cl = kmeans(emb, n_clusters, seed=seed)
         for j in np.unique(cl):
@@ -205,7 +213,15 @@ def obp_plan(rb: Robatch, query_idx: np.ndarray, tau: float, target_b: int,
             for s in range(0, len(group), cap):
                 chunk = group[s:s + cap]
                 plan.append((State(int(k), len(chunk)), chunk))
-    return a, plan
+    return plan
+
+
+def obp_plan(rb: Robatch, query_idx: np.ndarray, tau: float, target_b: int,
+             seed: int = 0):
+    """Optimized Batch Prompting: router model assignment, then
+    :func:`obp_group` adaptive clustering with variable batch sizes."""
+    a = vanilla_router_assignment(rb, query_idx, tau, target_b)
+    return a, obp_group(rb.wl, rb.pool, a, target_b, seed=seed)
 
 
 # ---------------------------------------------------------------------------

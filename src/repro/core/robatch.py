@@ -62,7 +62,7 @@ def execute_plan(pool, wl: Workload, plan, query_idx: np.ndarray) -> ExecutionOu
     )
 
 
-def execute(pool, wl: Workload, a: Assignment, cost_model: Optional[CostModel] = None) -> ExecutionOutcome:
+def execute(pool, wl: Workload, a: Assignment) -> ExecutionOutcome:
     """Commit an assignment: pack per-state batches, invoke, bill actual tokens."""
     return execute_plan(pool, wl, group_into_batches(a), a.query_idx)
 
@@ -136,35 +136,48 @@ class Robatch:
         return self
 
     # --------------------------------------------------------------- stage 2
-    def candidate_space(self, query_idx: np.ndarray) -> CandidateSpace:
+    def candidate_space(self, query_idx: np.ndarray,
+                        timings: Optional[dict] = None) -> CandidateSpace:
+        """Eq. 8/13 candidate space for a query set.
+
+        When ``timings`` is passed, the §6.5 stage breakdown is written into
+        it (``router``: û prediction, ``proxy``: space assembly).
+        """
         assert self.router is not None, "call fit() first"
-        emb = self.wl.embeddings[np.asarray(query_idx)]
-        u_hat_1 = self.router.predict(emb)
-        return build_candidate_space(self.cost_model, self.calibrations,
-                                     query_idx, u_hat_1, query_emb=emb)
-
-    def schedule(self, query_idx: np.ndarray, budget: float,
-                 scheduler: str = "heap") -> ScheduleResult:
-        """Routing stage: greedy Pareto climb under the budget (Alg. 1).
-        ``scheduler="vectorized"`` uses the beyond-paper round-based variant
-        (near-identical objective, much faster at large |Q| — fig11)."""
-        space = self.candidate_space(query_idx)
-        fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
-        return fn(space, query_idx, budget)
-
-    def schedule_timed(self, query_idx: np.ndarray, budget: float):
-        """Like ``schedule`` but returns the §6.5 latency breakdown."""
         t0 = time.perf_counter()
         emb = self.wl.embeddings[np.asarray(query_idx)]
         u_hat_1 = self.router.predict(emb)
         t1 = time.perf_counter()
         space = build_candidate_space(self.cost_model, self.calibrations,
                                       query_idx, u_hat_1, query_emb=emb)
-        t2 = time.perf_counter()
-        res = greedy_schedule(space, query_idx, budget)
-        t3 = time.perf_counter()
-        timings = {"router": t1 - t0, "proxy": t2 - t1, "greedy": t3 - t2,
-                   "total": t3 - t0}
+        if timings is not None:
+            timings["router"] = t1 - t0
+            timings["proxy"] = time.perf_counter() - t1
+        return space
+
+    def schedule(self, query_idx: np.ndarray, budget: float,
+                 scheduler: str = "heap",
+                 timings: Optional[dict] = None) -> ScheduleResult:
+        """Routing stage: greedy Pareto climb under the budget (Alg. 1).
+        ``scheduler="vectorized"`` uses the beyond-paper round-based variant
+        (near-identical objective, much faster at large |Q| — fig11).
+        ``timings`` optionally collects the §6.5 router/proxy/greedy/total
+        latency breakdown."""
+        space = self.candidate_space(query_idx, timings=timings)
+        fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
+        t0 = time.perf_counter()
+        res = fn(space, query_idx, budget)
+        if timings is not None:
+            timings["greedy"] = time.perf_counter() - t0
+            timings["total"] = (timings.get("router", 0.0)
+                                + timings.get("proxy", 0.0) + timings["greedy"])
+        return res
+
+    def schedule_timed(self, query_idx: np.ndarray, budget: float,
+                       scheduler: str = "heap"):
+        """``schedule`` plus the §6.5 latency breakdown (same code path)."""
+        timings: dict = {}
+        res = self.schedule(query_idx, budget, scheduler=scheduler, timings=timings)
         return res, timings
 
     # ------------------------------------------------------------- lifecycle

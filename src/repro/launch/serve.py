@@ -5,17 +5,25 @@ serve a batched-prompt workload (the original single-model path)::
 
     PYTHONPATH=src python -m repro.launch.serve engine --arch tiny-m --requests 12
 
-``online`` — the full online serving layer: fit RoBatch on a simulated pool,
-then stream a Poisson arrival workload through windowed scheduling, a rolling
-budget, the response cache and the circuit breakers::
+``online`` — the full online serving layer: build the pool a spec describes,
+fit the modeling stage once, then stream a Poisson arrival workload through
+the pluggable policy under a rolling budget, the response cache and the
+circuit breakers::
 
     PYTHONPATH=src python -m repro.launch.serve online --task agnews --qps 40 \
         --duration 20 --window 0.25 --budget-x 3.0
+    PYTHONPATH=src python -m repro.launch.serve online --policy routellm
+    PYTHONPATH=src python -m repro.launch.serve online --spec run.json
 
-Legacy flag-only invocations (no subcommand) default to ``engine`` mode, so
-existing scripts keep working.
+``--policy`` selects any name from the policy registry
+(``repro.api.list_policies()``); ``--spec`` takes a ``RunSpec`` JSON (a file
+path or an inline JSON string) and subsumes the individual flags.  Legacy
+flag-only invocations (no subcommand) default to ``engine`` mode, and the
+pre-spec flags (``--task``/``--family``/``--n-train``/``--coreset``/
+``--seed``) keep working as a deprecation shim that overrides the spec.
 """
 import argparse
+import os
 import sys
 import time
 
@@ -73,10 +81,55 @@ def engine_main(argv):
               f"{tok.decode(r.out_tokens)[:48]!r}")
 
 
+def _online_spec(args):
+    """Resolve the RunSpec: --spec JSON (file or inline) as the base, legacy
+    per-field flags as a deprecation shim layered on top."""
+    from repro.api import PolicySpec, PoolSpec, RunSpec
+
+    legacy = {k: v for k, v in [("task", args.task), ("family", args.family),
+                                ("n_train", args.n_train), ("coreset", args.coreset),
+                                ("seed", args.seed)] if v is not None}
+    if args.spec:
+        if args.spec.lstrip().startswith("{"):
+            text = args.spec                 # inline JSON
+        else:
+            with open(args.spec) as f:       # else a file path: a typo should
+                text = f.read()              # fail as file-not-found, not JSON
+        spec = RunSpec.from_json(text)
+        if legacy:
+            print(f"serve online: legacy flags {sorted(legacy)} override the "
+                  f"spec (deprecated; prefer editing --spec)")
+            if "task" in legacy:
+                spec.pool.task = legacy["task"]
+            if "family" in legacy:
+                spec.pool.family = legacy["family"]
+            if "n_train" in legacy:
+                spec.pool.n_train = legacy["n_train"]
+            if "coreset" in legacy:
+                spec.coreset_size = legacy["coreset"]
+            if "seed" in legacy:
+                spec.seed = spec.pool.seed = legacy["seed"]
+    else:
+        spec = RunSpec(
+            pool=PoolSpec(task=legacy.get("task", "agnews"),
+                          family=legacy.get("family", "qwen3"),
+                          n_train=legacy.get("n_train", 512), n_val=128,
+                          n_test=512, seed=legacy.get("seed", 0)),
+            router="knn", coreset_size=legacy.get("coreset", 64),
+            seed=legacy.get("seed", 0))
+    if args.policy is not None:
+        spec.policy = PolicySpec(args.policy)
+    return spec
+
+
 def online_main(argv):
     ap = argparse.ArgumentParser(prog="serve online")
-    ap.add_argument("--task", default="agnews", help="workload benchmark name")
-    ap.add_argument("--family", default="qwen3", help="simulated pool family")
+    ap.add_argument("--policy", default=None,
+                    help="registered policy name (repro.api.list_policies())")
+    ap.add_argument("--spec", default=None,
+                    help="RunSpec JSON — a file path or an inline JSON string")
+    ap.add_argument("--task", default=None, help="workload benchmark name")
+    ap.add_argument("--family", default=None, help="simulated pool family")
     ap.add_argument("--qps", type=float, default=40.0, help="offered load")
     ap.add_argument("--duration", type=float, default=20.0, help="stream length (s, virtual)")
     ap.add_argument("--window", type=float, default=0.25, help="admission window (s)")
@@ -84,54 +137,60 @@ def online_main(argv):
                     help="budget rate = qps × cheapest-state cost × this factor")
     ap.add_argument("--repeat-frac", type=float, default=0.2,
                     help="fraction of arrivals re-asking an earlier query (cache hits)")
-    ap.add_argument("--n-train", type=int, default=512)
-    ap.add_argument("--coreset", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-train", type=int, default=None)
+    ap.add_argument("--coreset", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
 
     import numpy as np
 
-    from repro.core import Robatch
-    from repro.data import BENCHMARKS, make_simulated_pool, make_workload
-    from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
+    from repro.api import Gateway, UnknownPolicyError, get_policy, list_policies
+    from repro.data import BENCHMARKS
+    from repro.serving.online import OnlineConfig, poisson_arrivals
 
     if args.qps <= 0:
         raise SystemExit("serve online: --qps must be positive")
-    if args.task not in BENCHMARKS:
-        raise SystemExit(f"serve online: unknown task {args.task!r}; "
+    spec = _online_spec(args)
+    if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
+        raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
-    wl = make_workload(args.task, n_train=args.n_train, n_val=128, n_test=512,
-                       seed=args.seed)
-    pool = make_simulated_pool(args.family)
-    print(f"fitting RoBatch on {args.task}/{args.family} "
-          f"({args.n_train} train, coreset {args.coreset})...")
-    rb = Robatch(pool, wl, coreset_size=args.coreset, router_kind="knn").fit()
+    try:
+        get_policy(spec.policy.name)
+    except UnknownPolicyError:
+        raise SystemExit(f"serve online: unknown policy {spec.policy.name!r}; "
+                         f"known: {list_policies()}")
 
-    test = wl.subset_indices("test")
+    gw = Gateway.from_spec(spec)
+    print(f"fitting RoBatch on {spec.pool.task}/{spec.pool.family} "
+          f"({spec.pool.n_train} train, coreset {spec.coreset_size})...")
+    gw.fit()
+    rb = gw.robatch
+
+    test = gw.wl.subset_indices("test")
     base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
     rate = args.qps * base * args.budget_x
     cfg = OnlineConfig(budget_per_s=rate, window_s=args.window)
-    srv = OnlineRobatchServer(rb, pool, wl, cfg)
-    rng = np.random.default_rng(args.seed)
+    rng = np.random.default_rng(spec.seed)
     arrivals = poisson_arrivals(rng, args.qps, args.duration, test,
                                 repeat_frac=args.repeat_frac)
-    print(f"streaming {len(arrivals)} arrivals at {args.qps} qps, "
-          f"window {args.window}s, budget ${rate:.6f}/s...")
-    stats = srv.run(arrivals)
-    srv.close()
+    print(f"streaming {len(arrivals)} arrivals at {args.qps} qps through "
+          f"policy={spec.policy.name}, window {args.window}s, "
+          f"budget ${rate:.6f}/s...")
+    stats = gw.serve(arrivals, cfg)
+    srv = gw.server
 
     print(stats.summary())
     by_model = {}
     for r in srv.completed:
         if r.model is not None and not r.cache_hit:
-            key = (pool[r.model].name, r.batch)
+            key = (srv.pool[r.model].name, r.batch)
             by_model[key] = by_model.get(key, 0) + 1
     print("dispatch mix (model, batch) -> queries:")
     for key in sorted(by_model, key=lambda t: (t[0], t[1] or 0)):
         print(f"  {key[0]:12s} b={key[1]}: {by_model[key]}")
     deferred = sum(w.n_deferred for w in stats.windows)
-    print(f"windows={len(stats.windows)} deferred={deferred} "
-          f"shed={sum(w.n_shed for w in stats.windows)} "
+    print(f"policy={spec.policy.name} windows={len(stats.windows)} "
+          f"deferred={deferred} shed={sum(w.n_shed for w in stats.windows)} "
           f"cache_entries={len(srv.cache)}")
 
 

@@ -6,11 +6,17 @@ The paper's routing stage (§5, Alg. 1) schedules a *fixed* query set against a
 over a live arrival stream:
 
     arrivals ──► admission window (deadline) ──► response cache
-        ──► windowed Alg. 1 against a token-bucket budget ($/s)
-        ──► batch packing (group_into_batches) ──► concurrent dispatch
+        ──► policy.plan_window(...) against a token-bucket budget ($/s)
+        ──► physical batch plan ──► concurrent dispatch
         ──► circuit breaking + rescheduling onto surviving models
 
 Design points:
+
+* **Pluggable policies.**  The per-window decision is any registered
+  :class:`repro.api.SchedulingPolicy` — the server only consumes
+  ``window_space`` (admission costs) and ``plan_window`` (the decision), so
+  RoBatch's windowed Alg. 1, the adapted baselines' budget-aware two-point
+  spaces and user strategies all serve interchangeably.
 
 * **Deadline windows.**  Requests accumulate for ``window_s`` seconds, then
   one scheduling round assigns every pending query a (model, batch) state.
@@ -45,8 +51,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.problem import group_into_batches
-from repro.core.scheduler import greedy_schedule_window, restrict_space, take_rows
+from repro.core.scheduler import restrict_space, take_rows
 from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
@@ -180,7 +185,7 @@ class ServerStats:
     windows: list = field(default_factory=list)
 
     def summary(self) -> str:
-        return (f"served {self.n_completed}/{self.n_submitted} "
+        return (f"served {self.n_completed - self.n_dropped}/{self.n_submitted} "
                 f"({self.n_cache_hits} cached, {self.n_dropped} dropped, "
                 f"{self.n_reroutes} reroutes) in {self.duration_s:.1f}s · "
                 f"{self.qps:.1f} qps · p50 {self.latency_p50:.2f}s "
@@ -189,18 +194,32 @@ class ServerStats:
 
 
 class OnlineRobatchServer:
-    """Streams queries through a fitted :class:`repro.core.robatch.Robatch`.
+    """Streams queries through a pluggable :class:`repro.api.SchedulingPolicy`.
 
-    ``rb`` must be fitted (router + calibrations); ``pool`` is the member list
-    the dispatcher bills and invokes — usually ``rb.pool``, but it may wrap
-    members (e.g. :class:`repro.serving.fault.FlakyMember`) as long as order
-    matches, since assignments refer to members by index.
+    ``policy`` is any fitted registered policy — the server only consumes the
+    policy protocol (``window_space`` for admission + ``plan_window`` for the
+    per-window decision), so RoBatch, the adapted baselines and user-written
+    strategies all serve interchangeably.  A fitted
+    :class:`repro.core.robatch.Robatch` is still accepted and wrapped in the
+    ``robatch`` policy (legacy call sites keep working).
+
+    ``pool`` is the member list the dispatcher bills and invokes — usually
+    ``policy.exec_pool``, but it may wrap members (e.g.
+    :class:`repro.serving.fault.FlakyMember`) as long as order matches, since
+    plans refer to members by index.
     """
 
-    def __init__(self, rb, pool: Sequence, wl, config: OnlineConfig):
-        assert rb.router is not None, "Robatch must be fitted before serving"
-        assert len(pool) == len(rb.pool), "pool must mirror rb.pool by index"
-        self.rb = rb
+    def __init__(self, policy, pool: Sequence, wl, config: OnlineConfig):
+        if not hasattr(policy, "window_space"):    # a fitted Robatch (legacy)
+            from repro.api.policies import RobatchPolicy
+
+            assert policy.router is not None, "Robatch must be fitted before serving"
+            policy = RobatchPolicy().fit(policy.pool, wl, artifacts=policy)
+        assert policy.rb is not None, "policy must be fitted before serving"
+        assert len(pool) == len(policy.exec_pool), \
+            "pool must mirror the policy's exec_pool by index"
+        self.policy = policy
+        self.rb = policy.rb                        # shared modeling artifacts
         self.pool = list(pool)
         self.wl = wl
         self.cfg = config
@@ -284,9 +303,9 @@ class OnlineRobatchServer:
             self.windows.append(rep)
             return rep
 
-        # 3. candidate space over the window, restricted to surviving models
+        # 3. policy window space, restricted to surviving models
         idx = np.fromiter(by_idx.keys(), dtype=int)
-        full = self.rb.candidate_space(idx)
+        full = self.policy.window_space(idx)
         space = restrict_space(full, set(allowed))
 
         # 4. budget admission: affordable FCFS prefix at initial-state cost
@@ -314,13 +333,10 @@ class OnlineRobatchServer:
             self.windows.append(rep)
             return rep
 
-        # 5. windowed Alg. 1 against the bucket's current balance (the server
-        #    restricted the space up front for admission control, so no
-        #    further model mask is needed here)
-        res = greedy_schedule_window(take_rows(space, np.arange(n_adm)), idx, avail)
-        # assignment batch/model refer to the *restricted* state list; map the
-        # model column back to pool indices via the restricted states
-        plan = group_into_batches(res.assignment)
+        # 5. the policy's windowed decision against the bucket's current
+        #    balance (the server restricted the space up front for admission
+        #    control, so no further model mask is needed here)
+        wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx, avail)
 
         # half-open breakers get exactly ONE probe group: any further groups
         # scheduled on a recovering member are deferred to the next window
@@ -329,7 +345,7 @@ class OnlineRobatchServer:
                      if br.state == CircuitState.HALF_OPEN}
         probed: set[int] = set()
         dispatch, held = [], []
-        for state, members in plan:
+        for (state, members), gcost in zip(wplan.groups, wplan.group_costs):
             k = int(state.model)
             if k in half_open:
                 if k in probed:
@@ -337,14 +353,9 @@ class OnlineRobatchServer:
                     continue
                 probed.add(k)
             dispatch.append((state, members))
+            rep.est_cost += float(gcost)   # committed cost: dispatched only
         rep.n_deferred += len(held)
         rep.n_admitted -= len(held)   # held groups were never attempted
-        # committed cost covers dispatched groups only
-        col_of = {s: j for j, s in enumerate(space.states)}
-        row_of = {int(q): r for r, q in enumerate(idx)}
-        rep.est_cost = float(sum(
-            space.cost[[row_of[int(q)] for q in members], col_of[state]].sum()
-            for state, members in dispatch))
 
         # 6. concurrent dispatch across pool members
         futures = {}

@@ -20,6 +20,7 @@ while different members run genuinely concurrently.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass
@@ -61,13 +62,17 @@ class ServedPoolMember:
         self.context_len = context_len
         self.max_answer_tokens = max_answer_tokens
         self._lock = threading.Lock()
+        self._rid = itertools.count()   # monotonic per-member invocation id
 
     def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
         b = len(batch_idx)
         queries = [self.task.queries[int(i)] for i in batch_idx]
         prompt = self.formatter.format(queries)
         t0 = time.perf_counter()
-        req = Request(rid=0, tokens=prompt, max_new=self.max_answer_tokens * b + b)
+        # each physical invocation gets a fresh rid so engine-level logs and
+        # traces can tell invocations apart (next() is atomic under the GIL)
+        req = Request(rid=next(self._rid), tokens=prompt,
+                      max_new=self.max_answer_tokens * b + b)
         with self._lock:              # one engine, one in-flight batch
             self.engine.serve([req])
         latency = time.perf_counter() - t0

@@ -1,0 +1,218 @@
+"""Unified control-plane API: registry round-trip, declarative specs, and
+bit-identical parity of every ported policy against its legacy entry point."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Gateway, PolicySpec, PoolSpec, RunSpec, SchedulingPolicy,
+    UnknownPolicyError, get_policy, list_policies, register_policy,
+)
+from repro.core import execute, execute_plan
+from repro.core.baselines import (
+    batch_only, batcher_assignment_plan, frugalgpt_execute, obp_plan,
+    router_only, routellm_assignment,
+)
+from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
+
+EXPECTED = ["batch-only", "batcher-div", "batcher-sim", "frugalgpt", "obp",
+            "robatch", "robatch-vec", "routellm", "router-only"]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_builtin_policies():
+    assert set(EXPECTED) <= set(list_policies())
+
+
+def test_get_policy_roundtrip():
+    for name in list_policies():
+        cls = get_policy(name)
+        assert issubclass(cls, SchedulingPolicy)
+        assert cls.name == name
+
+
+def test_unknown_policy_raises_with_known_names():
+    with pytest.raises(UnknownPolicyError, match="robatch"):
+        get_policy("definitely-not-registered")
+
+
+def test_register_policy_rejects_non_policies():
+    with pytest.raises(TypeError):
+        register_policy("bad")(object)
+
+
+def test_register_policy_makes_custom_strategy_available():
+    @register_policy("test-custom")
+    class Custom(SchedulingPolicy):
+        def plan(self, query_idx, budget=None, timings=None):
+            raise NotImplementedError
+
+    try:
+        assert get_policy("test-custom") is Custom
+        assert "test-custom" in list_policies()
+    finally:
+        from repro.api.policy import _REGISTRY
+
+        _REGISTRY.pop("test-custom", None)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def test_runspec_dict_roundtrip():
+    spec = RunSpec(pool=PoolSpec(task="gsm8k", family="gemma3", n_train=64),
+                   policy=PolicySpec("routellm", {"tau": 0.6, "b": 4}),
+                   router="knn", coreset_size=32)
+    assert RunSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_runspec_json_roundtrip():
+    spec = RunSpec(pool=PoolSpec(kind="tiny", steps=10),
+                   policy=PolicySpec("obp", {"b": 4}))
+    text = spec.to_json()
+    json.loads(text)                     # valid JSON
+    assert RunSpec.from_json(text) == spec
+
+
+def test_runspec_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown spec keys"):
+        RunSpec.from_dict({"routerr": "knn"})
+    with pytest.raises(ValueError, match="unknown spec keys"):
+        PoolSpec.from_dict({"kind": "simulated", "famly": "qwen3"})
+
+
+def test_poolspec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        PoolSpec(kind="quantum").build()
+
+
+# ---------------------------------------------------------------------------
+# parity: each ported policy == its legacy entry point, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gateway(fitted_rb, agnews, pool):
+    return Gateway(pool, agnews, artifacts=fitted_rb)
+
+
+@pytest.fixture(scope="module")
+def mid_budget(fitted_rb, agnews):
+    test = agnews.subset_indices("test")
+    return float(fitted_rb.cost_model.single_model_cost(1, test, 1))
+
+
+def _legacy(name, rb, pool, wl, test, budget):
+    if name == "robatch":
+        return execute(pool, wl, rb.schedule(test, budget).assignment)
+    if name == "robatch-vec":
+        return execute(pool, wl,
+                       rb.schedule(test, budget, scheduler="vectorized").assignment)
+    if name == "routellm":
+        return execute(pool, wl, routellm_assignment(rb, test, tau=0.5, b=8))
+    if name == "frugalgpt":
+        return frugalgpt_execute(rb, test, tau=0.5, b=8)
+    if name == "batcher-sim":
+        _, plan = batcher_assignment_plan(rb, test, tau=0.5, b=8, mode="sim")
+        return execute_plan(pool, wl, plan, test)
+    if name == "batcher-div":
+        _, plan = batcher_assignment_plan(rb, test, tau=0.5, b=8, mode="div")
+        return execute_plan(pool, wl, plan, test)
+    if name == "obp":
+        _, plan = obp_plan(rb, test, tau=0.5, target_b=8)
+        return execute_plan(pool, wl, plan, test)
+    if name == "router-only":
+        return execute(pool, wl, router_only(rb).schedule(test, budget).assignment)
+    if name == "batch-only":
+        variant = batch_only(rb, 1)
+        return execute(variant.pool, wl, variant.schedule(test, budget).assignment)
+    raise AssertionError(name)
+
+
+PARAMS = {"routellm": dict(tau=0.5, b=8), "frugalgpt": dict(tau=0.5, b=8),
+          "batcher-sim": dict(tau=0.5, b=8), "batcher-div": dict(tau=0.5, b=8),
+          "obp": dict(tau=0.5, b=8), "batch-only": dict(model=1)}
+
+
+@pytest.mark.parametrize("name", EXPECTED)
+def test_policy_parity_with_legacy_entry_point(name, gateway, fitted_rb,
+                                               agnews, pool, mid_budget):
+    test = agnews.subset_indices("test")
+    legacy = _legacy(name, fitted_rb, pool, agnews, test, mid_budget)
+    ours = gateway.submit(test, budget=mid_budget, policy=name,
+                          **PARAMS.get(name, {}))
+    assert ours.accuracy == legacy.accuracy
+    assert ours.exact_cost == legacy.exact_cost
+    assert ours.n_invocations == legacy.n_invocations
+    assert np.array_equal(ours.per_query_utility, legacy.per_query_utility)
+
+
+def test_gateway_shares_one_artifact_bundle(gateway):
+    p1 = gateway.policy("routellm", tau=0.5, b=8)
+    p2 = gateway.policy("obp", tau=0.5, b=8)
+    assert p1.rb is gateway.robatch and p2.rb is gateway.robatch
+    assert gateway.policy("routellm", tau=0.5, b=8) is p1   # cached
+
+
+def test_plan_carries_schedule_and_costs(gateway, agnews, mid_budget):
+    test = agnews.subset_indices("test")[:64]
+    plan = gateway.plan(test, budget=mid_budget, policy="robatch")
+    assert plan.schedule is not None and not plan.schedule.infeasible
+    assert len(plan.group_costs) == len(plan.groups)
+    assert plan.est_cost == pytest.approx(sum(plan.group_costs))
+
+
+def test_plan_timed_covers_any_policy(gateway, agnews, mid_budget):
+    test = agnews.subset_indices("test")[:64]
+    for name, params in [("robatch", {}), ("routellm", dict(tau=0.5, b=8))]:
+        _, timings = gateway.policy(name, **params).plan_timed(test, mid_budget)
+        assert timings["total"] > 0
+    # the Alg.-1 family refines the §6.5 breakdown
+    _, timings = gateway.policy("robatch").plan_timed(test, mid_budget)
+    assert {"router", "proxy", "greedy", "total"} <= set(timings)
+
+
+# ---------------------------------------------------------------------------
+# gateway from a spec (small instance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,params", [("robatch", {}),
+                                           ("routellm", {"tau": 0.5, "b": 4})])
+def test_gateway_from_spec_end_to_end(policy, params):
+    spec = RunSpec(pool=PoolSpec(task="agnews", n_train=96, n_val=24, n_test=48,
+                                 seed=3),
+                   policy=PolicySpec(policy, params),
+                   router="knn", coreset_size=16)
+    gw = Gateway.from_spec(spec).fit()
+    test = gw.wl.subset_indices("test")
+    budget = float(gw.robatch.cost_model.single_model_cost(1, test, 1))
+    out = gw.submit(budget=budget)       # defaults: test split + spec policy
+    assert 0.0 <= out.accuracy <= 1.0 and out.exact_cost > 0
+
+
+# ---------------------------------------------------------------------------
+# online serving is policy-pluggable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,params", [("routellm", dict(tau=0.5, b=8)),
+                                         ("batcher-sim", dict(tau=0.5, b=8)),
+                                         ("frugalgpt", dict(tau=0.5, b=8))])
+def test_online_server_accepts_registered_policies(name, params, gateway,
+                                                   agnews, pool):
+    pol = gateway.policy(name, **params)
+    test = agnews.subset_indices("test")
+    base = float(pol.window_space(test).cost.min())
+    cfg = OnlineConfig(budget_per_s=20.0 * base * 4.0, window_s=0.25)
+    srv = OnlineRobatchServer(pol, pool, agnews, cfg)
+    arrivals = poisson_arrivals(np.random.default_rng(7), 20.0, 5.0, test)
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    assert stats.total_cost <= stats.budget_allowance * 1.05 + 1e-9
+    for w in stats.windows:              # committed cost within the balance
+        if w.n_admitted:
+            assert w.est_cost <= w.avail + 1e-9

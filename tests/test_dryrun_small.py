@@ -28,7 +28,11 @@ print("RESULT:" + json.dumps({k: res[k] for k in ("status", "useful_ratio")}))
 def _run(arch, name, kind, seq, batch):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to the host CPU backend: with a bundled libtpu,
+    # default backend discovery probes for TPU hardware and can block
+    # indefinitely in containers; XLA_FLAGS fake-device counts work the same
+    # either way (verified: 8 cpu devices under JAX_PLATFORMS=cpu)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", _SCRIPT, arch, name, kind,
                           str(seq), str(batch)],
                          capture_output=True, text=True, env=env, timeout=500)

@@ -1,5 +1,5 @@
 """Slow smoke target: tools/smoke.sh runs the quickstart, the tiny real pool
-(small step count) and the online serving CLI end-to-end.
+(small step count) and the online serving CLI once per registered policy.
 
 Deselected by default (pytest.ini adds ``-m "not slow"``); run with::
 
@@ -16,8 +16,14 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 @pytest.mark.slow
 def test_smoke_script():
     out = subprocess.run(["bash", os.path.join(ROOT, "tools", "smoke.sh")],
-                         capture_output=True, text=True, timeout=1800)
+                         capture_output=True, text=True, timeout=2400)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "Routing stage" in out.stdout          # quickstart ran
     assert "fitting Robatch on the live pool" in out.stdout   # tiny pool ran
+    # the serve CLI completed a stream under EVERY registered policy
+    from repro.api import list_policies
+
+    for name in list_policies():
+        assert f"policy={name} windows=" in out.stdout, \
+            f"serve CLI did not complete under policy {name!r}"
     assert "smoke: OK" in out.stdout

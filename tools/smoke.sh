@@ -1,15 +1,21 @@
 #!/usr/bin/env bash
-# CI-friendly smoke target: exercises the three entry points end-to-end with
+# CI-friendly smoke target: exercises the entry points end-to-end with
 # shrunken instances —
-#   1. the offline RoBatch pipeline on the calibrated simulator (quickstart),
+#   1. the offline RoBatch pipeline on the calibrated simulator (quickstart,
+#      driven through the RunSpec/Gateway control-plane API),
 #   2. the REAL tiny pool (src/repro/configs/tiny_pool.py) trained under a
 #      small step count, scheduled offline AND streamed online,
-#   3. the online serving CLI over the simulator.
+#   3. the online serving CLI over the simulator, ONCE PER REGISTERED POLICY
+#      (repro.api.list_policies()) — a policy that registers but crashes at
+#      plan time fails smoke.
 # Wired into the suite as a slow-marked test:
 #   PYTHONPATH=src python -m pytest -m slow tests/test_smoke.py
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# pin jax to the host CPU backend: with a bundled libtpu, default backend
+# discovery probes for TPU hardware and can block indefinitely in containers
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python examples/quickstart.py agnews qwen3 \
     --n-train 192 --n-val 48 --n-test 96 --coreset 32
@@ -18,7 +24,10 @@ python examples/serve_pool.py --steps "${SMOKE_STEPS:-60}" \
     --n-train 16 --n-test 16 --coreset 8 \
     --online-seconds 4 --online-qps 4
 
-python -m repro.launch.serve online --qps 20 --duration 5 \
-    --n-train 128 --coreset 32
+POLICIES=$(python -c "import repro.api; print(' '.join(repro.api.list_policies()))")
+for policy in $POLICIES; do
+    python -m repro.launch.serve online --policy "$policy" \
+        --qps 20 --duration 5 --n-train 128 --coreset 32
+done
 
 echo "smoke: OK"
