@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.common import QUICK, emit, save, setup
 from repro.core.baselines import batcher_assignment_plan, obp_plan, routellm_assignment
-from repro.core.scheduler import greedy_schedule, greedy_schedule_vectorized
+from repro.core.scheduler import greedy_schedule_vectorized
 
 
 def run():

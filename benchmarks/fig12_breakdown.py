@@ -2,7 +2,6 @@
 proxy-utility computation / greedy scheduling."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save, setup
 

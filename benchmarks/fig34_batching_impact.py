@@ -10,7 +10,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, save, setup
-from repro.core import CostModel, execute
+from repro.core import execute
 from repro.core.baselines import single_model_assignment
 
 

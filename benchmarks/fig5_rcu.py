@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit, save, setup
 from repro.core.scaling import batch_grid, rcu

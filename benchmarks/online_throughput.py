@@ -1,6 +1,8 @@
 """Online serving throughput — sustained QPS, p50/p99 latency and realized
-cost vs. the rolling budget, swept over admission window sizes, plus graceful
-degradation when one pool member's circuit breaker trips mid-run.
+cost vs. the rolling budget, swept over admission window sizes AND replica
+counts, plus graceful degradation under two scripted outages: a whole-member
+failure (circuit breaker trips, traffic reroutes) and a single-replica
+failure inside a ReplicaSet (the set degrades instead of breaking).
 
 Default pool is the REAL trained tiny pool (``repro.serving.tinypool``, the
 ``src/repro/configs/tiny_pool.py`` architectures served by the
@@ -15,11 +17,17 @@ utilities are near the task's chance floor at smoke step counts (see
 ``repro.serving.tinypool``); use ``--pool sim`` for utility-sensitive
 comparisons.
 
+Besides the usual per-row CSV/JSON, the run writes a stable-schema
+``BENCH_online.json`` (next to the other results) that ``tools/bench_check.py``
+compares against the committed baseline in ``benchmarks/baselines/`` — the CI
+regression gate.
+
     PYTHONPATH=src python benchmarks/online_throughput.py [--pool sim]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -28,24 +36,40 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import QUICK, emit, save, setup
+from benchmarks.common import QUICK, RESULTS_DIR, emit, save, setup
 from repro.core import Robatch
 from repro.serving.fault import BreakerPolicy, FlakyMember
 from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
+from repro.serving.pool import ReplicaSet, replicate_simulated
 
 WINDOWS = (0.25, 0.5, 1.0, 2.0)
+BENCH_SCHEMA = 1
 
 
-def _build(pool_kind: str, steps: int, seed: int):
+def _build(pool_kind: str, steps: int, seed: int, max_replicas: int):
+    """(wl, pool, rb, make_pool): ``make_pool(R)`` yields an R-replica view of
+    the same engines — simulated members are copied (deterministic-identical),
+    tiny engines are built once at ``max_replicas`` and sliced, so a sweep
+    never retrains."""
     if pool_kind == "sim":
         wl, pool, rb = setup("agnews", router="knn", coreset_size=64, seed=seed)
-        return wl, pool, rb
+
+        def make_pool(r: int) -> list:
+            return [replicate_simulated(m, r) for m in pool]
+
+        return wl, pool, rb, make_pool
     from repro.serving.tinypool import build_tiny_pool
 
     rng = np.random.default_rng(seed)
-    wl, pool, _fmt = build_tiny_pool(rng, steps=steps, n_train=48, n_test=64)
-    rb = Robatch(pool, wl, coreset_size=16, router_kind="knn", grid_multiple=2).fit()
-    return wl, pool, rb
+    wl, sets, _fmt = build_tiny_pool(rng, steps=steps, n_train=48, n_test=64,
+                                     replicas=max_replicas)
+    rb = Robatch(sets, wl, coreset_size=16, router_kind="knn", grid_multiple=2).fit()
+    pool = [rs.replicas[0] for rs in sets]          # plain single-engine view
+
+    def make_pool(r: int) -> list:
+        return [ReplicaSet(rs.replicas[:r], name=rs.name) for rs in sets]
+
+    return wl, pool, rb, make_pool
 
 
 def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed):
@@ -67,8 +91,20 @@ def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed):
 def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
         duration: float = 20.0, budget_x: float = 3.0, seed: int = 0):
     pool_kind = pool_kind or ("sim" if QUICK else "tiny")
-    wl, pool, rb = _build(pool_kind, steps, seed)
+    replica_counts = (1, 2) if pool_kind == "tiny" else (1, 2, 4)
+    # capacity only binds when the schedule wants many concurrent groups:
+    # drive the replica legs harder (more arrivals per window, enough budget
+    # to upgrade toward small batches) than the window-size sweep
+    r_qps, r_budget_x = qps * 4, budget_x * 4
+    wl, pool, rb, make_pool = _build(pool_kind, steps, seed, max(replica_counts))
     rows = []
+    bench = {"schema": BENCH_SCHEMA,
+             "config": dict(pool=pool_kind, qps=qps, duration=duration,
+                            budget_x=budget_x, seed=seed, windows=list(WINDOWS),
+                            replica_counts=list(replica_counts),
+                            replica_qps=r_qps, replica_budget_x=r_budget_x),
+             "window_sweep": [], "replica_sweep": [],
+             "breaker_outage": {}, "replica_outage": {}}
 
     # ---- window-size sweep --------------------------------------------------
     usage = np.zeros(len(pool), dtype=int)
@@ -87,12 +123,45 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
                    deferred=int(sum(x.n_deferred for x in stats.windows)),
                    wall_s=wall)
         rows.append(row)
+        bench["window_sweep"].append({k: row[k] for k in (
+            "window_s", "sustained_qps", "p50_s", "p99_s", "mean_utility",
+            "cost", "budget_allowance", "cache_hits", "dropped", "deferred")})
         emit(f"online_w{w}", wall / max(1, n_arr) * 1e6,
              f"qps={stats.qps:.1f};p50={stats.latency_p50:.2f}s;"
              f"p99={stats.latency_p99:.2f}s;cost=${stats.total_cost:.5f}"
              f"/${stats.budget_allowance:.5f};util={stats.mean_utility:.3f}")
 
-    # ---- mid-run outage: breaker trips, traffic reroutes --------------------
+    # ---- replica sweep: QPS/p99 vs. replica count ---------------------------
+    # every member is an R-replica set; per-window capacity caps (R groups per
+    # member) are what the scheduler plans against, so throughput scales with
+    # R until the budget — not capacity — is the binding constraint
+    cap_deferred_by_r = {}
+    for r_count in replica_counts:
+        srv, stats, wall, n_arr = _stream(rb, make_pool(r_count), wl,
+                                          window_s=WINDOWS[1], qps=r_qps,
+                                          duration=duration, budget_x=r_budget_x,
+                                          seed=seed)
+        cap_deferred = int(sum(w.n_capacity_held for w in stats.windows))
+        cap_deferred_by_r[r_count] = cap_deferred
+        row = dict(pool=pool_kind, scenario="replica_sweep", replicas=r_count,
+                   window_s=WINDOWS[1], offered_qps=r_qps,
+                   sustained_qps=stats.qps, p50_s=stats.latency_p50,
+                   p99_s=stats.latency_p99, cost=stats.total_cost,
+                   capacity_deferred=cap_deferred,
+                   completed=stats.n_completed, dropped=stats.n_dropped,
+                   wall_s=wall)
+        rows.append(row)
+        bench["replica_sweep"].append({k: row[k] for k in (
+            "replicas", "sustained_qps", "p50_s", "p99_s", "cost",
+            "capacity_deferred", "completed", "dropped")})
+        emit(f"online_replicas{r_count}", wall / max(1, n_arr) * 1e6,
+             f"qps={stats.qps:.1f};p99={stats.latency_p99:.2f}s;"
+             f"cap_deferred={cap_deferred};dropped={stats.n_dropped}")
+        assert stats.n_completed == stats.n_submitted, "replica run lost queries"
+    assert cap_deferred_by_r[replica_counts[0]] >= cap_deferred_by_r[replica_counts[-1]], \
+        "more replicas should not defer more work to capacity"
+
+    # ---- mid-run outage A: whole member fails, breaker trips ----------------
     # fail the member the scheduler actually leans on (the budget level decides
     # whether that is the cheap anchor — which exercises re-anchoring — or an
     # upgraded model), tripping early enough that short streams reach it
@@ -112,6 +181,9 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
                sustained_qps=stats.qps, p99_s=stats.latency_p99,
                cost=stats.total_cost, mean_utility=stats.mean_utility)
     rows.append(row)
+    bench["breaker_outage"] = {k: row[k] for k in (
+        "tripped", "reroutes", "dropped", "completed", "submitted",
+        "sustained_qps", "p99_s", "cost")}
     emit("online_breaker_trip", wall / max(1, n_arr) * 1e6,
          f"tripped={tripped};reroutes={stats.n_reroutes};"
          f"dropped={stats.n_dropped};completed={stats.n_completed}"
@@ -119,7 +191,47 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
     assert stats.n_completed == stats.n_submitted, "online layer lost queries"
     assert tripped and stats.n_reroutes > 0, "outage did not exercise rerouting"
 
+    # ---- mid-run outage B: ONE replica fails inside a ReplicaSet ------------
+    # the set retries the sibling replica and ejects the dead one, so the
+    # member's breaker must stay CLOSED and QPS degrade (capacity shrinks to
+    # the healthy-replica count) instead of the member disappearing
+    r_outage = replica_counts[-1] if pool_kind == "sim" else 2
+    pool_o = make_pool(r_outage)
+    pool_o[flaky_k].replicas[0] = FlakyMember(pool_o[flaky_k].replicas[0],
+                                              fail_from=3)
+    srv, stats, wall, n_arr = _stream(rb, pool_o, wl, window_s=WINDOWS[1],
+                                      qps=r_qps, duration=duration,
+                                      budget_x=r_budget_x, seed=seed)
+    tracker = pool_o[flaky_k].tracker
+    row = dict(pool=pool_kind, window_s=WINDOWS[1], scenario="replica_outage",
+               replicas=r_outage, member=pool_o[flaky_k].name,
+               breaker_tripped=srv.breakers[flaky_k].n_trips > 0,
+               replica_failures=tracker.replicas[0].n_failures,
+               replica_ejections=tracker.replicas[0].n_ejections,
+               healthy_replicas=tracker.n_healthy(),
+               sustained_qps=stats.qps, p99_s=stats.latency_p99,
+               completed=stats.n_completed, submitted=stats.n_submitted,
+               dropped=stats.n_dropped, cost=stats.total_cost)
+    rows.append(row)
+    bench["replica_outage"] = {k: row[k] for k in (
+        "replicas", "breaker_tripped", "replica_failures", "replica_ejections",
+        "sustained_qps", "p99_s", "dropped", "completed", "submitted")}
+    emit("online_replica_outage", wall / max(1, n_arr) * 1e6,
+         f"breaker_tripped={row['breaker_tripped']};"
+         f"replica_failures={row['replica_failures']};"
+         f"qps={stats.qps:.1f};completed={stats.n_completed}/{stats.n_submitted}")
+    assert stats.n_completed == stats.n_submitted, "replica outage lost queries"
+    assert stats.qps > 0, "replica outage must degrade, not zero out, throughput"
+    assert not row["breaker_tripped"], \
+        "a single-replica outage must not trip the member's breaker"
+    assert row["replica_failures"] > 0, "outage did not reach the flaky replica"
+
     save("online_throughput", rows)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {bench_path}", file=sys.stderr)
     return rows
 
 

@@ -10,9 +10,16 @@ import time
 import traceback
 
 from benchmarks import (
-    fig2_routing_impact, fig34_batching_impact, fig5_rcu, fig7_overall,
-    fig8_ablation, fig11_scalability, fig12_breakdown, online_throughput,
-    roofline_table, table3_sensitivity,
+    fig11_scalability,
+    fig12_breakdown,
+    fig2_routing_impact,
+    fig34_batching_impact,
+    fig5_rcu,
+    fig7_overall,
+    fig8_ablation,
+    online_throughput,
+    roofline_table,
+    table3_sensitivity,
 )
 
 MODULES = [

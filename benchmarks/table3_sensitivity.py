@@ -8,15 +8,11 @@ function fit (piecewise / power-law / KNN), router architecture & HPs.
 from __future__ import annotations
 
 import copy
-import dataclasses
 import time
 
-import numpy as np
 
 from benchmarks.common import QUICK, emit, save, setup
 from repro.core import Robatch, execute
-from repro.core.router import KNNRouter, train_mlp_router
-from repro.data import make_simulated_pool, make_workload
 from repro.data.workload import alternate_embeddings
 
 TASKS = ["agnews", "gsm8k", "imdb"]
@@ -58,7 +54,8 @@ def run():
             wl, pool, _ = setup(task)
             wl2 = copy.copy(wl)
             wl2.embeddings = alternate_embeddings(wl, kind)
-            rb = Robatch(pool, wl2, coreset_size=min(256, len(wl2.subset_indices("train")) // 2)).fit()
+            coreset = min(256, len(wl2.subset_indices("train")) // 2)
+            rb = Robatch(pool, wl2, coreset_size=coreset).fit()
             accs = _eval(rb, wl2, pool, wl2.subset_indices("test"))
             rows.append(dict(axis="embedding", value=kind, task=task, **accs))
         # --- scaling-function fits (Table 3 bottom) -------------------------

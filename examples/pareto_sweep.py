@@ -9,7 +9,10 @@ import numpy as np
 
 from repro.core import Robatch, execute, execute_plan
 from repro.core.baselines import (
-    batcher_assignment_plan, frugalgpt_execute, obp_plan, routellm_assignment,
+    batcher_assignment_plan,
+    frugalgpt_execute,
+    obp_plan,
+    routellm_assignment,
 )
 from repro.data import make_simulated_pool, make_workload
 

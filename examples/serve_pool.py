@@ -43,6 +43,9 @@ def main():
     ap.add_argument("--n-test", type=int, default=48)
     ap.add_argument("--coreset", type=int, default=16)
     ap.add_argument("--policy", default="robatch", choices=list_policies())
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engines per member (a ReplicaSet when > 1; weights "
+                         "are trained once and shared)")
     ap.add_argument("--online-seconds", type=float, default=0.0,
                     help="stream the test set through the online layer this long")
     ap.add_argument("--online-qps", type=float, default=8.0)
@@ -52,13 +55,16 @@ def main():
 
     spec = RunSpec(
         pool=PoolSpec(kind="tiny", steps=args.steps, n_train=args.n_train,
-                      n_test=args.n_test, seed=0),
+                      n_test=args.n_test, seed=0, replicas=args.replicas),
         policy=PolicySpec(args.policy),
         router="knn", coreset_size=args.coreset, grid_multiple=2)
 
     # ---- 1–2. train + serve the pool (PoolSpec materialization) -------------
     gw = Gateway.from_spec(spec)
     pool, wl = gw.pool, gw.wl
+    if args.replicas > 1:
+        print(f"pool: {', '.join(m.name for m in pool)} × {args.replicas} "
+              f"replica engines each (shared trained weights)")
 
     # ---- 3. the modeling stage over the live pool ---------------------------
     print("\nfitting Robatch on the live pool (real batched invocations)...")

@@ -9,11 +9,11 @@ real hardware (e.g. ~100M: --dim 768 --layers 12).
     PYTHONPATH=src python examples/train_lm.py --steps 200 --resume  # continue
 """
 import argparse
+from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from dataclasses import replace
 
 from repro.config import ShardingConfig, get_arch
 from repro.models.transformer import Model

@@ -6,7 +6,7 @@ Layout:
     repro.models     — unified JAX LM stack (dense / MoE / RWKV6 / RG-LRU hybrid / VLM / enc-dec).
     repro.kernels    — Pallas TPU kernels (flash attention, decode attention, WKV6, RG-LRU).
     repro.training   — optimizer (AdamW + ZeRO-1), train loop, grad accumulation.
-    repro.serving    — prefill/decode engine, KV cache, batch prompting, model pool, fault handling.
+    repro.serving    — prefill/decode engine, KV cache, batch prompting, pools, fault handling.
     repro.checkpoint — atomic pytree checkpointing with reshard-on-load.
     repro.launch     — production mesh, multi-pod dry-run, train/serve CLIs.
     repro.analysis   — roofline terms from compiled artifacts.

@@ -11,13 +11,19 @@ The three pieces (see docs/architecture.md, docs/policies.md):
   experiments and the ``Gateway`` facade running them offline or online.
 """
 
-from repro.api.policy import (
-    Plan, SchedulingPolicy, UnknownPolicyError, amortized_group_costs,
-    fit_artifacts, get_policy, list_policies, register_policy,
-)
 from repro.api import policies as _policies  # noqa: F401 — registers built-ins
-from repro.api.specs import PolicySpec, PoolSpec, RunSpec
 from repro.api.gateway import Gateway
+from repro.api.policy import (
+    Plan,
+    SchedulingPolicy,
+    UnknownPolicyError,
+    amortized_group_costs,
+    fit_artifacts,
+    get_policy,
+    list_policies,
+    register_policy,
+)
+from repro.api.specs import PolicySpec, PoolSpec, RunSpec
 
 __all__ = [
     "Plan", "SchedulingPolicy", "UnknownPolicyError", "amortized_group_costs",

@@ -103,17 +103,30 @@ class Gateway:
 
     # ------------------------------------------------------------------ online
     def serve(self, arrivals, config, policy: Optional[str] = None,
-              pool: Optional[Sequence] = None, **params):
-        """Stream an arrival list through the online serving layer (PR 1)
-        under the selected policy; returns :class:`ServerStats` and leaves the
-        drained server on ``self.server`` for inspection."""
+              pool: Optional[Sequence] = None, live: bool = False,
+              clock=None, **params):
+        """Stream an arrival list through the online serving layer under the
+        selected policy; returns :class:`ServerStats` and leaves the drained
+        server on ``self.server`` for inspection.
+
+        With ``config.realtime`` the stream is paced against the wall clock
+        (injectable via ``clock``); ``live=True`` additionally fronts it with
+        a :class:`repro.serving.online.LiveArrivalSource` submission thread
+        instead of in-loop admission."""
         from repro.serving.online import OnlineRobatchServer
 
+        if live and not getattr(config, "realtime", False):
+            raise ValueError("Gateway.serve(live=True) needs "
+                             "OnlineConfig(realtime=True) — a live arrival "
+                             "thread cannot pace a virtual clock")
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
-                                  self.wl, config)
+                                  self.wl, config, clock=clock)
         try:
-            stats = srv.run(arrivals)
+            if live:
+                stats = srv.run_live(arrivals)
+            else:
+                stats = srv.run(arrivals)
         finally:
             srv.close()
         self.server = srv

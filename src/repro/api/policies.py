@@ -22,18 +22,18 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api.policy import (
-    Plan, SchedulingPolicy, amortized_group_costs, register_policy,
-)
+from repro.api.policy import Plan, SchedulingPolicy, amortized_group_costs, register_policy
 from repro.core.baselines import (
-    batch_only, batcher_group, frugalgpt_execute, obp_group, router_only,
+    batch_only,
+    batcher_group,
+    frugalgpt_execute,
+    obp_group,
+    router_only,
 )
 from repro.core.pareto import CandidateSpace
 from repro.core.problem import Assignment, State, group_into_batches
 from repro.core.robatch import ExecutionOutcome
-from repro.core.scheduler import (
-    greedy_schedule, greedy_schedule_vectorized, greedy_schedule_window,
-)
+from repro.core.scheduler import greedy_schedule_window
 
 __all__ = [
     "RobatchPolicy", "RobatchVectorizedPolicy", "RouteLLMPolicy",
@@ -77,17 +77,17 @@ class RobatchPolicy(SchedulingPolicy):
         return self._engine.candidate_space(query_idx)
 
     def plan_window(self, space: CandidateSpace, query_idx: np.ndarray,
-                    budget: float) -> Plan:
+                    budget: float, caps: Optional[dict] = None) -> Plan:
         """Windowed Alg. 1 under the class's scheduler variant (the
-        vectorized fig11 fast path applies online too)."""
-        fn = (greedy_schedule_vectorized if self.scheduler == "vectorized"
-              else greedy_schedule)
-        res = fn(space, query_idx, budget)
+        vectorized fig11 fast path applies online too), capacity-capped when
+        the pool is replicated."""
+        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
+                                     scheduler=self.scheduler)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),
                     est_utility=res.est_utility, est_cost=res.amortized_cost,
-                    schedule=res)
+                    schedule=res, deferred_idx=res.deferred_idx)
 
 
 @register_policy("robatch-vec")
@@ -212,13 +212,13 @@ class BatcherSimPolicy(_VanillaRoutedPolicy):
         return batcher_group(self.wl, a, self.b, mode=self.mode, seed=self.seed)
 
     def plan_window(self, space: CandidateSpace, query_idx: np.ndarray,
-                    budget: float) -> Plan:
-        res = greedy_schedule_window(space, query_idx, budget)
+                    budget: float, caps: Optional[dict] = None) -> Plan:
+        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps)
         groups = self._groups(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),
                     est_utility=res.est_utility, est_cost=res.amortized_cost,
-                    schedule=res)
+                    schedule=res, deferred_idx=res.deferred_idx)
 
 
 @register_policy("batcher-div")

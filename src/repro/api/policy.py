@@ -60,6 +60,8 @@ class Plan:
     est_cost: Optional[float] = None
     schedule: Optional[ScheduleResult] = None   # present for Alg.-1 policies
     adaptive: bool = False
+    deferred_idx: Optional[np.ndarray] = None   # capacity-deferred query ids
+    # (windowed plans under per-member group caps; the server requeues these)
 
 
 def amortized_group_costs(cost_model, groups) -> list[float]:
@@ -154,15 +156,18 @@ class SchedulingPolicy:
         raise NotImplementedError(f"{self.name} does not support online serving")
 
     def plan_window(self, space: CandidateSpace, query_idx: np.ndarray,
-                    budget: float) -> Plan:
+                    budget: float, caps: Optional[dict] = None) -> Plan:
         """One online scheduling round over a (restricted) window space.
-        Default: windowed Alg. 1 + per-state batch packing."""
-        res = greedy_schedule_window(space, query_idx, budget)
+        Default: windowed Alg. 1 + per-state batch packing.  ``caps`` maps
+        model index → max batch-groups this window (replicated members'
+        concurrency, :class:`repro.serving.pool.ReplicaSet`); over-cap query
+        ids come back in ``Plan.deferred_idx`` for the server to requeue."""
+        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),
                     est_utility=res.est_utility, est_cost=res.amortized_cost,
-                    schedule=res)
+                    schedule=res, deferred_idx=res.deferred_idx)
 
 
 # ---------------------------------------------------------------------------

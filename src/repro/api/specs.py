@@ -48,15 +48,29 @@ class PoolSpec:
     n_test: int = 1024
     seed: int = 0
     steps: int = 300                 # tiny: LM training steps
+    replicas: int = 1                # engines per member (ReplicaSet when > 1)
 
     def build(self):
-        """Materialize → (workload, pool)."""
+        """Materialize → (workload, pool).
+
+        ``replicas > 1`` wraps every member in a
+        :class:`repro.serving.pool.ReplicaSet` — N deterministic copies for
+        the simulator, N engines sharing one set of trained weights for the
+        tiny pool — so the online scheduler gets real per-member concurrency
+        (and the matching per-window capacity caps)."""
+        if self.replicas < 1:
+            raise ValueError(f"PoolSpec.replicas must be >= 1, got {self.replicas}")
         if self.kind == "simulated":
             from repro.data import make_simulated_pool, make_workload
 
             wl = make_workload(self.task, n_train=self.n_train, n_val=self.n_val,
                                n_test=self.n_test, seed=self.seed)
-            return wl, make_simulated_pool(self.family)
+            pool = make_simulated_pool(self.family)
+            if self.replicas > 1:
+                from repro.serving.pool import replicate_simulated
+
+                pool = [replicate_simulated(m, self.replicas) for m in pool]
+            return wl, pool
         if self.kind == "tiny":
             import numpy as np
 
@@ -65,7 +79,8 @@ class PoolSpec:
             rng = np.random.default_rng(self.seed)
             wl, pool, _fmt = build_tiny_pool(rng, steps=self.steps,
                                              n_train=self.n_train,
-                                             n_test=self.n_test)
+                                             n_test=self.n_test,
+                                             replicas=self.replicas)
             return wl, pool
         raise ValueError(f"PoolSpec.kind must be 'simulated' or 'tiny', "
                          f"got {self.kind!r}")

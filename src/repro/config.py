@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------
@@ -137,7 +137,9 @@ class ModelConfig:
         d = self.d_model
         if self.moe is not None:
             m = self.moe
-            per_expert = 3 * d * m.d_expert if self.activation in ("swiglu", "geglu") else 2 * d * m.d_expert
+            per_expert = (3 * d * m.d_expert
+                          if self.activation in ("swiglu", "geglu")
+                          else 2 * d * m.d_expert)
             shared = 3 * d * m.d_shared if m.d_shared else 0
             return m.n_experts * per_expert + shared + d * m.n_experts  # + router
         mult = 3 if self.activation in ("swiglu", "geglu") else 2

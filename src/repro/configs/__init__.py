@@ -4,7 +4,15 @@ Each module registers one ModelConfig under its assignment id; smoke tests use
 ``cfg.reduced()``; the dry-run exercises the full shapes abstractly.
 """
 from repro.configs import (  # noqa: F401
-    qwen3_moe_30b_a3b, qwen2_moe_a2_7b, rwkv6_3b, recurrentgemma_9b,
-    qwen2_vl_72b, qwen1_5_4b, qwen1_5_0_5b, stablelm_1_6b, nemotron_4_340b,
-    seamless_m4t_large_v2, tiny_pool,
+    nemotron_4_340b,
+    qwen1_5_0_5b,
+    qwen1_5_4b,
+    qwen2_moe_a2_7b,
+    qwen2_vl_72b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    rwkv6_3b,
+    seamless_m4t_large_v2,
+    stablelm_1_6b,
+    tiny_pool,
 )

@@ -1,4 +1,5 @@
-"""StableLM-2-1.6B — partial rotary (25%), LayerNorm [hf:stabilityai/stablelm-2-1_6b; unverified]."""
+"""StableLM-2-1.6B — partial rotary (25%), LayerNorm
+[hf:stabilityai/stablelm-2-1_6b; unverified]."""
 from repro.config import ModelConfig, register_arch
 
 CONFIG = register_arch(ModelConfig(

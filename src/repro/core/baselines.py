@@ -16,8 +16,8 @@ from dataclasses import replace as dc_replace
 
 import numpy as np
 
-from repro.core.problem import Assignment, CostModel, State, group_into_batches
-from repro.core.robatch import ExecutionOutcome, Robatch, execute_plan
+from repro.core.problem import Assignment, CostModel, State
+from repro.core.robatch import ExecutionOutcome, Robatch
 from repro.data.workload import Workload
 
 __all__ = [
@@ -208,7 +208,8 @@ def obp_group(wl: Workload, pool, a: Assignment, target_b: int,
             group = members[cl == j]
             # refinement: split groups whose prompt would overflow the window
             # or exceed 2× the target size; merge is implicit via cluster count
-            max_by_ctx = max(1, int((0.8 * ctx - wl.sys_tokens) // max(wl.in_tokens[group].mean(), 1)))
+            mean_in = max(wl.in_tokens[group].mean(), 1)
+            max_by_ctx = max(1, int((0.8 * ctx - wl.sys_tokens) // mean_in))
             cap = min(2 * target_b, max_by_ctx)
             for s in range(0, len(group), cap):
                 chunk = group[s:s + cap]

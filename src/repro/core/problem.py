@@ -110,7 +110,8 @@ class CostModel:
         return float(n_inv * self.sys_cost(k) + self.query_cost(k, idx).sum())
 
 
-def group_into_batches(a: Assignment, order: np.ndarray | None = None) -> list[tuple[State, np.ndarray]]:
+def group_into_batches(a: Assignment,
+                       order: np.ndarray | None = None) -> list[tuple[State, np.ndarray]]:
     """Pack queries sharing a state into physical batches of that state's size.
 
     Returns [(state, workload-index array)] — the commit plan the serving

@@ -24,7 +24,7 @@ import numpy as np
 from repro.core.coreset import select_coreset
 from repro.core.pareto import CandidateSpace, build_candidate_space
 from repro.core.problem import Assignment, CostModel, group_into_batches
-from repro.core.router import KNNRouter, MLPRouter, train_mlp_router
+from repro.core.router import KNNRouter, train_mlp_router
 from repro.core.scaling import ModelCalibration, ProfileCache, calibrate_model
 from repro.core.scheduler import ScheduleResult, greedy_schedule, greedy_schedule_vectorized
 from repro.data.workload import Workload

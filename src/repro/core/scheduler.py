@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -34,6 +34,9 @@ class ScheduleResult:
     spent_budget: float          # budget consumed (== amortized_cost)
     n_upgrades: int
     infeasible: bool             # initial assignment alone exceeded the budget
+    deferred_idx: np.ndarray = field(default_factory=lambda: np.empty(0, dtype=int))
+    # ^ query ids pushed out of this window by per-member capacity caps
+    #   (``group_caps``); the online server requeues them for the next round
 
 
 def greedy_schedule(
@@ -204,11 +207,61 @@ def take_rows(space: CandidateSpace, rows: np.ndarray) -> CandidateSpace:
                           util=space.util[rows], initial_state=space.initial_state)
 
 
+def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
+                      group_caps: dict[int, int]) -> ScheduleResult:
+    """Enforce per-member batch-group capacity on a window's schedule.
+
+    A member backed by N replicas can run N batch-groups concurrently, so one
+    admission window may commit at most ``group_caps[k]`` groups to model k.
+    The assignment is packed exactly like :func:`group_into_batches` (chunks
+    of b per state); over-cap models keep their highest-estimated-utility
+    groups and the rest are *deferred* — returned via ``deferred_idx`` so the
+    server retries them next window (capacity backpressure, the same shape as
+    budget backpressure — never a drop)."""
+    a = res.assignment
+    n = len(a.query_idx)
+    state_col = {(s.model, s.batch): j for j, s in enumerate(space.states)}
+    rows_by_state: dict[tuple[int, int], list[int]] = {}
+    for i in range(n):
+        rows_by_state.setdefault((int(a.model[i]), int(a.batch[i])), []).append(i)
+    by_model: dict[int, list[tuple[float, list[int]]]] = {}
+    for (k, b), rows in rows_by_state.items():
+        j = state_col[(k, b)]
+        for s in range(0, len(rows), b):
+            chunk = rows[s:s + b]
+            by_model.setdefault(k, []).append((float(space.util[chunk, j].sum()), chunk))
+    overflow: list[int] = []
+    for k, groups in by_model.items():
+        cap = group_caps.get(k)
+        if cap is None or len(groups) <= cap:
+            continue
+        groups.sort(key=lambda g: -g[0])          # stable: ties keep FCFS order
+        for _u, chunk in groups[cap:]:
+            overflow.extend(chunk)
+    if not overflow:
+        return res
+    keep = np.setdiff1d(np.arange(n), np.asarray(overflow))
+    chosen = np.array([state_col[(int(a.model[i]), int(a.batch[i]))] for i in keep],
+                      dtype=int)
+    return ScheduleResult(
+        assignment=Assignment(query_idx=a.query_idx[keep], model=a.model[keep],
+                              batch=a.batch[keep]),
+        est_utility=float(space.util[keep, chosen].sum()),
+        amortized_cost=float(space.cost[keep, chosen].sum()),
+        spent_budget=float(space.cost[keep, chosen].sum()),
+        n_upgrades=res.n_upgrades,
+        infeasible=res.infeasible,
+        deferred_idx=np.asarray(a.query_idx)[np.sort(np.asarray(overflow))],
+    )
+
+
 def greedy_schedule_window(
     space: CandidateSpace,
     query_idx: np.ndarray,
     budget: float,
     allowed_models: set[int] | None = None,
+    group_caps: dict[int, int] | None = None,
+    scheduler: str = "heap",
 ) -> ScheduleResult:
     """One online scheduling round: Alg. 1 over a single admission window.
 
@@ -217,13 +270,42 @@ def greedy_schedule_window(
     that arrived inside the window and (b) the budget slice currently in the
     token bucket.  The frontier machinery is reused unchanged — only the
     candidate space is restricted to surviving models first.
+
+    ``group_caps`` maps model index → max batch-groups this window (a
+    replicated member's replica count — see
+    :class:`repro.serving.pool.ReplicaSet`).  A cap of 0 removes the model
+    from the window's space outright (all replicas down), and over-cap groups
+    are deferred via ``ScheduleResult.deferred_idx``.  ``scheduler`` picks the
+    Alg. 1 variant (``"heap"`` or ``"vectorized"``, as offline).
     """
+    if group_caps:
+        saturated = {k for k, cap in group_caps.items() if cap is not None and cap <= 0}
+        if saturated:
+            candidates = (set(allowed_models) if allowed_models is not None
+                          else {s.model for s in space.states})
+            allowed_models = candidates - saturated
+            if not allowed_models:
+                # every member saturated: the whole window is capacity-
+                # deferred (backpressure, not a crash — retried next round)
+                qi = np.asarray(query_idx)
+                empty = Assignment(query_idx=qi[:0],
+                                   model=np.empty(0, dtype=int),
+                                   batch=np.empty(0, dtype=int))
+                return ScheduleResult(assignment=empty, est_utility=0.0,
+                                      amortized_cost=0.0, spent_budget=0.0,
+                                      n_upgrades=0, infeasible=False,
+                                      deferred_idx=qi.copy())
     if allowed_models is not None:
         space = restrict_space(space, set(allowed_models))
-    return greedy_schedule(space, query_idx, budget)
+    fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
+    res = fn(space, query_idx, budget)
+    if group_caps:
+        res = _apply_group_caps(res, space, group_caps)
+    return res
 
 
-def brute_force_schedule(space: CandidateSpace, query_idx: np.ndarray, budget: float) -> ScheduleResult:
+def brute_force_schedule(space: CandidateSpace, query_idx: np.ndarray,
+                         budget: float) -> ScheduleResult:
     """Exact optimum by enumeration over the *pruned frontiers* (micro instances).
 
     Exponential — guarded to ≤ ~2M combinations; tests use n ≤ 8, |frontier| ≤ 5.

@@ -1,2 +1,2 @@
-from repro.data.workload import Workload, BENCHMARKS, make_workload
-from repro.data.simulator import SimulatedModel, make_simulated_pool, POOL_SPECS
+from repro.data.simulator import POOL_SPECS, SimulatedModel, make_simulated_pool
+from repro.data.workload import BENCHMARKS, Workload, make_workload

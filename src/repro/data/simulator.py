@@ -22,14 +22,14 @@ the batch size crosses its personal tolerance, never chaotically.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Sequence
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.data.workload import Workload
 
-__all__ = ["SimulatedModel", "make_simulated_pool", "POOL_SPECS", "BatchResult"]
+__all__ = ["SimulatedModel", "make_simulated_pool", "POOL_SPECS", "BatchResult",
+           "evaluate_chunked"]
 
 
 def _stable_uniform(tag: str, idx: np.ndarray) -> np.ndarray:
@@ -53,6 +53,19 @@ class BatchResult:
     in_tokens: int               # actual input tokens billed (sys + queries)
     out_tokens: int              # actual output tokens billed (incl. degeneration)
     latency_s: float             # simulated wall clock (for straggler handling)
+
+
+def evaluate_chunked(member, wl: Workload, idx: np.ndarray,
+                     batch_size: int) -> np.ndarray:
+    """Shared pool-member ``evaluate`` body: utilities for ``idx`` served in
+    consecutive ``invoke_batch`` chunks of ``batch_size`` (used by the
+    simulator, the real served members and replica sets alike)."""
+    idx = np.asarray(idx)
+    out = np.zeros(len(idx))
+    for s in range(0, len(idx), batch_size):
+        chunk = idx[s:s + batch_size]
+        out[s:s + len(chunk)] = member.invoke_batch(wl, chunk).utilities
+    return out
 
 
 @dataclass
@@ -129,12 +142,7 @@ class SimulatedModel:
     def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
                  rng: np.random.Generator | None = None) -> np.ndarray:
         """Utilities for `idx` served in consecutive batches of `batch_size`."""
-        idx = np.asarray(idx)
-        out = np.zeros(len(idx))
-        for s in range(0, len(idx), batch_size):
-            chunk = idx[s:s + batch_size]
-            out[s:s + len(chunk)] = self.invoke_batch(wl, chunk).utilities
-        return out
+        return evaluate_chunked(self, wl, idx, batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -148,20 +156,32 @@ class SimulatedModel:
 # family is slightly weaker with narrower gaps, as observed in Fig. 7).
 POOL_SPECS: dict[str, list[dict]] = {
     "qwen3": [
-        dict(name="qwen3-4b", c_in=0.15, c_out=0.60, context_len=32_768, resilience=0.85,
-             capability=dict(agnews=0.477, gsm8k=0.601, mmlu=0.540, snli=0.551, mrpc=0.577, imdb=0.516)),
-        dict(name="qwen3-14b", c_in=0.35, c_out=1.40, context_len=65_536, resilience=1.6,
-             capability=dict(agnews=0.557, gsm8k=0.788, mmlu=0.666, snli=0.647, mrpc=0.646, imdb=0.584)),
-        dict(name="qwen3-32b", c_in=0.70, c_out=2.80, context_len=131_072, resilience=2.4,
-             capability=dict(agnews=0.619, gsm8k=0.962, mmlu=0.776, snli=0.725, mrpc=0.690, imdb=0.629)),
+        dict(name="qwen3-4b", c_in=0.15, c_out=0.60, context_len=32_768,
+             resilience=0.85,
+             capability=dict(agnews=0.477, gsm8k=0.601, mmlu=0.540,
+                             snli=0.551, mrpc=0.577, imdb=0.516)),
+        dict(name="qwen3-14b", c_in=0.35, c_out=1.40, context_len=65_536,
+             resilience=1.6,
+             capability=dict(agnews=0.557, gsm8k=0.788, mmlu=0.666,
+                             snli=0.647, mrpc=0.646, imdb=0.584)),
+        dict(name="qwen3-32b", c_in=0.70, c_out=2.80, context_len=131_072,
+             resilience=2.4,
+             capability=dict(agnews=0.619, gsm8k=0.962, mmlu=0.776,
+                             snli=0.725, mrpc=0.690, imdb=0.629)),
     ],
     "gemma3": [
-        dict(name="gemma3-4b", c_in=0.08, c_out=0.32, context_len=32_768, resilience=0.8,
-             capability=dict(agnews=0.450, gsm8k=0.550, mmlu=0.500, snli=0.520, mrpc=0.550, imdb=0.490)),
-        dict(name="gemma3-12b", c_in=0.25, c_out=1.00, context_len=65_536, resilience=1.5,
-             capability=dict(agnews=0.540, gsm8k=0.730, mmlu=0.640, snli=0.620, mrpc=0.630, imdb=0.570)),
-        dict(name="gemma3-27b", c_in=0.55, c_out=2.20, context_len=131_072, resilience=2.2,
-             capability=dict(agnews=0.600, gsm8k=0.880, mmlu=0.740, snli=0.700, mrpc=0.670, imdb=0.610)),
+        dict(name="gemma3-4b", c_in=0.08, c_out=0.32, context_len=32_768,
+             resilience=0.8,
+             capability=dict(agnews=0.450, gsm8k=0.550, mmlu=0.500,
+                             snli=0.520, mrpc=0.550, imdb=0.490)),
+        dict(name="gemma3-12b", c_in=0.25, c_out=1.00, context_len=65_536,
+             resilience=1.5,
+             capability=dict(agnews=0.540, gsm8k=0.730, mmlu=0.640,
+                             snli=0.620, mrpc=0.630, imdb=0.570)),
+        dict(name="gemma3-27b", c_in=0.55, c_out=2.20, context_len=131_072,
+             resilience=2.2,
+             capability=dict(agnews=0.600, gsm8k=0.880, mmlu=0.740,
+                             snli=0.700, mrpc=0.670, imdb=0.610)),
     ],
 }
 

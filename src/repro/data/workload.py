@@ -49,12 +49,17 @@ class BenchmarkSpec:
 # AGNews: sys 90, query ~55, out ~4   -> share ~0.60        (paper: 59.5%)
 # GSM8K : sys 1250, query ~65, out ~75 -> share ~0.90       (paper: 90.1%)
 BENCHMARKS: dict[str, BenchmarkSpec] = {
-    "agnews": BenchmarkSpec("agnews", "classification", 4, 90, (55, 0.35), (4, 0.10), (2.0, 4.5), 4, 7.0),
-    "gsm8k": BenchmarkSpec("gsm8k", "reasoning", 0, 1250, (65, 0.45), (75, 0.50), (4.5, 2.2), 8, 5.0),
-    "mmlu": BenchmarkSpec("mmlu", "qa", 4, 400, (120, 0.50), (6, 0.15), (3.5, 2.8), 57, 5.5),
+    "agnews": BenchmarkSpec("agnews", "classification", 4, 90, (55, 0.35), (4, 0.10),
+                            (2.0, 4.5), 4, 7.0),
+    "gsm8k": BenchmarkSpec("gsm8k", "reasoning", 0, 1250, (65, 0.45), (75, 0.50),
+                           (4.5, 2.2), 8, 5.0),
+    "mmlu": BenchmarkSpec("mmlu", "qa", 4, 400, (120, 0.50), (6, 0.15), (3.5, 2.8),
+                          57, 5.5),
     "snli": BenchmarkSpec("snli", "nli", 3, 140, (45, 0.30), (4, 0.10), (2.6, 3.2), 6, 6.0),
-    "mrpc": BenchmarkSpec("mrpc", "paraphrase", 2, 120, (70, 0.30), (4, 0.10), (2.4, 3.0), 5, 6.0),
-    "imdb": BenchmarkSpec("imdb", "classification", 2, 80, (230, 0.45), (4, 0.10), (1.6, 6.0), 3, 8.0),
+    "mrpc": BenchmarkSpec("mrpc", "paraphrase", 2, 120, (70, 0.30), (4, 0.10),
+                          (2.4, 3.0), 5, 6.0),
+    "imdb": BenchmarkSpec("imdb", "classification", 2, 80, (230, 0.45), (4, 0.10),
+                          (1.6, 6.0), 3, 8.0),
 }
 
 
@@ -122,7 +127,8 @@ def make_workload(
     in_tokens = np.maximum(4, rng.lognormal(np.log(mu_in), sg_in, size=n)).astype(np.int32)
     # harder queries tend to need longer answers on reasoning tasks
     out_scale = 1.0 + (1.5 * difficulty if spec.task == "reasoning" else 0.0)
-    out_tokens = np.maximum(1, rng.lognormal(np.log(mu_out), sg_out, size=n) * out_scale).astype(np.int32)
+    out_tokens = np.maximum(1, rng.lognormal(np.log(mu_out), sg_out, size=n)
+                            * out_scale).astype(np.int32)
 
     idx = rng.permutation(n)
     split = {

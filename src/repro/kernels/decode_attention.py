@@ -13,9 +13,9 @@ import functools
 import math
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 NEG_INF = -1e30
 

@@ -17,9 +17,9 @@ import math
 from typing import Optional
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 NEG_INF = -1e30
 

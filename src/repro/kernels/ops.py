@@ -11,13 +11,11 @@ same asymptotic memory behaviour the TPU kernels deliver.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 
 __all__ = ["flash_attention", "decode_attention", "wkv6", "rglru_scan"]
 

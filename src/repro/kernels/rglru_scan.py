@@ -12,9 +12,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 
 def _kernel(x_ref, a_ref, h0_ref, o_ref, hT_ref, h_scr, *, chunk: int, n_chunks: int):

@@ -25,16 +25,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.roofline import analyze_compiled, analytic_hbm_bytes, cpu_upcast_bytes, model_flops
-from repro.config import MeshConfig, ShardingConfig, SHAPE_SUITE
+from repro.analysis.roofline import (
+    analyze_compiled,
+    analytic_hbm_bytes,
+    cpu_upcast_bytes,
+    model_flops,
+)
+from repro.config import MeshConfig
 from repro.launch import specs as S
 from repro.launch.mesh import make_mesh_from_config, mesh_config
 from repro.models.layers import sanitize_pspec
 from repro.models.transformer import Model
 from repro.training.optimizer import OptimizerState, adamw
-from repro.training.train_loop import (
-    fsdp_param_pspecs, make_train_step, opt_state_pspecs, zero1_pspecs,
-)
+from repro.training.train_loop import fsdp_param_pspecs, make_train_step, opt_state_pspecs
 
 
 def _named(mesh, tree):

@@ -15,6 +15,13 @@ circuit breakers::
     PYTHONPATH=src python -m repro.launch.serve online --policy routellm
     PYTHONPATH=src python -m repro.launch.serve online --spec run.json
 
+``--realtime`` paces the stream against the wall clock: a live Poisson
+arrival thread (``LiveArrivalSource``) submits the same seeded stream at its
+due times while the server fires one scheduling round per window boundary —
+the run takes ~``--duration`` wall seconds and reports window-pacing lateness.
+``--replicas N`` builds every pool member as an N-engine ``ReplicaSet``
+(least-loaded dispatch, per-window capacity caps in the scheduler).
+
 ``--policy`` selects any name from the policy registry
 (``repro.api.list_policies()``); ``--spec`` takes a ``RunSpec`` JSON (a file
 path or an inline JSON string) and subsumes the individual flags.  Legacy
@@ -23,7 +30,6 @@ pre-spec flags (``--task``/``--family``/``--n-train``/``--coreset``/
 ``--seed``) keep working as a deprecation shim that overrides the spec.
 """
 import argparse
-import os
 import sys
 import time
 
@@ -137,6 +143,10 @@ def online_main(argv):
                     help="budget rate = qps × cheapest-state cost × this factor")
     ap.add_argument("--repeat-frac", type=float, default=0.2,
                     help="fraction of arrivals re-asking an earlier query (cache hits)")
+    ap.add_argument("--realtime", action="store_true",
+                    help="pace against the wall clock behind a live arrival thread")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="engines per pool member (ReplicaSet when > 1)")
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--coreset", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
@@ -151,6 +161,8 @@ def online_main(argv):
     if args.qps <= 0:
         raise SystemExit("serve online: --qps must be positive")
     spec = _online_spec(args)
+    if args.replicas is not None:
+        spec.pool.replicas = args.replicas
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -169,17 +181,26 @@ def online_main(argv):
     test = gw.wl.subset_indices("test")
     base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
     rate = args.qps * base * args.budget_x
-    cfg = OnlineConfig(budget_per_s=rate, window_s=args.window)
+    cfg = OnlineConfig(budget_per_s=rate, window_s=args.window,
+                       realtime=args.realtime)
     rng = np.random.default_rng(spec.seed)
     arrivals = poisson_arrivals(rng, args.qps, args.duration, test,
                                 repeat_frac=args.repeat_frac)
-    print(f"streaming {len(arrivals)} arrivals at {args.qps} qps through "
-          f"policy={spec.policy.name}, window {args.window}s, "
+    mode = "live wall-clock" if args.realtime else "virtual-clock"
+    print(f"streaming {len(arrivals)} arrivals at {args.qps} qps ({mode}) "
+          f"through policy={spec.policy.name}, window {args.window}s, "
           f"budget ${rate:.6f}/s...")
-    stats = gw.serve(arrivals, cfg)
+    t_wall = time.monotonic()
+    stats = gw.serve(arrivals, cfg, live=args.realtime)
+    wall = time.monotonic() - t_wall
     srv = gw.server
 
     print(stats.summary())
+    if args.realtime:
+        late = [w.late_s for w in stats.windows]
+        print(f"realtime: {wall:.2f}s wall for a {args.duration:.0f}s stream · "
+              f"{len(late)} windows · max window lateness "
+              f"{max(late, default=0.0) * 1e3:.1f}ms")
     by_model = {}
     for r in srv.completed:
         if r.model is not None and not r.cache_hit:

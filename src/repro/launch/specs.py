@@ -6,14 +6,17 @@ abstract shapes (the shannon/kernels pattern).
 """
 from __future__ import annotations
 
-from dataclasses import replace
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import (
-    MeshConfig, ModelConfig, ShapeConfig, ShardingConfig, SHAPE_SUITE, get_arch,
+    SHAPE_SUITE,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    ShardingConfig,
+    get_arch,
     shape_applicable,
 )
 

@@ -12,7 +12,6 @@ exposed here for operators)::
 """
 import argparse
 import os
-import sys
 
 
 def main():

@@ -164,7 +164,8 @@ class Builder:
             std = scale / np.sqrt(fan_in)
             return (jax.random.normal(self._next_key(), shape, jnp.float32) * std).astype(dtype)
         if init == "uniform":
-            return (jax.random.uniform(self._next_key(), shape, jnp.float32, -scale, scale)).astype(dtype)
+            return jax.random.uniform(self._next_key(), shape, jnp.float32,
+                                      -scale, scale).astype(dtype)
         raise ValueError(init)
 
 

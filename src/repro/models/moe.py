@@ -161,8 +161,10 @@ def _dispatch_ep(p, cfg: ModelConfig, xt, top_p, top_i, dp_size: int = 1,
             tok = jnp.repeat(jnp.arange(Tc, dtype=jnp.int32), k)
             keep = ranks < C
             slot = jnp.where(keep, flat_e * C + ranks, m.n_experts * C)
-            slot_tok = jnp.zeros((m.n_experts * C + 1,), jnp.int32).at[slot].set(tok, mode="drop")[:-1]
-            slot_w = jnp.zeros((m.n_experts * C + 1,), jnp.float32).at[slot].set(flat_w, mode="drop")[:-1]
+            slot_tok = jnp.zeros((m.n_experts * C + 1,),
+                                 jnp.int32).at[slot].set(tok, mode="drop")[:-1]
+            slot_w = jnp.zeros((m.n_experts * C + 1,),
+                               jnp.float32).at[slot].set(flat_w, mode="drop")[:-1]
             g = x_loc[slot_tok].reshape(m.n_experts, C, d)
             g = g * (slot_w.reshape(m.n_experts, C, 1) > 0)
             return g, slot_tok, slot_w

@@ -13,13 +13,12 @@ VLM backbone (embedding inputs + M-RoPE) and the audio encoder-decoder:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.config import MeshConfig, ModelConfig, ShardingConfig
 from repro.models import attention as attn_mod
@@ -28,8 +27,14 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.layers import (
-    Builder, ParamSpec, apply_norm, init_norm, logical_rules, logical_to_pspec,
-    sanitize_pspec, spec_tree_to_pspecs,
+    Builder,
+    ParamSpec,
+    apply_norm,
+    init_norm,
+    logical_rules,
+    logical_to_pspec,
+    sanitize_pspec,
+    spec_tree_to_pspecs,
 )
 
 __all__ = ["Model", "StackedBuilder"]
@@ -450,8 +455,9 @@ class Model:
                 for i, kind in enumerate(self.pattern)
             }
         for j, kind in enumerate(self.rem_kinds):
-            spec[f"rem{j}"] = _block_cache_spec(cfg, kind, batch, max_len, cfg.enc_dec,
-                                                enc_len, jnp.bfloat16 if self.dtype == jnp.bfloat16 else jnp.float32)
+            dt = jnp.bfloat16 if self.dtype == jnp.bfloat16 else jnp.float32
+            spec[f"rem{j}"] = _block_cache_spec(cfg, kind, batch, max_len,
+                                                cfg.enc_dec, enc_len, dt)
         return spec
 
     def cache_pspecs(self, mesh_cfg: MeshConfig, batch: int, max_len: int, enc_len: int = 0):

@@ -1,11 +1,26 @@
-from repro.serving.engine import ServingEngine, Request
 from repro.serving.batcher import BatchPromptFormatter
-from repro.serving.pool import ServedPoolMember, TextTask
+from repro.serving.engine import Request, ServingEngine
 from repro.serving.fault import (
-    BreakerPolicy, CircuitBreaker, CircuitState, FaultTolerantInvoker,
-    FlakyMember, StragglerPolicy,
+    BreakerPolicy,
+    CircuitBreaker,
+    CircuitState,
+    FaultTolerantInvoker,
+    FlakyMember,
+    ReplicaPolicy,
+    ReplicaTracker,
+    StragglerPolicy,
 )
 from repro.serving.online import (
-    BudgetBucket, OnlineConfig, OnlineRequest, OnlineRobatchServer,
-    ResponseCache, ServerStats, poisson_arrivals,
+    BudgetBucket,
+    FakeClock,
+    LiveArrivalSource,
+    MonotonicClock,
+    OnlineConfig,
+    OnlineRequest,
+    OnlineRobatchServer,
+    ResponseCache,
+    ServerStats,
+    arrival_stream,
+    poisson_arrivals,
 )
+from repro.serving.pool import ReplicaSet, ServedPoolMember, TextTask, replicate_simulated

@@ -17,6 +17,13 @@ half-open): an open breaker removes its model from the scheduler's candidate
 space entirely (see :func:`repro.core.scheduler.restrict_space`), instead of
 retrying per invocation.  ``FlakyMember`` injects failures deterministically
 so tests and benchmarks can drive the trip/reroute/recovery paths.
+
+``ReplicaTracker`` sits one level *below* the breaker: a
+:class:`repro.serving.pool.ReplicaSet` is ONE member (one breaker, one entry
+in the candidate space) made of N interchangeable replicas, and the tracker
+keeps per-replica health — consecutive-failure ejection with cooldown
+re-admission and latency stats — so least-loaded dispatch can route around a
+dead replica while the set as a whole keeps serving (degraded, not broken).
 """
 from __future__ import annotations
 
@@ -118,6 +125,81 @@ class FaultTolerantInvoker:
     def inflight(self) -> list[dict]:
         """Batches to re-enqueue after a scheduler crash (recovery path)."""
         return [e for e in self.journal if e["state"] == "inflight"]
+
+
+# ---------------------------------------------------------------------------
+# per-replica health (ReplicaSet members)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ReplicaPolicy:
+    eject_after: int = 2              # consecutive failures before ejection
+    cooldown_s: float = 30.0          # ejected → probe re-admission delay
+    latency_window: int = 128         # per-replica latency samples retained
+
+
+@dataclass
+class _ReplicaState:
+    n_ok: int = 0
+    n_failures: int = 0
+    n_ejections: int = 0
+    consecutive_failures: int = 0
+    ejected_until: float = 0.0
+    latencies: list = field(default_factory=list)
+
+    def p50(self) -> float:
+        return float(np.median(self.latencies)) if self.latencies else 0.0
+
+
+class ReplicaTracker:
+    """Per-replica health/latency inside one :class:`~repro.serving.pool.
+    ReplicaSet` member.
+
+    The member-level :class:`CircuitBreaker` decides whether the *set* is in
+    the candidate space; this tracker decides which replica *within* the set
+    may take the next batch.  Ejection mirrors half-open breaker semantics at
+    replica granularity: ``eject_after`` consecutive failures remove a replica
+    from dispatch for ``cooldown_s``, after which it is offered exactly one
+    probe batch — a success re-admits it, another failure re-ejects it for a
+    fresh cooldown (``consecutive_failures`` only resets on success).  The
+    clock is injectable so virtual-time tests drive recovery deterministically.
+    """
+
+    def __init__(self, n_replicas: int, policy: Optional[ReplicaPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy or ReplicaPolicy()
+        self.clock = clock
+        self.replicas = [_ReplicaState() for _ in range(n_replicas)]
+
+    def healthy(self, r: int) -> bool:
+        return self.clock() >= self.replicas[r].ejected_until
+
+    def record_success(self, r: int, latency_s: float = 0.0) -> None:
+        st = self.replicas[r]
+        st.n_ok += 1
+        st.consecutive_failures = 0
+        st.ejected_until = 0.0
+        st.latencies.append(float(latency_s))
+        if len(st.latencies) > self.policy.latency_window:
+            st.latencies.pop(0)
+
+    def record_failure(self, r: int) -> None:
+        st = self.replicas[r]
+        st.n_failures += 1
+        st.consecutive_failures += 1
+        if st.consecutive_failures >= self.policy.eject_after:
+            st.ejected_until = self.clock() + self.policy.cooldown_s
+            st.n_ejections += 1
+
+    def n_healthy(self) -> int:
+        return sum(self.healthy(r) for r in range(len(self.replicas)))
+
+    def snapshot(self) -> list[dict]:
+        """Per-replica health/latency rows (benchmark + debug surface)."""
+        return [dict(replica=r, healthy=self.healthy(r), n_ok=st.n_ok,
+                     n_failures=st.n_failures, n_ejections=st.n_ejections,
+                     p50_latency_s=st.p50())
+                for r, st in enumerate(self.replicas)]
 
 
 # ---------------------------------------------------------------------------

@@ -40,14 +40,34 @@ Design points:
 * **Virtual time.**  The server is tick-driven on an injectable clock: service
   latencies come from ``BatchResult.latency_s`` (measured for real engines,
   simulated for the calibrated pool), so benchmarks never sleep.
+
+* **Real time.**  ``OnlineConfig(realtime=True)`` paces the same tick loop
+  against a wall clock instead: ``run`` sleeps to each window boundary (late
+  windows are accounted in ``WindowReport.late_s``, never skipped), the
+  ``BudgetBucket`` refills on elapsed wall seconds, and ``run_live`` fronts a
+  :class:`LiveArrivalSource` thread that submits a seeded arrival stream at
+  its wall-clock due times.  The time source is injectable
+  (:class:`MonotonicClock` in production, :class:`FakeClock` in tests), and
+  arrival *generation* is split from *pacing* (:func:`arrival_stream` vs. the
+  pacer), so one seeded stream replays identically in both modes.
+
+* **Replica capacity.**  A replicated member
+  (:class:`repro.serving.pool.ReplicaSet`) can run at most ``n_replicas``
+  batch-groups concurrently, so the server threads per-member group caps into
+  the windowed scheduler (``group_caps`` in
+  :func:`repro.core.scheduler.greedy_schedule_window`) and defers over-cap
+  groups to the next window — capacity backpressure composes with budget
+  backpressure instead of silently queueing on one engine's lock.
 """
 from __future__ import annotations
 
+import inspect
 import threading
+import time
 from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -56,7 +76,36 @@ from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
            "WindowReport", "ServerStats", "OnlineRobatchServer",
-           "poisson_arrivals"]
+           "MonotonicClock", "FakeClock", "LiveArrivalSource",
+           "arrival_stream", "poisson_arrivals"]
+
+
+class MonotonicClock:
+    """Wall time: the production time source for ``realtime`` serving."""
+
+    now = staticmethod(time.monotonic)
+    sleep = staticmethod(time.sleep)
+
+
+class FakeClock:
+    """Deterministic time source: ``sleep`` advances ``now`` instantly, so
+    real-time pacing logic runs under test without wall-clock waits.
+
+    Single-threaded by design — with two sleepers sharing one fake clock
+    (e.g. a pacer thread plus the serving loop) the unsynchronized advances
+    would add instead of overlap.  Use it with ``run``/``run_paced``;
+    ``run_live`` refuses it and needs a real clock."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+        self.n_sleeps = 0
+
+    def now(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.n_sleeps += 1
+        self.t += max(0.0, float(dt))
 
 
 @dataclass
@@ -145,7 +194,8 @@ class OnlineConfig:
     max_reroutes: int = 3             # reschedules before a query is shed
     cache_entries: int = 4096
     breaker: BreakerPolicy = field(default_factory=BreakerPolicy)
-    max_workers: Optional[int] = None # dispatch threads (default: pool size)
+    max_workers: Optional[int] = None # dispatch threads (default: total replicas)
+    realtime: bool = False            # pace windows against the wall clock
 
 
 @dataclass
@@ -158,6 +208,7 @@ class WindowReport:
     n_coalesced: int = 0              # duplicate queries merged in-window
     n_admitted: int = 0               # scheduled this round
     n_deferred: int = 0               # unaffordable/over-cap, retried next round
+    n_capacity_held: int = 0          # deferred specifically by replica caps
     n_shed: int = 0                   # can never afford → dropped
     n_failed: int = 0                 # queries whose dispatch group faulted
     n_groups: int = 0                 # physical batches dispatched
@@ -165,6 +216,8 @@ class WindowReport:
     est_cost: float = 0.0             # amortized cost the scheduler committed
     spent: float = 0.0                # realized billed cost (Eq. 4 semantics)
     open_models: tuple = ()           # breaker-open member names
+    group_models: tuple = ()          # model index of each dispatched group
+    late_s: float = 0.0               # realtime: how late past the boundary
 
 
 @dataclass
@@ -206,10 +259,16 @@ class OnlineRobatchServer:
     ``pool`` is the member list the dispatcher bills and invokes — usually
     ``policy.exec_pool``, but it may wrap members (e.g.
     :class:`repro.serving.fault.FlakyMember`) as long as order matches, since
-    plans refer to members by index.
+    plans refer to members by index.  A member exposing ``n_replicas`` (a
+    :class:`repro.serving.pool.ReplicaSet`) caps its per-window batch-groups
+    at that count; plain members keep the legacy unbounded-window semantics.
+
+    ``clock`` is the real-time time source (``now()``/``sleep(dt)``); it is
+    only consulted when ``config.realtime`` — virtual runs never sleep.
     """
 
-    def __init__(self, policy, pool: Sequence, wl, config: OnlineConfig):
+    def __init__(self, policy, pool: Sequence, wl, config: OnlineConfig,
+                 clock=None):
         if not hasattr(policy, "window_space"):    # a fitted Robatch (legacy)
             from repro.api.policies import RobatchPolicy
 
@@ -223,30 +282,60 @@ class OnlineRobatchServer:
         self.pool = list(pool)
         self.wl = wl
         self.cfg = config
+        self.clock = clock if clock is not None else MonotonicClock()
         self.now = 0.0
         self.bucket = BudgetBucket(config.budget_per_s, config.burst_s)
         self.cache = ResponseCache(config.cache_entries)
         self.breakers = [CircuitBreaker(config.breaker, clock=lambda: self.now)
                          for _ in self.pool]
+        # replica trackers left on their default wall clock are rebound to the
+        # serving timeline (virtual ticks or wall-relative seconds), so replica
+        # cooldown/probe re-admission recovers on the SAME clock as the
+        # member-level breakers; an explicitly injected tracker clock wins
+        for m in self.pool:
+            tracker = getattr(m, "tracker", None)
+            if tracker is not None and tracker.clock is time.monotonic:
+                tracker.clock = lambda: self.now
+        self._pw_caps = "caps" in inspect.signature(policy.plan_window).parameters
         self.pending: deque[OnlineRequest] = deque()
         self.completed: list[OnlineRequest] = []
         self.windows: list[WindowReport] = []
         self._locks = [threading.Lock() for _ in self.pool]
-        self._pool_exec = ThreadPoolExecutor(
-            max_workers=config.max_workers or max(1, len(self.pool)))
+        self._submit_lock = threading.Lock()
+        workers = config.max_workers or max(
+            1, sum(getattr(m, "n_replicas", 1) for m in self.pool))
+        self._pool_exec = ThreadPoolExecutor(max_workers=workers)
         self._next_rid = 0
         self.n_coalesced = 0
 
     # ------------------------------------------------------------- admission
     def submit(self, query_idx: int, at: Optional[float] = None) -> OnlineRequest:
-        req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
-                            arrived_at=self.now if at is None else at)
-        self._next_rid += 1
-        self.pending.append(req)
-        return req
+        """Thread-safe: a LiveArrivalSource submits concurrently with step()."""
+        with self._submit_lock:
+            req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
+                                arrived_at=self.now if at is None else at)
+            self._next_rid += 1
+            self.pending.append(req)
+            return req
 
     def allowed_models(self) -> list[int]:
         return [k for k, br in enumerate(self.breakers) if br.allow_request()]
+
+    def caps(self) -> dict[int, int]:
+        """Per-member batch-group concurrency caps for the NEXT window.
+
+        A replicated member's cap is its healthy-replica count right now
+        (``ReplicaSet.n_available``), so a replica outage shrinks what the
+        scheduler may commit instead of silently queueing on the survivors;
+        plain members are absent (uncapped — legacy single-engine semantics).
+        """
+        caps = {}
+        for k, m in enumerate(self.pool):
+            if hasattr(m, "n_available"):
+                caps[k] = int(m.n_available())
+            elif hasattr(m, "n_replicas"):
+                caps[k] = int(m.n_replicas)
+        return caps
 
     # -------------------------------------------------------------- serving
     def _complete(self, req: OnlineRequest, *, at: float, utility: float,
@@ -262,6 +351,10 @@ class OnlineRobatchServer:
         self.completed.append(req)
 
     def _invoke(self, k: int, members: np.ndarray):
+        if getattr(self.pool[k], "thread_safe", False):
+            # ReplicaSets serialize per replica internally — concurrent groups
+            # on one member are exactly what the replicas are for
+            return self.pool[k].invoke_batch(self.wl, members)
         with self._locks[k]:          # engines are not thread-safe; members are
             return self.pool[k].invoke_batch(self.wl, members)
 
@@ -335,8 +428,12 @@ class OnlineRobatchServer:
 
         # 5. the policy's windowed decision against the bucket's current
         #    balance (the server restricted the space up front for admission
-        #    control, so no further model mask is needed here)
-        wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx, avail)
+        #    control, so no further model mask is needed here); replica
+        #    capacity caps ride along when the policy understands them
+        caps = self.caps()
+        cap_kw = {"caps": caps or None} if self._pw_caps else {}
+        wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx,
+                                        avail, **cap_kw)
 
         # half-open breakers get exactly ONE probe group: any further groups
         # scheduled on a recovering member are deferred to the next window
@@ -344,7 +441,14 @@ class OnlineRobatchServer:
         half_open = {k for k, br in enumerate(self.breakers)
                      if br.state == CircuitState.HALF_OPEN}
         probed: set[int] = set()
+        used: dict[int, int] = {}     # groups committed per member this window
         dispatch, held = [], []
+        # queries the scheduler itself pushed out under replica-capacity caps
+        if wplan.deferred_idx is not None:
+            for q in wplan.deferred_idx:
+                reqs = by_idx[int(q)]
+                held.extend(reqs)
+                rep.n_capacity_held += len(reqs)
         for (state, members), gcost in zip(wplan.groups, wplan.group_costs):
             k = int(state.model)
             if k in half_open:
@@ -352,6 +456,15 @@ class OnlineRobatchServer:
                     held.extend(req for q in members for req in by_idx[int(q)])
                     continue
                 probed.add(k)
+            cap = caps.get(k)
+            if cap is not None and used.get(k, 0) >= cap:
+                # backstop for policies that pack caps-unaware plans: a member
+                # never runs more concurrent groups than it has replicas
+                grp = [req for q in members for req in by_idx[int(q)]]
+                held.extend(grp)
+                rep.n_capacity_held += len(grp)
+                continue
+            used[k] = used.get(k, 0) + 1
             dispatch.append((state, members))
             rep.est_cost += float(gcost)   # committed cost: dispatched only
         rep.n_deferred += len(held)
@@ -364,6 +477,7 @@ class OnlineRobatchServer:
             fut = self._pool_exec.submit(self._invoke, k, members)
             futures[fut] = (state, members)
         rep.n_groups = len(dispatch)
+        rep.group_models = tuple(int(s.model) for s, _ in dispatch)
 
         requeue: list[OnlineRequest] = []
         for fut, (state, members) in futures.items():
@@ -406,12 +520,18 @@ class OnlineRobatchServer:
             max_ticks: int = 100_000) -> ServerStats:
         """Drive a pre-generated arrival stream to completion.
 
-        ``arrivals`` is a time-sorted list of ``(t, query_idx)``.  The clock is
-        virtual: each tick advances ``window_s``, admits everything that has
-        arrived, and runs one scheduling round; it keeps ticking until the
-        stream is exhausted and the queue drains.
+        ``arrivals`` is a time-sorted list of ``(t, query_idx)``.  By default
+        the clock is virtual: each tick advances ``window_s``, admits
+        everything that has arrived, and runs one scheduling round; it keeps
+        ticking until the stream is exhausted and the queue drains.  With
+        ``config.realtime`` the same loop is paced against the injected wall
+        clock instead (see :meth:`run_paced`) — the identical tick/admission
+        structure is what makes one seeded stream replay identically in both
+        modes.
         """
         arrivals = list(arrivals)
+        if self.cfg.realtime:
+            return self.run_paced(arrivals, max_ticks=max_ticks)
         pos = 0
         for _ in range(max_ticks):
             if pos >= len(arrivals) and not self.pending:
@@ -422,6 +542,70 @@ class OnlineRobatchServer:
                 self.submit(q, at=at)
                 pos += 1
             self.step(t)
+        return self.stats()
+
+    def run_paced(self, arrivals: Sequence[tuple[float, int]], *,
+                  max_ticks: int = 100_000) -> ServerStats:
+        """Real-time drive of a pre-generated stream: sleep to each window
+        boundary on the wall clock, admit what has (wall-)arrived, run one
+        round.  A slow round never skips a window — the next rounds fire
+        back-to-back and the overshoot lands in ``WindowReport.late_s``."""
+        clock = self.clock
+        t0 = clock.now()
+        pos = 0
+        for tick in range(1, max_ticks + 1):
+            if pos >= len(arrivals) and not self.pending:
+                break
+            target = tick * self.cfg.window_s
+            lag = target - (clock.now() - t0)
+            if lag > 0:
+                clock.sleep(lag)
+            now = clock.now() - t0
+            while pos < len(arrivals) and arrivals[pos][0] <= now:
+                at, q = arrivals[pos]
+                self.submit(q, at=at)
+                pos += 1
+            rep = self.step(now)
+            rep.late_s = max(0.0, now - target)
+        return self.stats()
+
+    def run_live(self, arrivals: Sequence[tuple[float, int]], *,
+                 duration_s: Optional[float] = None,
+                 max_ticks: int = 100_000) -> ServerStats:
+        """Real-time serving fronted by a live arrival thread.
+
+        A :class:`LiveArrivalSource` replays the (seeded, pre-generated)
+        stream against the wall clock, submitting each arrival as its
+        timestamp comes due, while this loop fires one scheduling round per
+        window boundary; after ``duration_s`` (default: the stream's horizon)
+        it keeps ticking until the queue drains."""
+        assert self.cfg.realtime, "run_live needs OnlineConfig(realtime=True)"
+        if isinstance(self.clock, FakeClock):
+            raise ValueError("run_live shares the clock between the pacer "
+                             "thread and the serving loop — FakeClock is "
+                             "single-threaded; use run() for fake-clock "
+                             "determinism tests")
+        arrivals = list(arrivals)
+        if duration_s is None:
+            duration_s = arrivals[-1][0] if arrivals else 0.0
+        clock = self.clock
+        t0 = clock.now()
+        source = LiveArrivalSource(self, arrivals, t0=t0)
+        source.start()
+        try:
+            for tick in range(1, max_ticks + 1):
+                target = tick * self.cfg.window_s
+                lag = target - (clock.now() - t0)
+                if lag > 0:
+                    clock.sleep(lag)
+                now = clock.now() - t0
+                rep = self.step(now)
+                rep.late_s = max(0.0, now - target)
+                if now >= duration_s and not source.is_alive() and not self.pending:
+                    break
+        finally:
+            source.stop()
+            source.join(timeout=5.0)
         return self.stats()
 
     # ------------------------------------------------------------- reporting
@@ -452,20 +636,74 @@ class OnlineRobatchServer:
         self._pool_exec.shutdown(wait=True)
 
 
-def poisson_arrivals(rng: np.random.Generator, qps: float, duration_s: float,
-                     universe: np.ndarray, repeat_frac: float = 0.0) -> list[tuple[float, int]]:
-    """Poisson stream over ``universe`` indices; with probability
-    ``repeat_frac`` an arrival re-asks an earlier query (drives cache hits)."""
-    out: list[tuple[float, int]] = []
+class LiveArrivalSource(threading.Thread):
+    """Wall-clock pacer for a pre-generated arrival stream.
+
+    Generation and pacing are deliberately separate concerns: the *stream* is
+    a seeded ``[(t, query_idx)]`` list (:func:`poisson_arrivals`), and this
+    thread only *replays* it — sleeping on the server's clock until each
+    timestamp comes due, then calling ``server.submit(q, at=t)``.  The same
+    list fed to a virtual-clock ``run`` therefore produces the identical
+    request sequence (determinism-tested in ``tests/test_online_serving.py``).
+    """
+
+    def __init__(self, server: "OnlineRobatchServer",
+                 arrivals: Iterable[tuple[float, int]],
+                 t0: Optional[float] = None, poll_s: float = 0.05):
+        super().__init__(daemon=True)
+        self.server = server
+        self.arrivals = list(arrivals)
+        self.clock = server.clock
+        self.t0 = self.clock.now() if t0 is None else t0
+        self.poll_s = poll_s
+        # NB: not ``_stop`` — threading.Thread uses that name internally
+        self._stop_requested = threading.Event()
+        self.n_submitted = 0
+
+    def stop(self) -> None:
+        self._stop_requested.set()
+
+    def run(self) -> None:
+        for t, q in self.arrivals:
+            while not self._stop_requested.is_set():
+                lag = t - (self.clock.now() - self.t0)
+                if lag <= 0:
+                    break
+                self.clock.sleep(min(lag, self.poll_s))
+            if self._stop_requested.is_set():
+                return
+            self.server.submit(int(q), at=float(t))
+            self.n_submitted += 1
+
+
+def arrival_stream(rng: np.random.Generator, qps: float, universe: np.ndarray,
+                   repeat_frac: float = 0.0) -> Iterator[tuple[float, int]]:
+    """Unbounded seeded Poisson ``(t, query_idx)`` generator over ``universe``
+    indices; with probability ``repeat_frac`` an arrival re-asks an earlier
+    query (drives cache hits).
+
+    Pure *generation*: no run length, no pacing.  Bound it with
+    :func:`poisson_arrivals`, replay it virtually with ``run`` or in wall time
+    with :class:`LiveArrivalSource` — the draws depend only on the rng state,
+    so one seed yields one stream everywhere.
+    """
     t = 0.0
     seen: list[int] = []
     while True:
         t += float(rng.exponential(1.0 / qps))
-        if t >= duration_s:
-            return out
         if seen and float(rng.random()) < repeat_frac:
             q = int(seen[int(rng.integers(0, len(seen)))])
         else:
             q = int(universe[int(rng.integers(0, len(universe)))])
             seen.append(q)
+        yield (t, q)
+
+
+def poisson_arrivals(rng: np.random.Generator, qps: float, duration_s: float,
+                     universe: np.ndarray, repeat_frac: float = 0.0) -> list[tuple[float, int]]:
+    """The arrivals of :func:`arrival_stream` falling before ``duration_s``."""
+    out: list[tuple[float, int]] = []
+    for t, q in arrival_stream(rng, qps, universe, repeat_frac):
+        if t >= duration_s:
+            return out
         out.append((t, q))

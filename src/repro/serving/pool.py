@@ -24,14 +24,15 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.data.simulator import BatchResult
+from repro.data.simulator import BatchResult, evaluate_chunked
 from repro.data.workload import Workload
 from repro.serving.batcher import BatchPromptFormatter
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.fault import ReplicaPolicy, ReplicaTracker
 
 
 @dataclass
@@ -89,9 +90,118 @@ class ServedPoolMember:
 
     def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
                  rng=None) -> np.ndarray:
-        idx = np.asarray(idx)
-        out = np.zeros(len(idx))
-        for s in range(0, len(idx), batch_size):
-            chunk = idx[s:s + batch_size]
-            out[s:s + len(chunk)] = self.invoke_batch(wl, chunk).utilities
-        return out
+        return evaluate_chunked(self, wl, idx, batch_size)
+
+
+class ReplicaSet:
+    """N interchangeable replicas behind ONE pool-member facade.
+
+    The scheduler and the online server see a single member — one name, one
+    price, one circuit breaker, one column family in the candidate space — of
+    capacity ``n_replicas`` concurrent batch-groups (the per-window cap the
+    scheduler enforces, see ``group_caps`` in
+    :func:`repro.core.scheduler.greedy_schedule_window`).  Each invocation is
+    dispatched to the least-loaded *healthy* replica (in-flight count, index
+    as tie-break); a replica fault is retried on the next-healthiest sibling
+    while :class:`repro.serving.fault.ReplicaTracker` records the failure, so
+    a single-replica outage degrades the set's capacity instead of tripping
+    the member's breaker.  Only when every replica has failed does
+    ``invoke_batch`` raise — that is the signal the member-level breaker
+    consumes.
+
+    Replicas must be interchangeable pool members (same pricing/behaviour):
+    distinct engines over shared trained weights for the real pool
+    (:func:`repro.serving.tinypool.build_tiny_pool`), dataclass copies for the
+    simulator.  ``thread_safe`` tells the online dispatcher to skip its
+    per-member serialization lock — replicas serialize themselves, so groups
+    bound for different replicas genuinely run concurrently.
+    """
+
+    thread_safe = True
+
+    def __init__(self, replicas: Sequence, *, name: Optional[str] = None,
+                 policy: Optional[ReplicaPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if not replicas:
+            raise ValueError("ReplicaSet needs at least one replica")
+        self.replicas = list(replicas)
+        self.name = name if name is not None else self.replicas[0].name
+        self.tracker = ReplicaTracker(len(self.replicas), policy, clock)
+        self._inflight = [0] * len(self.replicas)
+        self._lock = threading.Lock()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def n_available(self) -> int:
+        """Healthy-replica count — the member's CURRENT group capacity (the
+        online server re-reads this every window, so an ejected replica
+        shrinks the caps the scheduler plans against).  Never 0: a fully
+        ejected set still gets one probe group, and the member-level breaker
+        owns the remove-from-space decision."""
+        return max(1, self.tracker.n_healthy())
+
+    @property
+    def c_in(self) -> float:
+        return self.replicas[0].c_in
+
+    @property
+    def c_out(self) -> float:
+        return self.replicas[0].c_out
+
+    @property
+    def context_len(self) -> int:
+        return self.replicas[0].context_len
+
+    def loads(self) -> list[int]:
+        with self._lock:
+            return list(self._inflight)
+
+    def _acquire(self, exclude: set[int]) -> Optional[int]:
+        """Least-loaded healthy replica (falls back to ejected ones only when
+        every non-excluded replica is ejected — a last-ditch probe beats
+        failing a batch that might still be servable)."""
+        with self._lock:
+            ranked = [r for r in range(len(self.replicas)) if r not in exclude]
+            if not ranked:
+                return None
+            healthy = [r for r in ranked if self.tracker.healthy(r)]
+            r = min(healthy or ranked, key=lambda i: (self._inflight[i], i))
+            self._inflight[r] += 1
+            return r
+
+    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
+        tried: set[int] = set()
+        last: Optional[Exception] = None
+        while True:
+            r = self._acquire(tried)
+            if r is None:
+                raise RuntimeError(
+                    f"{self.name}: all {self.n_replicas} replicas failed") from last
+            t0 = time.perf_counter()
+            try:
+                out = self.replicas[r].invoke_batch(wl, batch_idx)
+            except Exception as e:        # noqa: BLE001 — replica fault
+                last = e
+                self.tracker.record_failure(r)
+                tried.add(r)
+            else:
+                self.tracker.record_success(r, time.perf_counter() - t0)
+                return out
+            finally:
+                with self._lock:
+                    self._inflight[r] -= 1
+
+    def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
+                 rng=None) -> np.ndarray:
+        return evaluate_chunked(self, wl, idx, batch_size)
+
+
+def replicate_simulated(member, n: int, **kwargs) -> ReplicaSet:
+    """ReplicaSet of ``n`` dataclass copies of a simulated member (copies are
+    deterministic-identical, so replication changes capacity, not outcomes)."""
+    from dataclasses import replace
+
+    return ReplicaSet([replace(member) for _ in range(n)],
+                      name=member.name, **kwargs)

@@ -22,7 +22,7 @@ from repro.data.workload import BenchmarkSpec, Workload
 from repro.models.transformer import Model
 from repro.serving.batcher import BatchPromptFormatter
 from repro.serving.engine import ServingEngine
-from repro.serving.pool import ServedPoolMember, TextTask
+from repro.serving.pool import ReplicaSet, ServedPoolMember, TextTask
 from repro.training.optimizer import adamw
 
 __all__ = ["SYSTEM_PROMPT", "TINY_PRICES", "gen_query",
@@ -70,8 +70,14 @@ def _make_batches(rng, fmt, batch_size, seq_len, n_steps):
 def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
                   names=("tiny-s", "tiny-m", "tiny-l"), *, batch_size: int = 8,
                   seq_len: int = 192, max_slots: int = 4, max_len: int = 512,
-                  verbose: bool = True) -> dict[str, ServingEngine]:
-    """Train one engine per tiny architecture on the addition task.
+                  replicas: int = 1,
+                  verbose: bool = True) -> dict[str, list[ServingEngine]]:
+    """Train the tiny architectures on the addition task; returns
+    ``{name: [engine, ...]}`` with ``replicas`` engines per architecture.
+
+    Each architecture trains ONCE — replica engines share the trained
+    weights (params are immutable on the jax side) but hold their own
+    KV-cache slots, so they serve genuinely concurrent batches.
 
     ``seq_len`` must cover the longest batched example: at the previous
     default of 160 the b=5/6 examples were silently truncated by
@@ -109,8 +115,9 @@ def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
             print(f"trained {name}: loss {losses[0]:.2f} -> "
                   f"{np.mean(losses[-20:]):.2f} "
                   f"({time.time() - t0:.0f}s, {len(losses)} steps)", flush=True)
-        engines[name] = ServingEngine(model, params, max_slots=max_slots,
-                                      max_len=max_len)
+        engines[name] = [ServingEngine(model, params, max_slots=max_slots,
+                                       max_len=max_len)
+                        for _ in range(replicas)]
     return engines
 
 
@@ -151,16 +158,27 @@ def build_task_workload(rng, fmt: BatchPromptFormatter, n_train: int,
 
 
 def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 48,
-                    verbose: bool = True):
+                    replicas: int = 1, verbose: bool = True):
     """Everything the routing stack needs: (workload, pool, formatter).
 
     The returned members satisfy the pool-member protocol, so ``Robatch`` and
-    ``OnlineRobatchServer`` use them exactly like the simulator."""
+    ``OnlineRobatchServer`` use them exactly like the simulator.  With
+    ``replicas > 1`` each member is a :class:`~repro.serving.pool.ReplicaSet`
+    of that many engines over one set of trained weights — N-way concurrent
+    serving without N training runs."""
     fmt = BatchPromptFormatter(SYSTEM_PROMPT)
-    engines = train_engines(rng, fmt, steps, verbose=verbose)
+    engines = train_engines(rng, fmt, steps, replicas=replicas, verbose=verbose)
     wl, task = build_task_workload(rng, fmt, n_train, n_test)
-    pool = [ServedPoolMember(name, engines[name], fmt, task,
-                             c_in=TINY_PRICES[name][0], c_out=TINY_PRICES[name][1],
-                             context_len=512)
-            for name in ("tiny-s", "tiny-m", "tiny-l")]
+
+    def member(name: str, engine: ServingEngine) -> ServedPoolMember:
+        return ServedPoolMember(name, engine, fmt, task,
+                                c_in=TINY_PRICES[name][0],
+                                c_out=TINY_PRICES[name][1], context_len=512)
+
+    if replicas > 1:
+        pool = [ReplicaSet([member(name, e) for e in engines[name]], name=name)
+                for name in ("tiny-s", "tiny-m", "tiny-l")]
+    else:
+        pool = [member(name, engines[name][0])
+                for name in ("tiny-s", "tiny-m", "tiny-l")]
     return wl, pool, fmt

@@ -1,1 +1,1 @@
-from repro.training.optimizer import adamw, OptimizerState, clip_by_global_norm, cosine_schedule
+from repro.training.optimizer import OptimizerState, adamw, clip_by_global_norm, cosine_schedule

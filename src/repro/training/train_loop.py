@@ -8,18 +8,16 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
-from repro.config import MeshConfig, ModelConfig, ShardingConfig
-from repro.models.layers import logical_rules, logical_to_pspec
+from repro.config import MeshConfig, ShardingConfig
 from repro.models.transformer import Model
-from repro.training.optimizer import Optimizer, OptimizerState, adamw
+from repro.training.optimizer import Optimizer, OptimizerState
 
 
 def batch_pspec(mesh_cfg: MeshConfig) -> P:

@@ -1,2 +1,2 @@
-from repro.utils.tree import tree_size, tree_bytes, tree_summary
 from repro.utils.prng import PRNGFactory
+from repro.utils.tree import tree_bytes, tree_size, tree_summary

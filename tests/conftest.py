@@ -4,7 +4,6 @@ import os
 # flag in a subprocess; never set it globally here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import numpy as np
 import pytest
 
 from repro.data import make_simulated_pool, make_workload

@@ -6,13 +6,24 @@ import numpy as np
 import pytest
 
 from repro.api import (
-    Gateway, PolicySpec, PoolSpec, RunSpec, SchedulingPolicy,
-    UnknownPolicyError, get_policy, list_policies, register_policy,
+    Gateway,
+    PolicySpec,
+    PoolSpec,
+    RunSpec,
+    SchedulingPolicy,
+    UnknownPolicyError,
+    get_policy,
+    list_policies,
+    register_policy,
 )
 from repro.core import execute, execute_plan
 from repro.core.baselines import (
-    batch_only, batcher_assignment_plan, frugalgpt_execute, obp_plan,
-    router_only, routellm_assignment,
+    batch_only,
+    batcher_assignment_plan,
+    frugalgpt_execute,
+    obp_plan,
+    routellm_assignment,
+    router_only,
 )
 from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
 
@@ -65,10 +76,19 @@ def test_register_policy_makes_custom_strategy_available():
 # ---------------------------------------------------------------------------
 
 def test_runspec_dict_roundtrip():
-    spec = RunSpec(pool=PoolSpec(task="gsm8k", family="gemma3", n_train=64),
+    spec = RunSpec(pool=PoolSpec(task="gsm8k", family="gemma3", n_train=64,
+                                 replicas=3),
                    policy=PolicySpec("routellm", {"tau": 0.6, "b": 4}),
                    router="knn", coreset_size=32)
     assert RunSpec.from_dict(spec.to_dict()) == spec
+    assert RunSpec.from_dict(spec.to_dict()).pool.replicas == 3
+
+
+def test_poolspec_replicas_build_replicated_members():
+    wl, pool = PoolSpec(n_train=32, n_val=8, n_test=16, replicas=2).build()
+    assert all(m.n_replicas == 2 for m in pool)
+    with pytest.raises(ValueError, match="replicas"):
+        PoolSpec(replicas=0).build()
 
 
 def test_runspec_json_roundtrip():

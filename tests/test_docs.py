@@ -47,3 +47,19 @@ def test_readme_and_architecture_exist():
     assert os.path.exists(os.path.join(ROOT, "README.md"))
     assert os.path.exists(os.path.join(ROOT, "docs", "architecture.md"))
     assert os.path.exists(os.path.join(ROOT, "docs", "batch_format.md"))
+
+
+def test_ci_workflow_is_valid():
+    yaml = pytest.importorskip("yaml")
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        wf = yaml.safe_load(f)
+    # env pinning mirrors tools/smoke.sh: CPU backend, src-relative imports
+    assert wf["env"]["JAX_PLATFORMS"] == "cpu"
+    assert wf["env"]["PYTHONPATH"] == "src"
+    assert set(wf["jobs"]) == {"lint", "tier1", "smoke", "bench"}
+    for name, job in wf["jobs"].items():
+        assert "runs-on" in job and job["steps"], name
+    # the bench regression gate must never block a PR
+    assert wf["jobs"]["bench"]["continue-on-error"] is True
+    assert os.path.exists(os.path.join(ROOT, "requirements-ci.txt"))
+    assert os.path.exists(os.path.join(ROOT, "ruff.toml"))

@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
 (interpret=True executes kernel bodies on CPU), plus the ops-layer chunked
 fallbacks against the same oracles, plus hypothesis property sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -36,7 +35,8 @@ TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
     (1, 128, 2, 2, 64, False, None, 64, 32),   # bidirectional (encoder)
 ])
 def test_flash_attention_vs_oracle(dtype, B, S, H, Hk, D, causal, win, qb, kb):
-    q, k, v = arr(B, S, H, D, dtype=dtype), arr(B, S, Hk, D, dtype=dtype), arr(B, S, Hk, D, dtype=dtype)
+    q, k, v = (arr(B, S, H, D, dtype=dtype), arr(B, S, Hk, D, dtype=dtype),
+               arr(B, S, Hk, D, dtype=dtype))
     want = ref.mha_ref(q, k, v, causal=causal, window=win)
     got = flash_attention_pallas(q, k, v, causal=causal, window=win,
                                  q_block=qb, kv_block=kb, interpret=True)

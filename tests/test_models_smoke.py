@@ -53,7 +53,8 @@ def test_arch_smoke_forward_and_train_step(arch):
     assert float(l1) < float(l0) + 1e-3, (float(l0), float(l1))
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if get_arch(a).uses_kv_cache or get_arch(a).sub_quadratic])
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_arch(a).uses_kv_cache or get_arch(a).sub_quadratic])
 def test_arch_smoke_decode(arch):
     """Prefill + one decode step matches the full forward on the extended seq."""
     cfg = get_arch(arch).reduced()

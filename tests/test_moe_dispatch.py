@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
 
 from repro.config import ModelConfig, MoEConfig, ShardingConfig, get_arch
 from repro.models import moe as moe_mod

@@ -1,12 +1,25 @@
 """Online serving layer: windowed scheduling under a rolling budget, circuit
-breaking + rescheduling, response caching, duplicate coalescing."""
+breaking + rescheduling, response caching, duplicate coalescing, replica
+failover, capacity caps, and real-time pacing."""
+import itertools
+import threading
+import time
+
 import numpy as np
 import pytest
 
+from repro.core.problem import group_into_batches
 from repro.core.scheduler import greedy_schedule, greedy_schedule_window, restrict_space
-from repro.serving.fault import BreakerPolicy, CircuitState, FlakyMember
-from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
-                                  poisson_arrivals)
+from repro.data.simulator import BatchResult
+from repro.serving.fault import BreakerPolicy, CircuitState, FlakyMember, ReplicaPolicy
+from repro.serving.online import (
+    FakeClock,
+    OnlineConfig,
+    OnlineRobatchServer,
+    arrival_stream,
+    poisson_arrivals,
+)
+from repro.serving.pool import ReplicaSet, replicate_simulated
 
 
 def _rate(rb, test_idx, qps, budget_x=3.0):
@@ -210,3 +223,245 @@ def test_poisson_arrivals_sorted_and_in_universe(agnews):
     ts = [t for t, _ in arr]
     assert ts == sorted(ts) and all(0 <= t < 5.0 for t in ts)
     assert all(int(q) in set(test.tolist()) for _, q in arr)
+
+
+def test_arrival_generation_is_decoupled_from_run_length(agnews):
+    # generation is pure in the rng: the bounded list is a prefix of the
+    # unbounded stream, and the same seed replays the same stream
+    test = agnews.subset_indices("test")
+    bounded = poisson_arrivals(np.random.default_rng(9), 20.0, 4.0, test,
+                               repeat_frac=0.3)
+    unbounded = list(itertools.islice(
+        arrival_stream(np.random.default_rng(9), 20.0, test, repeat_frac=0.3),
+        len(bounded) + 10))
+    assert bounded == unbounded[:len(bounded)]
+    assert all(t >= 4.0 for t, _ in unbounded[len(bounded):len(bounded) + 1])
+    again = poisson_arrivals(np.random.default_rng(9), 20.0, 4.0, test,
+                             repeat_frac=0.3)
+    assert bounded == again
+
+
+# ---------------------------------------------------------------------------
+# replica sets: least-loaded dispatch, failover, probe re-admission
+# ---------------------------------------------------------------------------
+
+class _FakeMember:
+    """Pool member stub whose utilities identify which replica served."""
+
+    def __init__(self, tag: float, block: threading.Event = None):
+        self.name = "fake"
+        self.c_in, self.c_out, self.context_len = 1.0, 2.0, 512
+        self.tag = tag
+        self.block = block
+        self.n_calls = 0
+
+    def invoke_batch(self, wl, batch_idx):
+        self.n_calls += 1
+        if self.block is not None:
+            assert self.block.wait(timeout=10.0)
+        return BatchResult(utilities=np.full(len(batch_idx), self.tag),
+                           in_tokens=10, out_tokens=2, latency_s=0.01)
+
+
+def test_replica_set_dispatches_to_least_loaded_replica():
+    release = threading.Event()
+    rs = ReplicaSet([_FakeMember(0.0, block=release), _FakeMember(1.0)],
+                    name="m")
+    first: dict = {}
+    th = threading.Thread(
+        target=lambda: first.setdefault("out", rs.invoke_batch(None, np.arange(2))))
+    th.start()
+    for _ in range(500):                      # replica 0 (index tie-break) busy
+        if rs.loads() == [1, 0]:
+            break
+        time.sleep(0.005)
+    assert rs.loads() == [1, 0]
+    second = rs.invoke_batch(None, np.arange(2))   # least-loaded → replica 1
+    assert float(second.utilities[0]) == 1.0
+    release.set()
+    th.join(timeout=10.0)
+    assert float(first["out"].utilities[0]) == 0.0
+    assert rs.loads() == [0, 0]
+
+
+def test_replica_failure_retries_sibling_then_ejects():
+    flaky = FlakyMember(_FakeMember(0.0), fail_from=0)   # replica 0 always dies
+    rs = ReplicaSet([flaky, _FakeMember(1.0)], name="m")
+    out = rs.invoke_batch(None, np.arange(3))            # retried on replica 1
+    assert float(out.utilities[0]) == 1.0
+    assert rs.tracker.replicas[0].n_failures == 1 and rs.tracker.healthy(0)
+    out = rs.invoke_batch(None, np.arange(3))            # second strike ejects
+    assert float(out.utilities[0]) == 1.0
+    assert not rs.tracker.healthy(0) and rs.n_available() == 1
+    n_flaky = flaky.n_calls
+    rs.invoke_batch(None, np.arange(3))                  # ejected → not retried
+    assert flaky.n_calls == n_flaky
+
+
+def test_replica_set_raises_only_when_every_replica_fails():
+    rs = ReplicaSet([FlakyMember(_FakeMember(0.0), fail_from=0),
+                     FlakyMember(_FakeMember(1.0), fail_from=0)], name="m")
+    with pytest.raises(RuntimeError, match="all 2 replicas"):
+        rs.invoke_batch(None, np.arange(2))
+    assert rs.tracker.replicas[0].n_failures == 1
+    assert rs.tracker.replicas[1].n_failures == 1
+
+
+def test_replica_probe_readmission_after_cooldown():
+    now = [0.0]
+    rs = ReplicaSet([FlakyMember(_FakeMember(0.0), fail_from=0, fail_until=1),
+                     _FakeMember(1.0)],
+                    name="m", policy=ReplicaPolicy(eject_after=1, cooldown_s=5.0),
+                    clock=lambda: now[0])
+    out = rs.invoke_batch(None, np.arange(2))     # replica 0 faults → ejected
+    assert float(out.utilities[0]) == 1.0 and not rs.tracker.healthy(0)
+    out = rs.invoke_batch(None, np.arange(2))     # cooldown pending → sibling
+    assert float(out.utilities[0]) == 1.0
+    now[0] = 6.0                                  # cooldown elapsed: one probe
+    out = rs.invoke_batch(None, np.arange(2))
+    assert float(out.utilities[0]) == 0.0         # probe succeeded on replica 0
+    assert rs.tracker.healthy(0) and rs.n_available() == 2
+
+
+def test_one_replica_outage_degrades_set_without_tripping_breaker(
+        fitted_rb, agnews, pool):
+    sets = [replicate_simulated(m, 2) for m in pool]
+    sets[0].replicas[0] = FlakyMember(sets[0].replicas[0], fail_from=0)
+    srv = _server(fitted_rb, sets, agnews, qps=30.0, budget_x=4.0)
+    arrivals = poisson_arrivals(np.random.default_rng(6), 30.0, 8.0,
+                                agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert all(br.state == CircuitState.CLOSED for br in srv.breakers)
+    assert stats.n_completed == stats.n_submitted and stats.n_dropped == 0
+    assert stats.n_reroutes == 0                  # absorbed inside the set
+    assert sets[0].tracker.replicas[0].n_failures > 0
+    assert not sets[0].tracker.healthy(0)         # dead replica ejected
+    served_on = {r.model for r in srv.completed if not r.cache_hit}
+    assert 0 in served_on                         # the member kept serving
+
+
+# ---------------------------------------------------------------------------
+# replica capacity caps
+# ---------------------------------------------------------------------------
+
+def test_greedy_schedule_window_respects_group_caps(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:24]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost.max(axis=1).sum())  # rich: upgrades to b=1 states
+    caps = {0: 1, 1: 1, 2: 1}
+    res = greedy_schedule_window(space, test, budget, group_caps=caps)
+    per_model: dict = {}
+    for state, _members in group_into_batches(res.assignment):
+        per_model[state.model] = per_model.get(state.model, 0) + 1
+    assert per_model and all(n <= caps[k] for k, n in per_model.items())
+    assert len(res.deferred_idx) > 0              # the caps actually bound
+    scheduled = set(res.assignment.query_idx.tolist())
+    assert scheduled | set(res.deferred_idx.tolist()) == set(test.tolist())
+    assert scheduled.isdisjoint(res.deferred_idx.tolist())
+
+
+def test_group_cap_zero_removes_model_from_window_space(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:16]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost[:, space.initial_state].sum()) * 4
+    res = greedy_schedule_window(space, test, budget, group_caps={0: 0})
+    assert 0 not in set(np.unique(res.assignment.model))
+    # every member saturated: the window defers wholesale instead of crashing
+    res = greedy_schedule_window(space, test, budget,
+                                 group_caps={0: 0, 1: 0, 2: 0})
+    assert len(res.assignment.query_idx) == 0
+    assert res.deferred_idx.tolist() == test.tolist()
+
+
+def test_server_never_dispatches_more_groups_than_replicas(
+        fitted_rb, agnews, pool):
+    sets = [replicate_simulated(m, 2) for m in pool]
+    srv = _server(fitted_rb, sets, agnews, qps=40.0, budget_x=20.0,
+                  window_s=0.5)
+    arrivals = poisson_arrivals(np.random.default_rng(7), 40.0, 8.0,
+                                agnews.subset_indices("test"))
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.n_completed == stats.n_submitted and stats.n_dropped == 0
+    for w in stats.windows:
+        for k in set(w.group_models):
+            assert w.group_models.count(k) <= 2
+    assert sum(w.n_capacity_held for w in stats.windows) > 0  # caps binding
+
+
+# ---------------------------------------------------------------------------
+# real-time pacing
+# ---------------------------------------------------------------------------
+
+def test_realtime_mode_paces_windows_on_a_fake_clock(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    clk = FakeClock()
+    cfg = OnlineConfig(budget_per_s=_rate(fitted_rb, test, 20.0), window_s=0.25,
+                       realtime=True)
+    srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg, clock=clk)
+    arrivals = poisson_arrivals(np.random.default_rng(8), 20.0, 3.0, test)
+    stats = srv.run(arrivals)
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    # windows fired exactly on the boundaries: t = k·window_s, never late
+    for k, w in enumerate(stats.windows, start=1):
+        assert w.t == pytest.approx(k * 0.25)
+        assert w.late_s == 0.0
+    assert clk.t == pytest.approx(len(stats.windows) * 0.25)
+    assert clk.n_sleeps >= len(stats.windows)
+
+
+def test_realtime_run_tracks_wall_clock_duration(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    cfg = OnlineConfig(budget_per_s=_rate(fitted_rb, test, 20.0), window_s=0.1,
+                       realtime=True)
+    srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg)  # monotonic clock
+    arrivals = poisson_arrivals(np.random.default_rng(8), 20.0, 0.5, test)
+    t0 = time.monotonic()
+    stats = srv.run(arrivals)
+    wall = time.monotonic() - t0
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    assert 0.4 <= wall <= 3.0          # paced: neither instant nor runaway
+
+
+def test_virtual_and_realtime_replay_one_seeded_stream_identically(
+        fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    arrivals = poisson_arrivals(np.random.default_rng(11), 25.0, 5.0, test,
+                                repeat_frac=0.3)
+
+    def serve(realtime):
+        cfg = OnlineConfig(budget_per_s=_rate(fitted_rb, test, 25.0),
+                           window_s=0.25, realtime=realtime)
+        srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg,
+                                  clock=FakeClock() if realtime else None)
+        stats = srv.run(arrivals)
+        srv.close()
+        trace = sorted((r.rid, r.query_idx, r.model, r.batch, r.cache_hit,
+                        round(r.cost, 12), round(r.completed_at, 9))
+                       for r in srv.completed)
+        return stats, trace
+
+    v_stats, v_trace = serve(realtime=False)
+    r_stats, r_trace = serve(realtime=True)
+    assert v_trace == r_trace
+    assert v_stats.total_cost == pytest.approx(r_stats.total_cost)
+    assert v_stats.qps == pytest.approx(r_stats.qps)
+
+
+def test_run_live_submits_the_stream_from_a_pacer_thread(
+        fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    cfg = OnlineConfig(budget_per_s=_rate(fitted_rb, test, 30.0), window_s=0.1,
+                       realtime=True)
+    srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg)
+    arrivals = poisson_arrivals(np.random.default_rng(12), 30.0, 0.5, test)
+    stats = srv.run_live(arrivals, duration_s=0.5)
+    srv.close()
+    assert stats.n_submitted == len(arrivals)
+    assert stats.n_completed == stats.n_submitted
+    # the pacer stamped each request with its generated arrival time
+    assert sorted(r.arrived_at for r in srv.completed) == \
+        pytest.approx(sorted(t for t, _ in arrivals))

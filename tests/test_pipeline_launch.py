@@ -4,7 +4,6 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 from repro.data.pipeline import ShardedPipeline, synthetic_lm_stream
 

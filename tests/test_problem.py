@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.problem import Assignment, CostModel, State, group_into_batches
+from repro.core.problem import Assignment, CostModel, group_into_batches
 
 
 @pytest.fixture()

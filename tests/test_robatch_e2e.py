@@ -1,15 +1,17 @@
 """End-to-end Robatch behaviour + baselines + ablations on the simulated pool."""
-import os
 import numpy as np
 import pytest
 
-from repro.core import CostModel, Robatch, execute, execute_plan
+from repro.core import Robatch, execute, execute_plan
 from repro.core.baselines import (
-    batch_only, batcher_assignment_plan, frugalgpt_execute, obp_plan,
-    router_only, routellm_assignment, single_model_assignment,
-    vanilla_router_assignment,
+    batch_only,
+    batcher_assignment_plan,
+    frugalgpt_execute,
+    obp_plan,
+    routellm_assignment,
+    router_only,
+    single_model_assignment,
 )
-from repro.core.scheduler import greedy_schedule
 
 
 @pytest.fixture(scope="module")

@@ -5,8 +5,13 @@ import pytest
 
 from repro.core.problem import CostModel
 from repro.core.scaling import (
-    ProfileCache, b_max_from_epsilon, batch_grid, calibrate_model,
-    fit_scaling, rcu, ternary_search_rcu,
+    ProfileCache,
+    b_max_from_epsilon,
+    batch_grid,
+    calibrate_model,
+    fit_scaling,
+    rcu,
+    ternary_search_rcu,
 )
 
 

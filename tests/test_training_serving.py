@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
-from repro.config import ModelConfig, ShardingConfig, get_arch
+from repro.config import ShardingConfig, get_arch
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.transformer import Model
 from repro.serving.engine import Request, ServingEngine

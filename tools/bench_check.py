@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare a fresh ``BENCH_online.json`` (written by
+``benchmarks/online_throughput.py``) against the committed baseline.
+
+Usage::
+
+    python tools/bench_check.py [CURRENT] [BASELINE]
+
+Defaults: ``results/bench/BENCH_online.json`` vs.
+``benchmarks/baselines/BENCH_online.json``.
+
+What is compared, and how:
+
+* **schema + config** must match exactly — a drifted schema or changed run
+  parameters makes the numbers incomparable, which is its own failure
+  (exit 2), distinct from a regression (exit 1).
+* **deterministic counters** (completed, submitted, dropped, tripped flags)
+  must match exactly: the virtual-clock simulator streams are seeded, so any
+  drift is a behaviour change.
+* **continuous metrics** (sustained QPS, p50/p99, cost, deferral counts) are
+  compared with per-metric relative tolerances — loose enough to absorb
+  float/library drift across environments, tight enough to catch a real
+  serving-plane regression.
+
+Wall-clock fields are never compared (CI machines vary).  The CI job runs
+this non-blocking (the bench job uploads both files as artifacts); run it
+locally after touching the serving plane.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# metric -> relative tolerance; anything not listed here (and not in EXACT)
+# is ignored (e.g. wall_s)
+TOLERANCES = {
+    "sustained_qps": 0.15,
+    "p50_s": 0.25,
+    "p99_s": 0.25,
+    "mean_utility": 0.15,
+    "cost": 0.15,
+    "budget_allowance": 0.10,
+    "cache_hits": 0.25,
+    "deferred": 0.50,
+    "capacity_deferred": 0.50,
+    "reroutes": 0.50,
+    "replica_failures": 0.50,
+    "replica_ejections": 0.50,
+}
+# counter metrics sit near 0 in healthy baselines, where a purely relative
+# band degenerates to [0, 0]; the tolerance is taken over max(|baseline|,
+# this floor) so a one-count float-drift flip never reads as a regression
+ABS_FLOOR = {
+    "cache_hits": 8,
+    "deferred": 8,
+    "capacity_deferred": 20,
+    "reroutes": 4,
+    "replica_failures": 4,
+    "replica_ejections": 2,
+}
+EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
+         "replicas", "window_s"}
+
+
+def _rows(section):
+    return section if isinstance(section, list) else [section]
+
+
+def _key(row: dict) -> tuple:
+    return (row.get("window_s"), row.get("replicas"))
+
+
+def compare(current: dict, baseline: dict) -> list[str]:
+    problems: list[str] = []
+    if current.get("schema") != baseline.get("schema"):
+        return [f"schema mismatch: current={current.get('schema')} "
+                f"baseline={baseline.get('schema')} (regenerate the baseline)"]
+    if current.get("config") != baseline.get("config"):
+        return [f"config mismatch (numbers not comparable):\n"
+                f"  current : {current.get('config')}\n"
+                f"  baseline: {baseline.get('config')}"]
+    sections = sorted(set(baseline) - {"schema", "config"})
+    for sec in sections:
+        cur_rows = {_key(r): r for r in _rows(current.get(sec, []))}
+        for base_row in _rows(baseline[sec]):
+            where = f"{sec}[{_key(base_row)}]"
+            cur = cur_rows.get(_key(base_row))
+            if cur is None:
+                problems.append(f"{where}: row missing from current run")
+                continue
+            for metric, base_v in base_row.items():
+                if metric not in cur:
+                    problems.append(f"{where}.{metric}: missing from current run")
+                    continue
+                cur_v = cur[metric]
+                if metric in EXACT:
+                    if cur_v != base_v:
+                        problems.append(f"{where}.{metric}: {cur_v!r} != "
+                                        f"baseline {base_v!r} (exact)")
+                elif metric in TOLERANCES:
+                    tol = TOLERANCES[metric]
+                    span = tol * max(abs(base_v), ABS_FLOOR.get(metric, 0.0))
+                    lo, hi = base_v - span, base_v + span
+                    if not (lo - 1e-12 <= cur_v <= hi + 1e-12):
+                        problems.append(
+                            f"{where}.{metric}: {cur_v:.6g} outside "
+                            f"[{lo:.6g}, {hi:.6g}] (baseline {base_v:.6g} "
+                            f"± {tol:.0%})")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    cur_path = argv[1] if len(argv) > 1 else "results/bench/BENCH_online.json"
+    base_path = argv[2] if len(argv) > 2 else "benchmarks/baselines/BENCH_online.json"
+    try:
+        with open(cur_path) as f:
+            current = json.load(f)
+    except OSError as e:
+        print(f"bench_check: cannot read current run {cur_path}: {e}")
+        return 2
+    try:
+        with open(base_path) as f:
+            baseline = json.load(f)
+    except OSError as e:
+        print(f"bench_check: cannot read baseline {base_path}: {e}")
+        return 2
+    problems = compare(current, baseline)
+    if not problems:
+        print(f"bench_check: OK — {cur_path} within tolerance of {base_path}")
+        return 0
+    schema_issue = any("mismatch" in p for p in problems[:1])
+    print(f"bench_check: {len(problems)} problem(s) vs {base_path}:")
+    for p in problems:
+        print(f"  - {p}")
+    return 2 if schema_issue else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -30,4 +30,9 @@ for policy in $POLICIES; do
         --qps 20 --duration 5 --n-train 128 --coreset 32
 done
 
+# real-time plane: wall-clock pacing behind a live arrival thread, across
+# 2-replica members (capacity caps + least-loaded dispatch)
+python -m repro.launch.serve online --realtime --duration 3 --qps 10 \
+    --n-train 128 --coreset 32 --replicas 2
+
 echo "smoke: OK"
