@@ -4,6 +4,14 @@ counts, plus graceful degradation under two scripted outages: a whole-member
 failure (circuit breaker trips, traffic reroutes) and a single-replica
 failure inside a ReplicaSet (the set degrades instead of breaking).
 
+Two capacity legs ride on the replica machinery: ``cap_mode_compare`` pits
+the capacity-aware Δ-heap (pack over-cap members into fewer, larger batches)
+against the legacy ``_apply_group_caps`` post-pass on the R=1 stream — the
+Δ-heap must defer strictly fewer queries — and ``autoscale`` drives a
+warm→burst→drain load ramp through the backlog-driven Autoscaler (replicas
+rise with the burst, drain back after it, and hold less work to capacity
+than a fixed R=1 pool).
+
 Default pool is the REAL trained tiny pool (``repro.serving.tinypool``, the
 ``src/repro/configs/tiny_pool.py`` architectures served by the
 continuous-batching engine); ``BENCH_QUICK=1`` or ``--pool sim`` swaps in the
@@ -38,12 +46,14 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import QUICK, RESULTS_DIR, emit, save, setup
 from repro.core import Robatch
+from repro.serving.autoscale import AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, FlakyMember
 from repro.serving.online import OnlineConfig, OnlineRobatchServer, poisson_arrivals
 from repro.serving.pool import ReplicaSet, replicate_simulated
+from repro.serving.tinypool import replica_factory
 
 WINDOWS = (0.25, 0.5, 1.0, 2.0)
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
 
 
 def _build(pool_kind: str, steps: int, seed: int, max_replicas: int):
@@ -67,25 +77,45 @@ def _build(pool_kind: str, steps: int, seed: int, max_replicas: int):
     pool = [rs.replicas[0] for rs in sets]          # plain single-engine view
 
     def make_pool(r: int) -> list:
-        return [ReplicaSet(rs.replicas[:r], name=rs.name) for rs in sets]
+        return [ReplicaSet(rs.replicas[:r], name=rs.name,
+                           factory=replica_factory(rs.replicas[0]))
+                for rs in sets]
 
     return wl, pool, rb, make_pool
 
 
-def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed):
+def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed,
+            policy=None, autoscale=None, arrivals=None, drain_ticks=0):
     test = wl.subset_indices("test")
     base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
     rate = qps * base * budget_x
     cfg = OnlineConfig(budget_per_s=rate, window_s=window_s,
-                       breaker=BreakerPolicy(failure_threshold=1, recovery_time_s=1e9))
-    srv = OnlineRobatchServer(rb, pool, wl, cfg)
-    arrivals = poisson_arrivals(np.random.default_rng(seed), qps, duration, test,
-                                repeat_frac=0.2)
+                       breaker=BreakerPolicy(failure_threshold=1, recovery_time_s=1e9),
+                       autoscale=autoscale)
+    srv = OnlineRobatchServer(policy if policy is not None else rb, pool, wl, cfg)
+    if arrivals is None:
+        arrivals = poisson_arrivals(np.random.default_rng(seed), qps, duration,
+                                    test, repeat_frac=0.2)
     t0 = time.perf_counter()
     stats = srv.run(arrivals)
+    for _ in range(drain_ticks):     # idle windows so scale-down can complete
+        srv.step()
     wall = time.perf_counter() - t0
     srv.close()
     return srv, stats, wall, len(arrivals)
+
+
+def _ramp_arrivals(rng, test, phases):
+    """Deterministic load ramp: evenly spaced arrivals per (qps, t0, t1)
+    phase, query ids drawn from ``test`` — the autoscale leg's workload."""
+    out = []
+    for qps, t0, t1 in phases:
+        n = int(round(qps * (t1 - t0)))
+        ts = t0 + (np.arange(n) + 0.5) * (t1 - t0) / max(1, n)
+        qs = test[rng.integers(0, len(test), size=n)]
+        out.extend((float(t), int(q)) for t, q in zip(ts, qs))
+    out.sort(key=lambda a: a[0])
+    return out
 
 
 def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
@@ -98,13 +128,17 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
     r_qps, r_budget_x = qps * 4, budget_x * 4
     wl, pool, rb, make_pool = _build(pool_kind, steps, seed, max(replica_counts))
     rows = []
+    ramp_hi = r_qps * 2
+    ramp_phases = ((qps, 0.0, 4.0), (ramp_hi, 4.0, 12.0), (qps, 12.0, 20.0))
+    max_r = max(replica_counts)
     bench = {"schema": BENCH_SCHEMA,
              "config": dict(pool=pool_kind, qps=qps, duration=duration,
                             budget_x=budget_x, seed=seed, windows=list(WINDOWS),
                             replica_counts=list(replica_counts),
-                            replica_qps=r_qps, replica_budget_x=r_budget_x),
-             "window_sweep": [], "replica_sweep": [],
-             "breaker_outage": {}, "replica_outage": {}}
+                            replica_qps=r_qps, replica_budget_x=r_budget_x,
+                            ramp_hi=ramp_hi, autoscale_max=max_r),
+             "window_sweep": [], "replica_sweep": [], "cap_mode_compare": {},
+             "autoscale": [], "breaker_outage": {}, "replica_outage": {}}
 
     # ---- window-size sweep --------------------------------------------------
     usage = np.zeros(len(pool), dtype=int)
@@ -142,24 +176,119 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
                                           duration=duration, budget_x=r_budget_x,
                                           seed=seed)
         cap_deferred = int(sum(w.n_capacity_held for w in stats.windows))
+        cap_packed = int(sum(w.n_cap_packed for w in stats.windows))
         cap_deferred_by_r[r_count] = cap_deferred
         row = dict(pool=pool_kind, scenario="replica_sweep", replicas=r_count,
                    window_s=WINDOWS[1], offered_qps=r_qps,
                    sustained_qps=stats.qps, p50_s=stats.latency_p50,
                    p99_s=stats.latency_p99, cost=stats.total_cost,
-                   capacity_deferred=cap_deferred,
+                   capacity_deferred=cap_deferred, capacity_packed=cap_packed,
                    completed=stats.n_completed, dropped=stats.n_dropped,
                    wall_s=wall)
         rows.append(row)
         bench["replica_sweep"].append({k: row[k] for k in (
             "replicas", "sustained_qps", "p50_s", "p99_s", "cost",
-            "capacity_deferred", "completed", "dropped")})
+            "capacity_deferred", "capacity_packed", "completed", "dropped")})
         emit(f"online_replicas{r_count}", wall / max(1, n_arr) * 1e6,
              f"qps={stats.qps:.1f};p99={stats.latency_p99:.2f}s;"
-             f"cap_deferred={cap_deferred};dropped={stats.n_dropped}")
+             f"cap_deferred={cap_deferred};cap_packed={cap_packed};"
+             f"dropped={stats.n_dropped}")
         assert stats.n_completed == stats.n_submitted, "replica run lost queries"
     assert cap_deferred_by_r[replica_counts[0]] >= cap_deferred_by_r[replica_counts[-1]], \
         "more replicas should not defer more work to capacity"
+
+    # ---- capacity-aware Δ-heap vs. legacy post-pass on the R=1 sweep --------
+    # same stream, same caps: cap_mode="defer" (the _apply_group_caps safety
+    # net) holds whole over-cap groups; cap_mode="pack" (the default) re-packs
+    # them into fewer, larger batches and must defer strictly less
+    from repro.api.policies import RobatchPolicy
+
+    defer_pol = RobatchPolicy(cap_mode="defer").fit(pool, wl, artifacts=rb)
+    srv_d, stats_d, wall_d, n_arr = _stream(rb, make_pool(1), wl,
+                                            window_s=WINDOWS[1], qps=r_qps,
+                                            duration=duration,
+                                            budget_x=r_budget_x, seed=seed,
+                                            policy=defer_pol)
+    defer_held = int(sum(w.n_capacity_held for w in stats_d.windows))
+    pack_held = cap_deferred_by_r[1]
+    bench["cap_mode_compare"] = dict(
+        pack_held=pack_held, defer_held=defer_held,
+        pack_packed=int(bench["replica_sweep"][0]["capacity_packed"]),
+        pack_qps=bench["replica_sweep"][0]["sustained_qps"],
+        defer_qps=stats_d.qps, defer_p99_s=stats_d.latency_p99,
+        completed=stats_d.n_completed, dropped=stats_d.n_dropped)
+    emit("online_capmode", wall_d / max(1, n_arr) * 1e6,
+         f"pack_held={pack_held};defer_held={defer_held};"
+         f"pack_qps={bench['replica_sweep'][0]['sustained_qps']:.1f};"
+         f"defer_qps={stats_d.qps:.1f}")
+    assert stats_d.n_completed == stats_d.n_submitted, "defer run lost queries"
+    assert defer_held > 0, "R=1 post-pass run never hit its capacity caps"
+    assert pack_held < defer_held, \
+        "capacity-aware Δ-heap must defer strictly fewer queries than the post-pass"
+
+    # ---- autoscale leg: load ramp, pool sized by backlog --------------------
+    # a warm->burst->drain ramp against (a) a fixed R=1 pool and (b) the same
+    # pool under the Autoscaler: replicas must rise with the burst's backlog,
+    # drain back down after it, and hold less work to capacity than fixed R=1
+    test_idx = wl.subset_indices("test")
+    ramp = _ramp_arrivals(np.random.default_rng(seed + 1), test_idx, ramp_phases)
+    srv_f, stats_f, wall_f, _ = _stream(rb, make_pool(1), wl,
+                                        window_s=WINDOWS[1], qps=ramp_hi,
+                                        duration=duration, budget_x=r_budget_x,
+                                        seed=seed, arrivals=ramp, drain_ticks=16)
+    fixed_pressure = int(sum(w.n_capacity_held + w.n_cap_packed
+                             for w in srv_f.windows))
+    as_policy = AutoscalePolicy(min_replicas=1, max_replicas=max_r,
+                                up_pressure=4, down_pressure=0,
+                                up_queue_depth=24, down_queue_depth=4,
+                                hold_windows=2, cooldown_s=1.0)
+    srv_a, stats_a, wall_a, n_arr = _stream(rb, make_pool(1), wl,
+                                            window_s=WINDOWS[1], qps=ramp_hi,
+                                            duration=duration,
+                                            budget_x=r_budget_x, seed=seed,
+                                            arrivals=ramp, autoscale=as_policy,
+                                            drain_ticks=16)
+    phase_names = ("warm", "burst", "drain")
+    bounds = [(t0, t1) for _q, t0, t1 in ramp_phases]
+    bounds[-1] = (bounds[-1][0], float("inf"))      # drain includes idle ticks
+    peak = 1
+    for name, (t0, t1) in zip(phase_names, bounds):
+        ws = [w for w in srv_a.windows if t0 < w.t <= t1]
+        held = int(sum(w.n_capacity_held for w in ws))
+        packed = int(sum(w.n_cap_packed for w in ws))
+        max_rep = max((max(w.replica_counts) for w in ws if w.replica_counts),
+                      default=1)
+        end_rep = max(ws[-1].replica_counts) if ws and ws[-1].replica_counts else 1
+        peak = max(peak, max_rep)
+        row = dict(pool=pool_kind, scenario="autoscale", phase=name,
+                   window_s=WINDOWS[1], capacity_held=held, cap_packed=packed,
+                   max_replicas=max_rep, end_replicas=end_rep,
+                   n_windows=len(ws))
+        rows.append(row)
+        bench["autoscale"].append({k: row[k] for k in (
+            "phase", "capacity_held", "cap_packed", "max_replicas",
+            "end_replicas")})
+    auto_pressure = int(sum(w.n_capacity_held + w.n_cap_packed
+                            for w in srv_a.windows))
+    n_events = len(srv_a.autoscaler.events)
+    summary = dict(phase="summary", fixed_pressure=fixed_pressure,
+                   auto_pressure=auto_pressure, n_scale_events=n_events,
+                   sustained_qps=stats_a.qps, p99_s=stats_a.latency_p99,
+                   fixed_p99_s=stats_f.latency_p99, cost=stats_a.total_cost,
+                   completed=stats_a.n_completed, dropped=stats_a.n_dropped)
+    rows.append(dict(pool=pool_kind, scenario="autoscale", window_s=WINDOWS[1],
+                     wall_s=wall_f + wall_a, **summary))
+    bench["autoscale"].append(summary)
+    emit("online_autoscale", (wall_f + wall_a) / max(1, n_arr) * 1e6,
+         f"peak_replicas={peak};events={n_events};"
+         f"pressure={auto_pressure}vs{fixed_pressure};"
+         f"p99={stats_a.latency_p99:.2f}s_vs_{stats_f.latency_p99:.2f}s")
+    assert stats_a.n_completed == stats_a.n_submitted, "autoscale run lost queries"
+    assert peak > 1, "the burst never grew the pool"
+    end_replicas = max(srv_a.windows[-1].replica_counts)
+    assert end_replicas < peak, "the pool never drained back down"
+    assert auto_pressure < fixed_pressure, \
+        "autoscaling must hold less work to capacity than the fixed R=1 pool"
 
     # ---- mid-run outage A: whole member fails, breaker trips ----------------
     # fail the member the scheduler actually leans on (the budget level decides

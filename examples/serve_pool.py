@@ -46,6 +46,9 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="engines per member (a ReplicaSet when > 1; weights "
                          "are trained once and shared)")
+    ap.add_argument("--autoscale", type=int, default=0, metavar="MAX",
+                    help="autoscale each member up to MAX replicas during the "
+                         "online stream (backlog-driven; 0 = fixed pool)")
     ap.add_argument("--online-seconds", type=float, default=0.0,
                     help="stream the test set through the online layer this long")
     ap.add_argument("--online-qps", type=float, default=8.0)
@@ -55,7 +58,8 @@ def main():
 
     spec = RunSpec(
         pool=PoolSpec(kind="tiny", steps=args.steps, n_train=args.n_train,
-                      n_test=args.n_test, seed=0, replicas=args.replicas),
+                      n_test=args.n_test, seed=0, replicas=args.replicas,
+                      max_replicas=args.autoscale),
         policy=PolicySpec(args.policy),
         router="knn", coreset_size=args.coreset, grid_multiple=2)
 
@@ -108,10 +112,13 @@ def main():
               f"(window {args.online_window}s, budget ${rate:.6f}/s)...")
         t0 = time.time()
         stats = gw.serve(arrivals, OnlineConfig(
-            budget_per_s=rate, window_s=args.online_window))
+            budget_per_s=rate, window_s=args.online_window,
+            autoscale=spec.pool.autoscale_policy()))
         print(stats.summary())
         print(f"(wall clock {time.time() - t0:.0f}s; latencies above are "
               f"virtual-stream seconds incl. measured engine time)")
+        if gw.server.autoscaler is not None:
+            print(gw.server.autoscaler.summary())
 
 
 if __name__ == "__main__":

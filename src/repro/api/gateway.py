@@ -104,7 +104,7 @@ class Gateway:
     # ------------------------------------------------------------------ online
     def serve(self, arrivals, config, policy: Optional[str] = None,
               pool: Optional[Sequence] = None, live: bool = False,
-              clock=None, **params):
+              clock=None, autoscale=None, **params):
         """Stream an arrival list through the online serving layer under the
         selected policy; returns :class:`ServerStats` and leaves the drained
         server on ``self.server`` for inspection.
@@ -112,13 +112,27 @@ class Gateway:
         With ``config.realtime`` the stream is paced against the wall clock
         (injectable via ``clock``); ``live=True`` additionally fronts it with
         a :class:`repro.serving.online.LiveArrivalSource` submission thread
-        instead of in-loop admission."""
+        instead of in-loop admission.  ``autoscale`` overrides
+        ``config.autoscale``: an :class:`repro.serving.autoscale.
+        AutoscalePolicy`, ``True`` to take the bounds the ``PoolSpec``
+        declares via ``max_replicas``, or ``False`` to pin the pool fixed."""
+        from dataclasses import replace
+
         from repro.serving.online import OnlineRobatchServer
 
         if live and not getattr(config, "realtime", False):
             raise ValueError("Gateway.serve(live=True) needs "
                              "OnlineConfig(realtime=True) — a live arrival "
                              "thread cannot pace a virtual clock")
+        if autoscale is not None:
+            if autoscale is True:
+                autoscale = self.spec.pool.autoscale_policy()
+                if autoscale is None:
+                    raise ValueError("Gateway.serve(autoscale=True) needs the "
+                                     "PoolSpec to declare max_replicas > 0")
+            elif autoscale is False:
+                autoscale = None                 # explicit opt-out: fixed pool
+            config = replace(config, autoscale=autoscale)
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config, clock=clock)

@@ -53,6 +53,11 @@ class RobatchPolicy(SchedulingPolicy):
     requires_budget = True
     scheduler = "heap"
 
+    def __init__(self, cap_mode: str = "pack"):
+        if cap_mode not in ("pack", "defer"):
+            raise ValueError(f"cap_mode must be 'pack' or 'defer', got {cap_mode!r}")
+        self.cap_mode = cap_mode
+
     def _post_fit(self) -> None:
         self._engine = self._make_engine()
         self.exec_pool = list(self._engine.pool)
@@ -80,9 +85,11 @@ class RobatchPolicy(SchedulingPolicy):
                     budget: float, caps: Optional[dict] = None) -> Plan:
         """Windowed Alg. 1 under the class's scheduler variant (the
         vectorized fig11 fast path applies online too), capacity-capped when
-        the pool is replicated."""
+        the pool is replicated (capacity-aware Δ-heap packing unless
+        ``cap_mode="defer"``)."""
         res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
-                                     scheduler=self.scheduler)
+                                     scheduler=self.scheduler,
+                                     cap_mode=self.cap_mode)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),
@@ -213,7 +220,8 @@ class BatcherSimPolicy(_VanillaRoutedPolicy):
 
     def plan_window(self, space: CandidateSpace, query_idx: np.ndarray,
                     budget: float, caps: Optional[dict] = None) -> Plan:
-        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps)
+        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
+                                     cap_mode=self.cap_mode)
         groups = self._groups(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),

@@ -92,6 +92,13 @@ class SchedulingPolicy:
 
     name: str = ""                  # filled by @register_policy
     requires_budget: bool = False   # True: plan() needs a budget to be useful
+    cap_mode: str = "pack"          # replica-cap handling in plan_window:
+    #   "pack"  — capacity-aware Δ-heap (greedy_schedule_capped): over-cap
+    #             members are re-packed into fewer, larger batches, and only
+    #             the unplaceable remainder is deferred;
+    #   "defer" — legacy _apply_group_caps post-pass (defer every over-cap
+    #             group wholesale) — the safety-net semantics the online
+    #             server also applies to caps-unaware policies
 
     # fitted attributes (set by fit())
     rb: Optional[Robatch] = None
@@ -160,9 +167,12 @@ class SchedulingPolicy:
         """One online scheduling round over a (restricted) window space.
         Default: windowed Alg. 1 + per-state batch packing.  ``caps`` maps
         model index → max batch-groups this window (replicated members'
-        concurrency, :class:`repro.serving.pool.ReplicaSet`); over-cap query
-        ids come back in ``Plan.deferred_idx`` for the server to requeue."""
-        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps)
+        concurrency, :class:`repro.serving.pool.ReplicaSet`), handled per
+        ``cap_mode`` (capacity-aware packing by default); query ids that
+        still don't fit come back in ``Plan.deferred_idx`` for the server to
+        requeue."""
+        res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
+                                     cap_mode=self.cap_mode)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),

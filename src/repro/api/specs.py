@@ -49,6 +49,8 @@ class PoolSpec:
     seed: int = 0
     steps: int = 300                 # tiny: LM training steps
     replicas: int = 1                # engines per member (ReplicaSet when > 1)
+    min_replicas: int = 0            # autoscale floor (0 = unset → 1)
+    max_replicas: int = 0            # autoscale ceiling (0 = fixed-size pool)
 
     def build(self):
         """Materialize → (workload, pool).
@@ -57,16 +59,26 @@ class PoolSpec:
         :class:`repro.serving.pool.ReplicaSet` — N deterministic copies for
         the simulator, N engines sharing one set of trained weights for the
         tiny pool — so the online scheduler gets real per-member concurrency
-        (and the matching per-window capacity caps)."""
+        (and the matching per-window capacity caps).  ``max_replicas > 0``
+        declares the pool autoscalable: members are wrapped in ReplicaSets
+        even at ``replicas=1`` and carry a replica factory, so
+        :class:`repro.serving.autoscale.Autoscaler` can grow them to the
+        ceiling at serving time."""
         if self.replicas < 1:
             raise ValueError(f"PoolSpec.replicas must be >= 1, got {self.replicas}")
+        if self.max_replicas and self.max_replicas < max(self.replicas,
+                                                         self.min_replicas):
+            raise ValueError(f"PoolSpec.max_replicas={self.max_replicas} below "
+                             f"replicas={self.replicas}/min_replicas="
+                             f"{self.min_replicas}")
+        scalable = self.max_replicas > 0
         if self.kind == "simulated":
             from repro.data import make_simulated_pool, make_workload
 
             wl = make_workload(self.task, n_train=self.n_train, n_val=self.n_val,
                                n_test=self.n_test, seed=self.seed)
             pool = make_simulated_pool(self.family)
-            if self.replicas > 1:
+            if self.replicas > 1 or scalable:
                 from repro.serving.pool import replicate_simulated
 
                 pool = [replicate_simulated(m, self.replicas) for m in pool]
@@ -80,10 +92,23 @@ class PoolSpec:
             wl, pool, _fmt = build_tiny_pool(rng, steps=self.steps,
                                              n_train=self.n_train,
                                              n_test=self.n_test,
-                                             replicas=self.replicas)
+                                             replicas=self.replicas,
+                                             scalable=scalable)
             return wl, pool
         raise ValueError(f"PoolSpec.kind must be 'simulated' or 'tiny', "
                          f"got {self.kind!r}")
+
+    def autoscale_policy(self, **overrides):
+        """An :class:`~repro.serving.autoscale.AutoscalePolicy` bounded by
+        this spec (``None`` when the spec declares no ceiling)."""
+        if self.max_replicas <= 0 and "max_replicas" not in overrides:
+            return None
+        from repro.serving.autoscale import AutoscalePolicy
+
+        kw = dict(min_replicas=max(1, self.min_replicas),
+                  max_replicas=self.max_replicas or max(1, self.replicas))
+        kw.update(overrides)
+        return AutoscalePolicy(**kw)
 
     def to_dict(self) -> dict:
         return asdict(self)

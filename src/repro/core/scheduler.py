@@ -22,8 +22,8 @@ from repro.core.pareto import CandidateSpace, build_frontiers
 from repro.core.problem import Assignment
 
 __all__ = ["ScheduleResult", "greedy_schedule", "greedy_schedule_vectorized",
-           "greedy_schedule_window", "restrict_space", "take_rows",
-           "brute_force_schedule"]
+           "greedy_schedule_window", "greedy_schedule_capped", "restrict_space",
+           "take_rows", "brute_force_schedule"]
 
 
 @dataclass
@@ -37,6 +37,9 @@ class ScheduleResult:
     deferred_idx: np.ndarray = field(default_factory=lambda: np.empty(0, dtype=int))
     # ^ query ids pushed out of this window by per-member capacity caps
     #   (``group_caps``); the online server requeues them for the next round
+    n_packed: int = 0
+    # ^ queries the capacity-aware pass moved to a wider batch (or another
+    #   member) to fit the caps — the autoscaler's packing-pressure signal
 
 
 def greedy_schedule(
@@ -211,6 +214,11 @@ def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
                       group_caps: dict[int, int]) -> ScheduleResult:
     """Enforce per-member batch-group capacity on a window's schedule.
 
+    Safety net only: the capacity-aware walk (:func:`greedy_schedule_capped`,
+    ``cap_mode="pack"``) packs caps into the schedule itself; this post-pass
+    survives for ``cap_mode="defer"`` and for caps-unaware policies whose
+    plans the online server has to bound after the fact.
+
     A member backed by N replicas can run N batch-groups concurrently, so one
     admission window may commit at most ``group_caps[k]`` groups to model k.
     The assignment is packed exactly like :func:`group_into_batches` (chunks
@@ -255,6 +263,159 @@ def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
     )
 
 
+def _group_demand(model: np.ndarray, batch: np.ndarray) -> dict[int, int]:
+    """Physical batch-groups each member must run for an assignment:
+    ``Σ_b ceil(n_{k,b} / b)`` — exactly how :func:`group_into_batches` chunks."""
+    demand: dict[int, int] = {}
+    for k in np.unique(model):
+        mask_k = model == k
+        g = 0
+        for b in np.unique(batch[mask_k]):
+            g += int(np.ceil(int((mask_k & (batch == b)).sum()) / int(b)))
+        demand[int(k)] = g
+    return demand
+
+
+def greedy_schedule_capped(
+    space: CandidateSpace,
+    query_idx: np.ndarray,
+    budget: float,
+    group_caps: dict[int, int],
+    scheduler: str = "heap",
+) -> ScheduleResult:
+    """Capacity-aware Alg. 1: pack the window instead of deferring it.
+
+    The frontier walk runs unconstrained first; when the resulting schedule
+    demands more concurrent batch-groups of a member than its cap (its
+    healthy-replica count), the capacity pass re-scores that member's states
+    toward *fewer, larger batches*:
+
+    1. **Merge** — the narrowest batch in use on an over-cap member is folded
+       into its next-wider sibling state (Eq. 13 cost is decreasing in b, so
+       every merge refunds budget; group count is non-increasing and the
+       number of distinct states strictly decreases, so the loop terminates).
+    2. **Spill** — demand that exceeds even the widest packing
+       (``n_k > cap_k · b_max``) moves the lowest-û overflow queries to the
+       cheapest affordable state of a member with spare group capacity.
+    3. **Defer** — only what neither packing nor spilling can place comes back
+       in ``deferred_idx`` (the online server requeues it next window).
+
+    When no cap binds the result is **bit-identical** to the uncapped
+    schedule (property-tested), so caps cost nothing on the happy path.
+    ``n_packed`` counts queries steps 1–2 moved — the capacity-pressure
+    signal :class:`repro.serving.autoscale.Autoscaler` scales on.
+    """
+    query_idx = np.asarray(query_idx)
+    fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
+    res = fn(space, query_idx, budget)
+    caps = {int(k): int(c) for k, c in group_caps.items() if c is not None}
+    a = res.assignment
+    if all(d <= caps.get(k, d) for k, d in _group_demand(a.model, a.batch).items()):
+        return res                                  # caps never bind: untouched
+
+    n = len(a.query_idx)
+    state_col = {(s.model, s.batch): j for j, s in enumerate(space.states)}
+    col = np.array([state_col[(int(a.model[i]), int(a.batch[i]))]
+                    for i in range(n)], dtype=int)
+    cols_of: dict[int, list[int]] = {}              # model → cols, batch asc
+    for j, s in enumerate(space.states):
+        cols_of.setdefault(int(s.model), []).append(j)
+    for k in cols_of:
+        cols_of[k].sort(key=lambda j: space.states[j].batch)
+
+    active = np.ones(n, dtype=bool)
+    remaining = budget - res.amortized_cost
+    n_packed = 0
+    deferred_rows: list[int] = []
+
+    def used_counts(k: int) -> dict[int, int]:
+        out = {}
+        for j in cols_of[k]:
+            c = int((active & (col == j)).sum())
+            if c:
+                out[j] = c
+        return out
+
+    def demand_of(k: int) -> int:
+        return sum(int(np.ceil(c / space.states[j].batch))
+                   for j, c in used_counts(k).items())
+
+    def fits_one_more(k: int, j: int) -> bool:
+        cap = caps.get(k)
+        if cap is None:
+            return True
+        b = space.states[j].batch
+        at_j = int((active & (col == j)).sum())
+        extra = 1 if at_j % b == 0 else 0           # a new group only at multiples
+        return demand_of(k) + extra <= cap
+
+    for k in sorted(caps):
+        if k not in cols_of:
+            continue                                # model absent from this space
+        cap = caps[k]
+        # 1. merge: narrowest state in use → its next-wider sibling
+        while demand_of(k) > cap:
+            merged = False
+            for j in sorted(used_counts(k), key=lambda j: space.states[j].batch):
+                wider = [w for w in cols_of[k]
+                         if space.states[w].batch > space.states[j].batch]
+                if not wider:
+                    continue
+                w = wider[0]
+                rows = np.where(active & (col == j))[0]
+                remaining += float((space.cost[rows, j] - space.cost[rows, w]).sum())
+                col[rows] = w
+                n_packed += len(rows)
+                merged = True
+                break
+            if not merged:
+                break                               # everything at the widest state
+        over = demand_of(k) - cap
+        if over <= 0:
+            continue
+        # 2./3. spill overflow beyond cap·b_max to members with headroom
+        jw = cols_of[k][-1]
+        rows_k = np.where(active & (col == jw))[0]
+        order = rows_k[np.argsort(space.util[rows_k, jw], kind="stable")]
+        n_keep = max(0, cap) * int(space.states[jw].batch)
+        for i in order[: max(0, len(rows_k) - n_keep)]:
+            remaining += float(space.cost[i, jw])   # refund the vacated state
+            active[i] = False
+            placed = False
+            cand = [j for kk, js in cols_of.items() if kk != k for j in js]
+            cand.sort(key=lambda j: float(space.cost[i, j]))
+            for j in cand:
+                kk = int(space.states[j].model)
+                if caps.get(kk, 1) <= 0 or not fits_one_more(kk, j):
+                    continue
+                if float(space.cost[i, j]) > remaining + 1e-12:
+                    continue
+                col[i] = j
+                active[i] = True
+                remaining -= float(space.cost[i, j])
+                n_packed += 1
+                placed = True
+                break
+            if not placed:
+                deferred_rows.append(int(i))
+
+    keep = np.where(active)[0]
+    chosen = col[keep]
+    model = np.array([space.states[j].model for j in chosen], dtype=int)
+    batch = np.array([space.states[j].batch for j in chosen], dtype=int)
+    dropped = np.sort(np.asarray(deferred_rows, dtype=int))
+    return ScheduleResult(
+        assignment=Assignment(query_idx=a.query_idx[keep], model=model, batch=batch),
+        est_utility=float(space.util[keep, chosen].sum()),
+        amortized_cost=float(space.cost[keep, chosen].sum()),
+        spent_budget=float(space.cost[keep, chosen].sum()),
+        n_upgrades=res.n_upgrades,
+        infeasible=res.infeasible,
+        deferred_idx=np.asarray(a.query_idx)[dropped],
+        n_packed=n_packed,
+    )
+
+
 def greedy_schedule_window(
     space: CandidateSpace,
     query_idx: np.ndarray,
@@ -262,6 +423,7 @@ def greedy_schedule_window(
     allowed_models: set[int] | None = None,
     group_caps: dict[int, int] | None = None,
     scheduler: str = "heap",
+    cap_mode: str = "pack",
 ) -> ScheduleResult:
     """One online scheduling round: Alg. 1 over a single admission window.
 
@@ -274,9 +436,16 @@ def greedy_schedule_window(
     ``group_caps`` maps model index → max batch-groups this window (a
     replicated member's replica count — see
     :class:`repro.serving.pool.ReplicaSet`).  A cap of 0 removes the model
-    from the window's space outright (all replicas down), and over-cap groups
-    are deferred via ``ScheduleResult.deferred_idx``.  ``scheduler`` picks the
-    Alg. 1 variant (``"heap"`` or ``"vectorized"``, as offline).
+    from the window's space outright (all replicas down).  ``cap_mode="pack"``
+    (the default) takes the caps into the frontier walk itself via
+    :func:`greedy_schedule_capped` — over-cap members are re-packed into
+    fewer, larger batches and only the truly unplaceable remainder is
+    deferred; ``cap_mode="defer"`` keeps the legacy
+    :func:`_apply_group_caps` post-pass (the safety net caps-unaware policies
+    fall back to), which defers every over-cap group wholesale.  Either way
+    the pushed-out queries come back via ``ScheduleResult.deferred_idx``.
+    ``scheduler`` picks the Alg. 1 variant (``"heap"`` or ``"vectorized"``,
+    as offline).
     """
     if group_caps:
         saturated = {k for k, cap in group_caps.items() if cap is not None and cap <= 0}
@@ -297,6 +466,9 @@ def greedy_schedule_window(
                                       deferred_idx=qi.copy())
     if allowed_models is not None:
         space = restrict_space(space, set(allowed_models))
+    if group_caps and cap_mode == "pack":
+        return greedy_schedule_capped(space, query_idx, budget, group_caps,
+                                      scheduler=scheduler)
     fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
     res = fn(space, query_idx, budget)
     if group_caps:

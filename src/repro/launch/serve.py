@@ -21,6 +21,13 @@ due times while the server fires one scheduling round per window boundary —
 the run takes ~``--duration`` wall seconds and reports window-pacing lateness.
 ``--replicas N`` builds every pool member as an N-engine ``ReplicaSet``
 (least-loaded dispatch, per-window capacity caps in the scheduler).
+``--autoscale`` sizes the pool at serving time: a backlog-driven control
+loop (``repro.serving.autoscale``) grows each ReplicaSet under capacity
+pressure and drains it back when idle, between ``--min-replicas`` and
+``--max-replicas``::
+
+    PYTHONPATH=src python -m repro.launch.serve online --qps 40 \
+        --autoscale --min-replicas 1 --max-replicas 4
 
 ``--policy`` selects any name from the policy registry
 (``repro.api.list_policies()``); ``--spec`` takes a ``RunSpec`` JSON (a file
@@ -147,6 +154,13 @@ def online_main(argv):
                     help="pace against the wall clock behind a live arrival thread")
     ap.add_argument("--replicas", type=int, default=None,
                     help="engines per pool member (ReplicaSet when > 1)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="backlog-driven replica autoscaling (ReplicaSet."
+                         "scale_to between --min-replicas and --max-replicas)")
+    ap.add_argument("--min-replicas", type=int, default=None,
+                    help="autoscale floor (default 1)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="autoscale ceiling (default 4 with --autoscale)")
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--coreset", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
@@ -163,6 +177,12 @@ def online_main(argv):
     spec = _online_spec(args)
     if args.replicas is not None:
         spec.pool.replicas = args.replicas
+    if args.min_replicas is not None:
+        spec.pool.min_replicas = args.min_replicas
+    if args.max_replicas is not None:
+        spec.pool.max_replicas = args.max_replicas
+    if args.autoscale and spec.pool.max_replicas <= 0:
+        spec.pool.max_replicas = 4               # sensible default ceiling
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -181,8 +201,9 @@ def online_main(argv):
     test = gw.wl.subset_indices("test")
     base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
     rate = args.qps * base * args.budget_x
+    autoscale = spec.pool.autoscale_policy() if args.autoscale else None
     cfg = OnlineConfig(budget_per_s=rate, window_s=args.window,
-                       realtime=args.realtime)
+                       realtime=args.realtime, autoscale=autoscale)
     rng = np.random.default_rng(spec.seed)
     arrivals = poisson_arrivals(rng, args.qps, args.duration, test,
                                 repeat_frac=args.repeat_frac)
@@ -213,6 +234,10 @@ def online_main(argv):
     print(f"policy={spec.policy.name} windows={len(stats.windows)} "
           f"deferred={deferred} shed={sum(w.n_shed for w in stats.windows)} "
           f"cache_entries={len(srv.cache)}")
+    if srv.autoscaler is not None:
+        print(srv.autoscaler.summary())
+        for e in srv.autoscaler.events:
+            print(f"  t={e.t:7.2f}s {e.member}: {e.from_n} -> {e.to_n} ({e.reason})")
 
 
 def main():

@@ -1,0 +1,174 @@
+"""Backlog-driven replica autoscaling: the control loop that *sizes* the pool.
+
+The windowed scheduler (``greedy_schedule_window``) walks the cost-utility
+frontier under a FIXED set of per-member capacity caps; this module closes the
+remaining loop — from the backlog each :class:`~repro.serving.online.
+WindowReport` exposes back to :meth:`repro.serving.pool.ReplicaSet.scale_to`:
+
+    signal    capacity pressure  = n_capacity_held  (queries the caps pushed
+                                   out of the window entirely)
+                                 + n_cap_packed     (queries the capacity-aware
+                                   Δ-heap squeezed into wider batches to fit)
+              queue depth        = requests still pending after the round
+              late_s             = realtime window-pacing lag
+    decision  hysteresis (``hold_windows`` consecutive breaches) + per-action
+              ``cooldown_s``, so a one-window spike or a scale action's own
+              transient never flaps the pool
+    actuation ``ReplicaSet.scale_to(n ± step)`` within
+              [``min_replicas``, ``max_replicas``] — grow attaches
+              factory-built (or un-parks drained) replicas, shrink retires
+              them drain-first through the ``ReplicaTracker``
+
+Scaling acts on *capacity* signals only: budget-deferred work is excluded
+from the pressure term, because adding replicas cannot buy budget.  The
+server re-reads ``ReplicaSet.n_available()`` every window, so a scale action
+reaches the scheduler's ``group_caps`` on the very next round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+__all__ = ["AutoscalePolicy", "ScaleEvent", "Autoscaler"]
+
+
+@dataclass
+class AutoscalePolicy:
+    """Knobs of the control loop (see docs/architecture.md for the diagram).
+
+    ``up_pressure``/``down_pressure`` bound the per-window capacity-pressure
+    signal (held + packed queries); ``up_queue_depth`` catches backlogs that
+    build as plain queue growth; ``late_high_s`` (realtime only, 0 disables)
+    treats window-pacing lag as saturation.  ``hold_windows`` and
+    ``cooldown_s`` are the hysteresis: a breach must persist, and actions
+    must space out, before the pool moves.
+    """
+
+    min_replicas: int = 1
+    max_replicas: int = 4
+    up_pressure: int = 4              # held+packed queries/window to grow on
+    down_pressure: int = 0            # pressure ≤ this is a shrink candidate
+    up_queue_depth: int = 32          # post-round queue depth to grow on
+    down_queue_depth: int = 4         # queue must also be ≤ this to shrink
+    late_high_s: float = 0.0          # realtime lateness to grow on (0 = off)
+    hold_windows: int = 2             # consecutive breaches before acting
+    cooldown_s: float = 1.0           # min serving-time between actions
+    step: int = 1                     # replicas added/removed per action
+
+
+class ScaleEvent(NamedTuple):
+    """One actuation, kept in :attr:`Autoscaler.events` (bench/debug trail)."""
+
+    t: float
+    member: str
+    from_n: int
+    to_n: int
+    reason: str
+
+
+@dataclass
+class _Streaks:
+    up: int = 0
+    down: int = 0
+
+
+class Autoscaler:
+    """Grows/shrinks every scalable pool member against window backlog.
+
+    The decision is pool-wide (the scheduler's packing pass already balances
+    load *across* members; what backlog means is that the pool as a whole is
+    short on concurrent batch-groups), the actuation per member: each member
+    exposing ``scale_to`` moves ``step`` replicas toward the breach direction,
+    clamped to [``min_replicas``, ``max_replicas``].
+
+    Drive it with :meth:`observe` once per scheduling round — the online
+    server does so automatically when ``OnlineConfig.autoscale`` is set.
+    """
+
+    def __init__(self, pool: Sequence, policy: AutoscalePolicy | None = None):
+        self.policy = policy or AutoscalePolicy()
+        self._indexed = [(k, m) for k, m in enumerate(pool)
+                         if hasattr(m, "scale_to")]
+        self.members = [m for _k, m in self._indexed]
+        self.events: list[ScaleEvent] = []
+        self._streaks = _Streaks()
+        self._last_action_t: float | None = None
+        # floor the pool to min_replicas up front (a pool built at R=1 with
+        # min_replicas=2 should not wait for a breach to reach its floor)
+        for m in self.members:
+            if m.n_replicas < self.policy.min_replicas:
+                m.scale_to(self.policy.min_replicas)
+
+    # ------------------------------------------------------------- signals
+    def pressure(self, rep) -> int:
+        """Capacity pressure of one window: queries held out by the caps plus
+        queries the Δ-heap packed into wider batches to fit them."""
+        return int(getattr(rep, "n_capacity_held", 0)
+                   + getattr(rep, "n_cap_packed", 0))
+
+    # ------------------------------------------------------------- control
+    def observe(self, rep, queue_depth: int, now: float) -> list[ScaleEvent]:
+        """One control tick: fold a finished window's report into the breach
+        streaks and actuate when hysteresis + cooldown allow.  Returns the
+        scale events fired this tick (usually empty)."""
+        p = self.policy
+        if not self.members:
+            return []
+        pressure = self.pressure(rep)
+        late = getattr(rep, "late_s", 0.0)
+        breach_up = (pressure >= p.up_pressure
+                     or queue_depth >= p.up_queue_depth
+                     or (p.late_high_s > 0 and late >= p.late_high_s))
+        # shrink needs genuinely unused capacity, not just absent backlog: a
+        # member dispatching at its group cap is saturated even at pressure 0
+        # (the caps themselves kept the backlog away), and shrinking it would
+        # only re-create the pressure next window (flapping)
+        groups = list(getattr(rep, "group_models", ()))
+        under_utilized = all(groups.count(k) < m.n_replicas
+                             for k, m in self._indexed)
+        breach_down = (pressure <= p.down_pressure
+                       and queue_depth <= p.down_queue_depth
+                       and under_utilized
+                       and not breach_up)
+        self._streaks.up = self._streaks.up + 1 if breach_up else 0
+        self._streaks.down = self._streaks.down + 1 if breach_down else 0
+
+        in_cooldown = (self._last_action_t is not None
+                       and now - self._last_action_t < p.cooldown_s)
+        fired: list[ScaleEvent] = []
+        if self._streaks.up >= p.hold_windows and not in_cooldown:
+            fired = self._actuate(+p.step, now,
+                                  f"pressure={pressure} queue={queue_depth} "
+                                  f"late={late:.3f}s")
+        elif self._streaks.down >= p.hold_windows and not in_cooldown:
+            fired = self._actuate(-p.step, now,
+                                  f"idle: pressure={pressure} queue={queue_depth}")
+        if fired:
+            self._last_action_t = now
+            self._streaks = _Streaks()        # a fresh breach must rebuild
+        return fired
+
+    def _actuate(self, delta: int, now: float, reason: str) -> list[ScaleEvent]:
+        p = self.policy
+        fired = []
+        for m in self.members:
+            cur = int(m.n_replicas)
+            target = max(p.min_replicas, min(p.max_replicas, cur + delta))
+            if target == cur:
+                continue
+            reached = int(m.scale_to(target))
+            if reached != cur:
+                fired.append(ScaleEvent(t=now, member=m.name, from_n=cur,
+                                        to_n=reached, reason=reason))
+        self.events.extend(fired)
+        return fired
+
+    # ------------------------------------------------------------ reporting
+    def replica_counts(self) -> tuple:
+        return tuple(int(m.n_replicas) for m in self.members)
+
+    def summary(self) -> str:
+        ups = sum(e.to_n > e.from_n for e in self.events)
+        downs = len(self.events) - ups
+        return (f"autoscaler: {len(self.events)} actions ({ups} up, {downs} "
+                f"down), replicas now {self.replica_counts()}")

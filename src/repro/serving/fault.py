@@ -145,6 +145,7 @@ class _ReplicaState:
     n_ejections: int = 0
     consecutive_failures: int = 0
     ejected_until: float = 0.0
+    retired: bool = False            # drained out by the autoscaler (scale-down)
     latencies: list = field(default_factory=list)
 
     def p50(self) -> float:
@@ -172,7 +173,31 @@ class ReplicaTracker:
         self.replicas = [_ReplicaState() for _ in range(n_replicas)]
 
     def healthy(self, r: int) -> bool:
-        return self.clock() >= self.replicas[r].ejected_until
+        st = self.replicas[r]
+        return not st.retired and self.clock() >= st.ejected_until
+
+    # -- autoscaling hooks (ReplicaSet.scale_to drives these) ----------------
+    def add_replica(self) -> int:
+        """Register a freshly attached replica; returns its index."""
+        self.replicas.append(_ReplicaState())
+        return len(self.replicas) - 1
+
+    def retire(self, r: int) -> None:
+        """Scale-down eject: the replica takes no new dispatch (in-flight work
+        drains normally) until :meth:`restore` un-retires it."""
+        self.replicas[r].retired = True
+
+    def restore(self, r: int) -> None:
+        """Re-admit a retired replica with a clean health slate (a parked
+        replica's stale failure streak must not instantly re-eject it)."""
+        st = self.replicas[r]
+        st.retired = False
+        st.consecutive_failures = 0
+        st.ejected_until = 0.0
+
+    def n_active(self) -> int:
+        """Replicas not retired by scale-down (healthy or not)."""
+        return sum(not st.retired for st in self.replicas)
 
     def record_success(self, r: int, latency_s: float = 0.0) -> None:
         st = self.replicas[r]
@@ -196,9 +221,9 @@ class ReplicaTracker:
 
     def snapshot(self) -> list[dict]:
         """Per-replica health/latency rows (benchmark + debug surface)."""
-        return [dict(replica=r, healthy=self.healthy(r), n_ok=st.n_ok,
-                     n_failures=st.n_failures, n_ejections=st.n_ejections,
-                     p50_latency_s=st.p50())
+        return [dict(replica=r, healthy=self.healthy(r), retired=st.retired,
+                     n_ok=st.n_ok, n_failures=st.n_failures,
+                     n_ejections=st.n_ejections, p50_latency_s=st.p50())
                 for r, st in enumerate(self.replicas)]
 
 

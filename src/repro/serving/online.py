@@ -55,9 +55,19 @@ Design points:
   (:class:`repro.serving.pool.ReplicaSet`) can run at most ``n_replicas``
   batch-groups concurrently, so the server threads per-member group caps into
   the windowed scheduler (``group_caps`` in
-  :func:`repro.core.scheduler.greedy_schedule_window`) and defers over-cap
-  groups to the next window — capacity backpressure composes with budget
-  backpressure instead of silently queueing on one engine's lock.
+  :func:`repro.core.scheduler.greedy_schedule_window`).  Caps-aware policies
+  take the caps into the frontier walk itself (the capacity-aware Δ-heap
+  packs over-cap members into fewer, larger batches before deferring); the
+  server's own per-group backstop holds whatever caps-unaware plans overflow
+  — capacity backpressure composes with budget backpressure instead of
+  silently queueing on one engine's lock.
+
+* **Autoscaling.**  ``OnlineConfig(autoscale=AutoscalePolicy(...))`` attaches
+  a :class:`repro.serving.autoscale.Autoscaler`: each window's backlog
+  (capacity-held + packed queries, queue depth, realtime lateness) feeds a
+  hysteresis/cooldown control loop that grows or shrinks every scalable
+  member via ``ReplicaSet.scale_to`` — the new capacity lands in the caps the
+  next window plans against.
 """
 from __future__ import annotations
 
@@ -72,6 +82,7 @@ from typing import Iterable, Iterator, Optional, Sequence
 import numpy as np
 
 from repro.core.scheduler import restrict_space, take_rows
+from repro.serving.autoscale import Autoscaler, AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
@@ -196,6 +207,9 @@ class OnlineConfig:
     breaker: BreakerPolicy = field(default_factory=BreakerPolicy)
     max_workers: Optional[int] = None # dispatch threads (default: total replicas)
     realtime: bool = False            # pace windows against the wall clock
+    autoscale: Optional[AutoscalePolicy] = None
+    # ^ backlog-driven replica autoscaling (repro.serving.autoscale); None
+    #   keeps the pool fixed — only members exposing scale_to participate
 
 
 @dataclass
@@ -209,6 +223,7 @@ class WindowReport:
     n_admitted: int = 0               # scheduled this round
     n_deferred: int = 0               # unaffordable/over-cap, retried next round
     n_capacity_held: int = 0          # deferred specifically by replica caps
+    n_cap_packed: int = 0             # re-packed into wider batches to fit caps
     n_shed: int = 0                   # can never afford → dropped
     n_failed: int = 0                 # queries whose dispatch group faulted
     n_groups: int = 0                 # physical batches dispatched
@@ -218,6 +233,7 @@ class WindowReport:
     open_models: tuple = ()           # breaker-open member names
     group_models: tuple = ()          # model index of each dispatched group
     late_s: float = 0.0               # realtime: how late past the boundary
+    replica_counts: tuple = ()        # active replicas per member after the round
 
 
 @dataclass
@@ -297,13 +313,19 @@ class OnlineRobatchServer:
             if tracker is not None and tracker.clock is time.monotonic:
                 tracker.clock = lambda: self.now
         self._pw_caps = "caps" in inspect.signature(policy.plan_window).parameters
+        self.autoscaler = (Autoscaler(self.pool, config.autoscale)
+                           if config.autoscale is not None else None)
         self.pending: deque[OnlineRequest] = deque()
         self.completed: list[OnlineRequest] = []
         self.windows: list[WindowReport] = []
         self._locks = [threading.Lock() for _ in self.pool]
         self._submit_lock = threading.Lock()
         workers = config.max_workers or max(
-            1, sum(getattr(m, "n_replicas", 1) for m in self.pool))
+            1, sum(getattr(m, "n_replicas", 1) for m in self.pool),
+            # autoscale can grow the pool past its initial size — size the
+            # dispatch pool for the ceiling so scaled-up groups run concurrent
+            len(self.pool) * (config.autoscale.max_replicas
+                              if config.autoscale is not None else 0))
         self._pool_exec = ThreadPoolExecutor(max_workers=workers)
         self._next_rid = 0
         self.n_coalesced = 0
@@ -358,6 +380,19 @@ class OnlineRobatchServer:
         with self._locks[k]:          # engines are not thread-safe; members are
             return self.pool[k].invoke_batch(self.wl, members)
 
+    def _finish_window(self, rep: WindowReport) -> WindowReport:
+        """Seal one round: record per-member replica counts, give the
+        autoscaler its control tick (its scale actions land in the caps the
+        NEXT round plans against), and append the report."""
+        rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))
+                                   for m in self.pool)
+        if self.autoscaler is not None:
+            self.autoscaler.observe(rep, len(self.pending), rep.t)
+            rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))
+                                       for m in self.pool)
+        self.windows.append(rep)
+        return rep
+
     def step(self, now: Optional[float] = None) -> WindowReport:
         """Run one scheduling round over the queries pending at ``now``."""
         self.now = self.now + self.cfg.window_s if now is None else now
@@ -393,8 +428,7 @@ class OnlineRobatchServer:
             for reqs in reversed(list(by_idx.values())):
                 self.pending.extendleft(reversed(reqs))
             rep.n_deferred = len(misses)
-            self.windows.append(rep)
-            return rep
+            return self._finish_window(rep)
 
         # 3. policy window space, restricted to surviving models
         idx = np.fromiter(by_idx.keys(), dtype=int)
@@ -423,8 +457,7 @@ class OnlineRobatchServer:
         idx = idx[:n_adm]
         rep.n_admitted = int(sum(len(by_idx[int(q)]) for q in idx))
         if n_adm == 0:
-            self.windows.append(rep)
-            return rep
+            return self._finish_window(rep)
 
         # 5. the policy's windowed decision against the bucket's current
         #    balance (the server restricted the space up front for admission
@@ -434,6 +467,10 @@ class OnlineRobatchServer:
         cap_kw = {"caps": caps or None} if self._pw_caps else {}
         wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx,
                                         avail, **cap_kw)
+        if wplan.schedule is not None:
+            # capacity-packing pressure (greedy_schedule_capped) — an
+            # autoscaler signal even when nothing is held outright
+            rep.n_cap_packed = int(getattr(wplan.schedule, "n_packed", 0))
 
         # half-open breakers get exactly ONE probe group: any further groups
         # scheduled on a recovering member are deferred to the next window
@@ -513,8 +550,7 @@ class OnlineRobatchServer:
         retry = sorted(requeue + held, key=lambda r: r.rid)
         if retry:                     # FCFS: oldest retried request re-enters first
             self.pending.extendleft(reversed(retry))
-        self.windows.append(rep)
-        return rep
+        return self._finish_window(rep)
 
     def run(self, arrivals: Sequence[tuple[float, int]], *,
             max_ticks: int = 100_000) -> ServerStats:

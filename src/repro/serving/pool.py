@@ -115,24 +115,77 @@ class ReplicaSet:
     simulator.  ``thread_safe`` tells the online dispatcher to skip its
     per-member serialization lock — replicas serialize themselves, so groups
     bound for different replicas genuinely run concurrently.
+
+    **Autoscaling.**  ``factory`` is a zero-arg callable producing one more
+    interchangeable replica; with one attached, :meth:`scale_to` grows the
+    set on demand (un-parking previously drained replicas before building new
+    ones) and shrinks it by drain-then-eject: the victim replica is retired in
+    the :class:`~repro.serving.fault.ReplicaTracker` (no new dispatch; its
+    in-flight batch finishes normally) rather than torn down mid-batch, so a
+    scale-down never fails a query.  Retired replicas stay attached and are
+    the first capacity a later scale-up restores.
     """
 
     thread_safe = True
 
     def __init__(self, replicas: Sequence, *, name: Optional[str] = None,
                  policy: Optional[ReplicaPolicy] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 factory: Optional[Callable[[], object]] = None):
         if not replicas:
             raise ValueError("ReplicaSet needs at least one replica")
         self.replicas = list(replicas)
         self.name = name if name is not None else self.replicas[0].name
         self.tracker = ReplicaTracker(len(self.replicas), policy, clock)
+        self.factory = factory
         self._inflight = [0] * len(self.replicas)
         self._lock = threading.Lock()
 
     @property
     def n_replicas(self) -> int:
-        return len(self.replicas)
+        """Active (non-retired) replica count — the member's nominal size."""
+        return self.tracker.n_active()
+
+    def scale_to(self, n: int) -> int:
+        """Grow or shrink the active replica count toward ``n``; returns the
+        count actually reached (growth stops at the attached replicas when no
+        ``factory`` is set; the floor is always 1).
+
+        Grow: retired replicas are restored first (clean health slate), then
+        ``factory()`` attaches brand-new ones.  Shrink: victims — preferring
+        already-unhealthy, then idle, then highest-index replicas — are
+        *retired* in the tracker, which removes them from dispatch while any
+        in-flight batch drains to completion.
+        """
+        n = max(1, int(n))
+        while True:
+            with self._lock:
+                states = self.tracker.replicas
+                active = self.tracker.n_active()
+                if active < n:
+                    parked = [r for r, st in enumerate(states) if st.retired]
+                    if parked:
+                        self.tracker.restore(parked[0])
+                        continue
+                    if self.factory is None:
+                        return active
+                elif active > n:
+                    alive = [r for r, st in enumerate(states) if not st.retired]
+                    victim = max(alive,
+                                 key=lambda r: (not self.tracker.healthy(r),
+                                                -self._inflight[r], r))
+                    self.tracker.retire(victim)
+                    continue
+                else:
+                    return active
+            # build OUTSIDE the dispatch lock: a tiny-pool factory constructs
+            # a whole ServingEngine, and in-flight batches must not stall on
+            # (or be unable to release their slot during) the construction
+            replica = self.factory()
+            with self._lock:
+                self.replicas.append(replica)
+                self._inflight.append(0)
+                self.tracker.add_replica()
 
     def n_available(self) -> int:
         """Healthy-replica count — the member's CURRENT group capacity (the
@@ -161,9 +214,11 @@ class ReplicaSet:
     def _acquire(self, exclude: set[int]) -> Optional[int]:
         """Least-loaded healthy replica (falls back to ejected ones only when
         every non-excluded replica is ejected — a last-ditch probe beats
-        failing a batch that might still be servable)."""
+        failing a batch that might still be servable).  Retired replicas
+        (scale-down drain) never take new work."""
         with self._lock:
-            ranked = [r for r in range(len(self.replicas)) if r not in exclude]
+            ranked = [r for r in range(len(self.replicas))
+                      if r not in exclude and not self.tracker.replicas[r].retired]
             if not ranked:
                 return None
             healthy = [r for r in ranked if self.tracker.healthy(r)]
@@ -200,8 +255,11 @@ class ReplicaSet:
 
 def replicate_simulated(member, n: int, **kwargs) -> ReplicaSet:
     """ReplicaSet of ``n`` dataclass copies of a simulated member (copies are
-    deterministic-identical, so replication changes capacity, not outcomes)."""
+    deterministic-identical, so replication changes capacity, not outcomes).
+    The copy constructor doubles as the set's autoscaling ``factory``, so the
+    :class:`~repro.serving.autoscale.Autoscaler` can grow it past ``n``."""
     from dataclasses import replace
 
+    kwargs.setdefault("factory", lambda: replace(member))
     return ReplicaSet([replace(member) for _ in range(n)],
                       name=member.name, **kwargs)

@@ -27,7 +27,7 @@ from repro.training.optimizer import adamw
 
 __all__ = ["SYSTEM_PROMPT", "TINY_PRICES", "gen_query",
            "format_training_example", "train_engines", "build_task_workload",
-           "build_tiny_pool"]
+           "replica_factory", "build_tiny_pool"]
 
 SYSTEM_PROMPT = ("You are a calculator. For each question output the last digit "
                  "of the sum, answers separated by ';'.")
@@ -157,15 +157,38 @@ def build_task_workload(rng, fmt: BatchPromptFormatter, n_train: int,
     return wl, TextTask(queries=queries, answers=answers)
 
 
+def replica_factory(prototype: ServedPoolMember):
+    """Zero-arg builder of one more interchangeable replica of a served
+    member: a fresh :class:`ServingEngine` (its own KV-cache slots) over the
+    SAME trained params — what :meth:`repro.serving.pool.ReplicaSet.scale_to`
+    calls to grow a tiny-pool member without retraining."""
+    proto_engine = prototype.engine
+
+    def build() -> ServedPoolMember:
+        engine = ServingEngine(proto_engine.model, proto_engine.params,
+                               max_slots=proto_engine.max_slots,
+                               max_len=proto_engine.max_len)
+        return ServedPoolMember(prototype.name, engine, prototype.formatter,
+                                prototype.task, c_in=prototype.c_in,
+                                c_out=prototype.c_out,
+                                context_len=prototype.context_len,
+                                max_answer_tokens=prototype.max_answer_tokens)
+
+    return build
+
+
 def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 48,
-                    replicas: int = 1, verbose: bool = True):
+                    replicas: int = 1, scalable: bool = False,
+                    verbose: bool = True):
     """Everything the routing stack needs: (workload, pool, formatter).
 
     The returned members satisfy the pool-member protocol, so ``Robatch`` and
     ``OnlineRobatchServer`` use them exactly like the simulator.  With
     ``replicas > 1`` each member is a :class:`~repro.serving.pool.ReplicaSet`
     of that many engines over one set of trained weights — N-way concurrent
-    serving without N training runs."""
+    serving without N training runs.  ``scalable=True`` wraps members in
+    ReplicaSets even at ``replicas=1`` and attaches a shared-weight
+    :func:`replica_factory`, so the autoscaler can grow them on demand."""
     fmt = BatchPromptFormatter(SYSTEM_PROMPT)
     engines = train_engines(rng, fmt, steps, replicas=replicas, verbose=verbose)
     wl, task = build_task_workload(rng, fmt, n_train, n_test)
@@ -175,9 +198,13 @@ def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 4
                                 c_in=TINY_PRICES[name][0],
                                 c_out=TINY_PRICES[name][1], context_len=512)
 
-    if replicas > 1:
-        pool = [ReplicaSet([member(name, e) for e in engines[name]], name=name)
-                for name in ("tiny-s", "tiny-m", "tiny-l")]
+    if replicas > 1 or scalable:
+        def rset(name: str) -> ReplicaSet:
+            members = [member(name, e) for e in engines[name]]
+            return ReplicaSet(members, name=name,
+                              factory=replica_factory(members[0]))
+
+        pool = [rset(name) for name in ("tiny-s", "tiny-m", "tiny-l")]
     else:
         pool = [member(name, engines[name][0])
                 for name in ("tiny-s", "tiny-m", "tiny-l")]

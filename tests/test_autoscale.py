@@ -1,0 +1,286 @@
+"""Capacity-aware Δ-heap scheduling + backlog-driven replica autoscaling:
+pack-vs-defer semantics, ReplicaSet.scale_to grow/drain/shrink, hysteresis
+flap-freedom, and the closed loop through the online server."""
+import numpy as np
+import pytest
+
+from repro.core.problem import group_into_batches
+from repro.core.scheduler import (
+    greedy_schedule,
+    greedy_schedule_capped,
+    greedy_schedule_window,
+)
+from repro.data.simulator import BatchResult
+from repro.serving.autoscale import AutoscalePolicy, Autoscaler, ScaleEvent
+from repro.serving.online import OnlineConfig, OnlineRobatchServer, WindowReport
+from repro.serving.pool import ReplicaSet, replicate_simulated
+
+
+# ---------------------------------------------------------------------------
+# capacity-aware Δ-heap (greedy_schedule_capped)
+# ---------------------------------------------------------------------------
+
+def test_capped_schedule_bit_identical_when_caps_never_bind(fitted_rb, agnews):
+    # property-style sweep: with caps ≥ the uncapped schedule's group demand,
+    # the capacity-aware walk must return the uncapped schedule EXACTLY
+    test = agnews.subset_indices("test")
+    space = fitted_rb.candidate_space(test)
+    base = float(space.cost[:, space.initial_state].sum())
+    for n, mult in [(8, 1.5), (24, 3.0), (64, 8.0), (128, 2.0)]:
+        idx = test[:n]
+        sub = fitted_rb.candidate_space(idx)
+        budget = float(sub.cost[:, sub.initial_state].sum()) * mult
+        free = greedy_schedule(sub, idx, budget)
+        loose = {k: len(idx) for k in range(3)}   # ≥ any possible demand
+        capped = greedy_schedule_capped(sub, idx, budget, loose)
+        assert np.array_equal(capped.assignment.model, free.assignment.model)
+        assert np.array_equal(capped.assignment.batch, free.assignment.batch)
+        assert np.array_equal(capped.assignment.query_idx, free.assignment.query_idx)
+        assert capped.est_utility == free.est_utility
+        assert capped.amortized_cost == free.amortized_cost
+        assert capped.n_packed == 0 and len(capped.deferred_idx) == 0
+    assert base > 0
+
+
+def test_capped_schedule_defers_strictly_less_than_post_pass(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:48]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost.max(axis=1).sum())          # rich budget
+    caps = {0: 1, 1: 1, 2: 1}
+    defer = greedy_schedule_window(space, test, budget, group_caps=caps,
+                                   cap_mode="defer")
+    pack = greedy_schedule_window(space, test, budget, group_caps=caps)
+    assert len(defer.deferred_idx) > 0                    # post-pass does defer
+    assert len(pack.deferred_idx) < len(defer.deferred_idx)
+    # packing respects both the caps and the budget
+    per_model: dict = {}
+    for state, _m in group_into_batches(pack.assignment):
+        per_model[state.model] = per_model.get(state.model, 0) + 1
+    assert all(n <= caps[k] for k, n in per_model.items())
+    assert pack.amortized_cost <= budget + 1e-9
+    # and serves strictly more work than wholesale deferral
+    assert len(pack.assignment) > len(defer.assignment)
+
+
+def test_capped_schedule_spills_to_members_with_headroom(fitted_rb, agnews):
+    # cap model 0 to one group but leave the others roomy: overflow must land
+    # on other members (or wider batches), not be deferred outright
+    test = agnews.subset_indices("test")[:32]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost.max(axis=1).sum())
+    res = greedy_schedule_window(space, test, budget,
+                                 group_caps={0: 1, 1: 8, 2: 8})
+    assert len(res.deferred_idx) == 0
+    per_model: dict = {}
+    for state, _m in group_into_batches(res.assignment):
+        per_model[state.model] = per_model.get(state.model, 0) + 1
+    assert per_model.get(0, 0) <= 1
+
+
+# ---------------------------------------------------------------------------
+# ReplicaSet.scale_to: grow via factory / un-park, shrink via drain+retire
+# ---------------------------------------------------------------------------
+
+class _StubMember:
+    def __init__(self, tag: float):
+        self.name = "stub"
+        self.c_in, self.c_out, self.context_len = 1.0, 2.0, 512
+        self.tag = tag
+        self.n_calls = 0
+
+    def invoke_batch(self, wl, batch_idx):
+        self.n_calls += 1
+        return BatchResult(utilities=np.full(len(batch_idx), self.tag),
+                           in_tokens=10, out_tokens=2, latency_s=0.01)
+
+
+def test_scale_to_grows_with_factory_and_shrinks_by_retiring():
+    built = []
+
+    def factory():
+        m = _StubMember(float(len(built) + 1))
+        built.append(m)
+        return m
+
+    rs = ReplicaSet([_StubMember(0.0)], name="m", factory=factory)
+    assert rs.n_replicas == 1
+    assert rs.scale_to(3) == 3
+    assert rs.n_replicas == 3 and len(built) == 2
+    assert rs.n_available() == 3                     # new replicas are healthy
+    # shrink: replicas retire (drain), they are not torn off the set
+    assert rs.scale_to(1) == 1
+    assert rs.n_replicas == 1 and len(rs.replicas) == 3
+    assert rs.n_available() == 1
+    # retired replicas take no new work
+    for _ in range(6):
+        rs.invoke_batch(None, np.arange(2))
+    assert sum(m.n_calls for m in built if rs.tracker.replicas[
+        rs.replicas.index(m)].retired) == 0
+    # grow again: parked replicas are restored before the factory builds more
+    assert rs.scale_to(2) == 2
+    assert len(built) == 2                           # no new construction
+    assert rs.n_replicas == 2
+
+
+def test_scale_to_without_factory_is_bounded_by_attached_replicas():
+    rs = ReplicaSet([_StubMember(0.0), _StubMember(1.0)], name="m")
+    assert rs.scale_to(5) == 2                       # cannot build more
+    assert rs.scale_to(0) == 1                       # floor is always 1
+    assert rs.n_available() == 1
+
+
+def test_replicate_simulated_carries_a_factory(pool):
+    rs = replicate_simulated(pool[0], 1)
+    assert rs.scale_to(3) == 3
+    assert rs.replicas[1].name == pool[0].name       # interchangeable copies
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler: hysteresis + cooldown (no flapping)
+# ---------------------------------------------------------------------------
+
+def _rep(t, held=0, packed=0, late=0.0):
+    return WindowReport(t=t, n_capacity_held=held, n_cap_packed=packed,
+                        late_s=late)
+
+
+def test_autoscaler_is_flap_free_under_oscillating_load():
+    rs = replicate_simulated_stub()
+    asc = Autoscaler([rs], AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                           up_pressure=4, down_pressure=0,
+                                           hold_windows=2, cooldown_s=0.0))
+    # load oscillates hi/lo every window: neither streak ever reaches
+    # hold_windows, so a 40-window oscillation produces ZERO scale actions
+    t = 0.0
+    for i in range(40):
+        t += 0.25
+        asc.observe(_rep(t, held=8 if i % 2 == 0 else 0,
+                         packed=0 if i % 2 == 0 else 0),
+                    queue_depth=0 if i % 2 else 6, now=t)
+    assert asc.events == []
+    assert rs.n_replicas == 1
+
+
+def replicate_simulated_stub():
+    return ReplicaSet([_StubMember(0.0)], name="m",
+                      factory=lambda: _StubMember(9.0))
+
+
+def test_autoscaler_hysteresis_cooldown_and_bounds():
+    rs = replicate_simulated_stub()
+    asc = Autoscaler([rs], AutoscalePolicy(min_replicas=1, max_replicas=3,
+                                           up_pressure=4, hold_windows=2,
+                                           cooldown_s=1.0))
+    # one breaching window is not enough (hysteresis)
+    assert asc.observe(_rep(0.25, held=10), queue_depth=0, now=0.25) == []
+    # the second consecutive breach acts
+    fired = asc.observe(_rep(0.5, held=10), queue_depth=0, now=0.5)
+    assert [(e.from_n, e.to_n) for e in fired] == [(1, 2)]
+    # cooldown: sustained breach inside 1.0s does NOT act again
+    assert asc.observe(_rep(0.75, held=10), queue_depth=0, now=0.75) == []
+    assert asc.observe(_rep(1.0, held=10), queue_depth=0, now=1.0) == []
+    # the first breach past the cooldown (streak already ≥ hold) grows again...
+    fired = asc.observe(_rep(1.75, held=10), queue_depth=0, now=1.75)
+    assert [(e.from_n, e.to_n) for e in fired] == [(2, 3)]
+    # ...and never beyond max_replicas
+    for t in (3.5, 3.75, 4.0, 4.25):
+        asc.observe(_rep(t, held=10), queue_depth=0, now=t)
+    assert rs.n_replicas == 3
+    # idle windows shrink it back, floored at min_replicas
+    t = 5.0
+    for _ in range(20):
+        t += 0.25
+        asc.observe(_rep(t), queue_depth=0, now=t)
+    assert rs.n_replicas == 1
+    assert all(isinstance(e, ScaleEvent) for e in asc.events)
+
+
+def test_autoscaler_floors_pool_to_min_replicas_up_front():
+    rs = replicate_simulated_stub()
+    Autoscaler([rs], AutoscalePolicy(min_replicas=2, max_replicas=4))
+    assert rs.n_replicas == 2
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: server backlog -> scale up -> drain -> scale down
+# ---------------------------------------------------------------------------
+
+def test_server_autoscales_up_under_ramp_and_back_down(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    base = float(fitted_rb.cost_model.state_cost(
+        0, fitted_rb.calibrations[0].b_effect, test).mean())
+    sets = [replicate_simulated(m, 1) for m in pool]
+    cfg = OnlineConfig(
+        budget_per_s=80.0 * base * 8.0, window_s=0.5,
+        autoscale=AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                  up_pressure=4, down_pressure=0,
+                                  up_queue_depth=24, down_queue_depth=4,
+                                  hold_windows=2, cooldown_s=1.0))
+    srv = OnlineRobatchServer(fitted_rb, sets, agnews, cfg)
+    rng = np.random.default_rng(13)
+    burst = [(1.0 + 6.0 * i / len(test), int(q))
+             for i, q in enumerate(rng.permutation(test))]
+    stats = srv.run(burst, max_ticks=200)
+    for _ in range(12):                          # idle ticks after the drain
+        srv.step()
+    srv.close()
+    assert stats.n_completed == stats.n_submitted
+    assert srv.autoscaler is not None and srv.autoscaler.events
+    peaks = [max(w.replica_counts) for w in srv.windows if w.replica_counts]
+    assert max(peaks) > 1                        # grew under backlog
+    assert max(srv.windows[-1].replica_counts) < max(peaks)  # shrank after drain
+    ups = [e for e in srv.autoscaler.events if e.to_n > e.from_n]
+    downs = [e for e in srv.autoscaler.events if e.to_n < e.from_n]
+    assert ups and downs
+    assert min(e.t for e in ups) < min(e.t for e in downs)
+
+
+def test_autoscaled_run_holds_less_capacity_than_fixed_r1(fitted_rb, agnews, pool):
+    test = agnews.subset_indices("test")
+    base = float(fitted_rb.cost_model.state_cost(
+        0, fitted_rb.calibrations[0].b_effect, test).mean())
+    rng = np.random.default_rng(14)
+    burst = [(1.0 + 4.0 * i / len(test), int(q))
+             for i, q in enumerate(rng.permutation(test))]
+
+    def run(autoscale):
+        cfg = OnlineConfig(budget_per_s=80.0 * base * 8.0, window_s=0.5,
+                           autoscale=autoscale)
+        srv = OnlineRobatchServer(fitted_rb, [replicate_simulated(m, 1)
+                                              for m in pool], agnews, cfg)
+        stats = srv.run(burst, max_ticks=200)
+        srv.close()
+        return sum(w.n_capacity_held + w.n_cap_packed for w in stats.windows)
+
+    fixed = run(None)
+    scaled = run(AutoscalePolicy(min_replicas=1, max_replicas=4, up_pressure=4,
+                                 hold_windows=2, cooldown_s=0.5))
+    assert fixed > 0                              # R=1 was actually pressured
+    assert scaled < fixed                         # added capacity relieved it
+
+
+def test_window_reports_carry_replica_counts(fitted_rb, agnews, pool):
+    sets = [replicate_simulated(m, 2) for m in pool]
+    test = agnews.subset_indices("test")
+    base = float(fitted_rb.cost_model.state_cost(
+        0, fitted_rb.calibrations[0].b_effect, test).mean())
+    srv = OnlineRobatchServer(fitted_rb, sets, agnews,
+                              OnlineConfig(budget_per_s=base * 40.0))
+    srv.submit(int(test[0]), at=0.0)
+    rep = srv.step(0.25)
+    srv.close()
+    assert rep.replica_counts == (2, 2, 2)
+
+
+def test_pool_spec_round_trips_autoscale_bounds():
+    from repro.api import PoolSpec, RunSpec
+
+    spec = RunSpec(pool=PoolSpec(replicas=1, min_replicas=1, max_replicas=4))
+    again = RunSpec.from_json(spec.to_json())
+    assert again == spec
+    pol = again.pool.autoscale_policy()
+    assert pol is not None
+    assert (pol.min_replicas, pol.max_replicas) == (1, 4)
+    assert RunSpec().pool.autoscale_policy() is None
+    with pytest.raises(ValueError, match="max_replicas"):
+        PoolSpec(replicas=3, max_replicas=2).build()

@@ -346,11 +346,14 @@ def test_one_replica_outage_degrades_set_without_tripping_breaker(
 # ---------------------------------------------------------------------------
 
 def test_greedy_schedule_window_respects_group_caps(fitted_rb, agnews):
+    # the legacy safety-net semantics (cap_mode="defer"): over-cap groups are
+    # deferred wholesale — what the server still applies to caps-unaware plans
     test = agnews.subset_indices("test")[:24]
     space = fitted_rb.candidate_space(test)
     budget = float(space.cost.max(axis=1).sum())  # rich: upgrades to b=1 states
     caps = {0: 1, 1: 1, 2: 1}
-    res = greedy_schedule_window(space, test, budget, group_caps=caps)
+    res = greedy_schedule_window(space, test, budget, group_caps=caps,
+                                 cap_mode="defer")
     per_model: dict = {}
     for state, _members in group_into_batches(res.assignment):
         per_model[state.model] = per_model.get(state.model, 0) + 1
@@ -359,6 +362,18 @@ def test_greedy_schedule_window_respects_group_caps(fitted_rb, agnews):
     scheduled = set(res.assignment.query_idx.tolist())
     assert scheduled | set(res.deferred_idx.tolist()) == set(test.tolist())
     assert scheduled.isdisjoint(res.deferred_idx.tolist())
+    # the capacity-aware walk (default cap_mode="pack") keeps the same cap
+    # invariant but packs into wider batches, deferring strictly less
+    packed = greedy_schedule_window(space, test, budget, group_caps=caps)
+    per_model = {}
+    for state, _members in group_into_batches(packed.assignment):
+        per_model[state.model] = per_model.get(state.model, 0) + 1
+    assert per_model and all(n <= caps[k] for k, n in per_model.items())
+    assert len(packed.deferred_idx) < len(res.deferred_idx)
+    assert packed.n_packed > 0
+    sched = set(packed.assignment.query_idx.tolist())
+    assert sched | set(packed.deferred_idx.tolist()) == set(test.tolist())
+    assert sched.isdisjoint(packed.deferred_idx.tolist())
 
 
 def test_group_cap_zero_removes_model_from_window_space(fitted_rb, agnews):
@@ -387,7 +402,9 @@ def test_server_never_dispatches_more_groups_than_replicas(
     for w in stats.windows:
         for k in set(w.group_models):
             assert w.group_models.count(k) <= 2
-    assert sum(w.n_capacity_held for w in stats.windows) > 0  # caps binding
+    # capacity pressure engaged: the Δ-heap packed work into wider batches
+    # (and/or held the unpackable remainder) instead of over-dispatching
+    assert sum(w.n_capacity_held + w.n_cap_packed for w in stats.windows) > 0
 
 
 # ---------------------------------------------------------------------------
