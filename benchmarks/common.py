@@ -17,6 +17,10 @@ from repro.core import Robatch
 
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+# schema of the shared BENCH_online.json gate file — bumped together by
+# every writer (online_throughput.py AND engine_decode.py merge into the
+# same file; a per-script constant would make the schema order-dependent)
+BENCH_SCHEMA = 3          # 3: engine_decode section (benchmarks/engine_decode.py)
 
 
 @functools.lru_cache(maxsize=32)

@@ -1,0 +1,184 @@
+"""Serving-engine decode microbenchmark: tokens/s, host dispatches and
+admission latency of the fused K-step scan decode vs. the per-token reference
+driver, swept over slot count and decode block size K.
+
+What it measures (real wall time, CPU):
+
+* **decode throughput** — ``serve()`` (fused: one ``lax.scan`` dispatch per K
+  tokens, donated KV cache, horizon-sliced attention) against
+  ``serve_stepwise()`` (the pre-fusion path: one host round-trip and one full
+  cache copy per token), with ``eos_id=-1`` so every request generates
+  exactly ``max_new`` tokens — the step/dispatch/token counters are exact and
+  seeded, only the wall-clock rates carry runner noise;
+* **admission latency** — one batched bucket-grouped prefill of N requests
+  (single ``_prefill`` + scatter ``_insert_many``) vs. N per-request
+  admissions.
+
+Results join the blocking bench gate: the ``engine_decode`` section (and an
+``engine`` config block) is merged into ``results/bench/BENCH_online.json``,
+which ``tools/bench_check.py`` compares against the committed baseline —
+counter metrics exactly, rates with runner-noise tolerances.  Run
+``benchmarks/online_throughput.py`` first so the online sections are present
+(this script preserves whatever is already in the file).
+
+    PYTHONPATH=src python benchmarks/engine_decode.py        # BENCH_QUICK=1 to shrink
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import BENCH_SCHEMA, QUICK, RESULTS_DIR, emit, save
+from repro.config import ShardingConfig, get_arch
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+SLOT_COUNTS = (1, 8)
+K_SWEEP = (1, 4, 8)
+MAX_LEN = 512                       # the tiny-pool serving config
+
+
+def _engine(model, params, slots, k):
+    # eos_id=-1 is unreachable: every request runs to max_new exactly, so
+    # token/step/dispatch counts are deterministic across runners
+    return ServingEngine(model, params, max_slots=slots, max_len=MAX_LEN,
+                         decode_block=k, eos_id=-1)
+
+
+def _requests(tok, slots, max_new):
+    return [Request(rid=i, tokens=tok.encode(f"bench prompt {i} abcdefg"),
+                    max_new=max_new) for i in range(slots)]
+
+
+def _run(eng, tok, slots, max_new, fused, repeats):
+    run = eng.serve if fused else eng.serve_stepwise
+    run(_requests(tok, slots, max_new))            # warm the jit variants
+    best, counts = 0.0, None
+    for _ in range(repeats):
+        c0, s0, p0 = eng.n_decode_calls, eng.n_decode_steps, eng.n_prefill_calls
+        reqs = _requests(tok, slots, max_new)
+        t0 = time.perf_counter()
+        run(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.out_tokens) for r in reqs)
+        counts = (eng.n_decode_calls - c0, eng.n_decode_steps - s0,
+                  eng.n_prefill_calls - p0, n_tok)
+        best = max(best, n_tok / dt)
+    return best, counts
+
+
+def _admission(model, params, tok, slots, repeats):
+    """ms to fill ``slots`` free slots: one batched admission vs. per-request."""
+    eng = _engine(model, params, slots, 1)
+    reqs = _requests(tok, slots, 4)
+    free = list(range(slots))
+    eng._admit_batch(reqs, free)                   # warm (B=slots, B=1 variants)
+    eng._admit_batch([reqs[0]], [0])
+    out = {}
+    for mode in ("batched", "sequential"):
+        best = float("inf")
+        for _ in range(repeats):
+            eng.slot_req = [None] * slots          # re-admission overwrites rows
+            reqs = _requests(tok, slots, 4)
+            t0 = time.perf_counter()
+            if mode == "batched":
+                eng._admit_batch(reqs, free)
+            else:
+                for r, s in zip(reqs, free):
+                    eng._admit_batch([r], [s])
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        out[mode] = best
+    return out
+
+
+def run(max_new: int | None = None, repeats: int | None = None, seed: int = 3):
+    max_new = max_new or (32 if QUICK else 128)
+    repeats = repeats or (2 if QUICK else 3)
+    cfg = get_arch("tiny-s")
+    model = Model(cfg, ShardingConfig(remat="none"))
+    import jax
+    params = model.init(jax.random.PRNGKey(seed))
+    tok = ByteTokenizer()
+
+    rows = []
+    speedups = {}
+    for slots in SLOT_COUNTS:
+        ref = _engine(model, params, slots, 1)
+        ref_tps, (calls, steps, prefills, n_tok) = _run(ref, tok, slots,
+                                                        max_new, False, repeats)
+        rows.append(dict(slots=slots, path="stepwise", k=0,
+                         tokens_per_s=ref_tps, gen_tokens=n_tok, steps=steps,
+                         dispatches=calls, prefills=prefills))
+        emit(f"engine_stepwise_s{slots}", 1e6 / ref_tps,
+             f"tok/s={ref_tps:.0f};steps={steps};dispatches={calls}")
+        for k in K_SWEEP:
+            eng = _engine(model, params, slots, k)
+            tps, (calls, steps, prefills, n_tok) = _run(eng, tok, slots,
+                                                        max_new, True, repeats)
+            speedups[(slots, k)] = tps / ref_tps
+            rows.append(dict(slots=slots, path="fused", k=k,
+                             tokens_per_s=tps, gen_tokens=n_tok, steps=steps,
+                             dispatches=calls, prefills=prefills,
+                             speedup=tps / ref_tps))
+            emit(f"engine_fused_s{slots}_k{k}", 1e6 / tps,
+                 f"tok/s={tps:.0f};speedup={tps / ref_tps:.2f}x;"
+                 f"dispatches={calls};steps={steps}")
+
+    adm = _admission(model, params, tok, max(SLOT_COUNTS), repeats)
+    rows.append(dict(slots=max(SLOT_COUNTS), path="admission", k=0,
+                     n_requests=max(SLOT_COUNTS),
+                     batched_ms=adm["batched"], sequential_ms=adm["sequential"]))
+    emit(f"engine_admission_s{max(SLOT_COUNTS)}", adm["batched"] * 1e3,
+         f"batched={adm['batched']:.1f}ms;sequential={adm['sequential']:.1f}ms")
+
+    # the fusion's contract on this hardware class (CPU): K=8 at max_slots=8
+    # must clear 3x the per-token path
+    top = speedups[(max(SLOT_COUNTS), max(K_SWEEP))]
+    assert top >= 3.0, (
+        f"fused K={max(K_SWEEP)} decode at {max(SLOT_COUNTS)} slots is only "
+        f"{top:.2f}x the per-token path (needs >= 3x)")
+
+    save("engine_decode", rows)
+    _merge_into_gate(rows, dict(max_len=MAX_LEN, max_new=max_new, seed=seed,
+                                slot_counts=list(SLOT_COUNTS),
+                                k_sweep=list(K_SWEEP), arch="tiny-s"))
+    return rows
+
+
+def _merge_into_gate(rows, engine_cfg):
+    """Attach the engine_decode section to the shared BENCH_online.json (the
+    file the blocking CI gate compares); online sections are preserved."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
+    try:
+        with open(bench_path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        bench = {"config": {}}
+    bench["schema"] = BENCH_SCHEMA
+    bench.setdefault("config", {})["engine"] = engine_cfg
+    bench["engine_decode"] = rows
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {bench_path} (engine_decode section)", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="tokens per request (default 128; 32 under BENCH_QUICK=1)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(max_new=args.max_new, repeats=args.repeats, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import QUICK, RESULTS_DIR, emit, save, setup
+from benchmarks.common import BENCH_SCHEMA, QUICK, RESULTS_DIR, emit, save, setup
 from repro.core import Robatch
 from repro.serving.autoscale import AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, FlakyMember
@@ -53,7 +53,6 @@ from repro.serving.pool import ReplicaSet, replicate_simulated
 from repro.serving.tinypool import replica_factory
 
 WINDOWS = (0.25, 0.5, 1.0, 2.0)
-BENCH_SCHEMA = 2
 
 
 def _build(pool_kind: str, steps: int, seed: int, max_replicas: int):
@@ -358,6 +357,14 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
     save("online_throughput", rows)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
+    try:        # keep an engine_decode section a prior run merged in
+        with open(bench_path) as f:
+            prior = json.load(f)
+        if "engine_decode" in prior:
+            bench["engine_decode"] = prior["engine_decode"]
+            bench["config"]["engine"] = prior.get("config", {}).get("engine")
+    except (OSError, json.JSONDecodeError):
+        pass
     with open(bench_path, "w") as f:
         json.dump(bench, f, indent=1, default=float)
     print(f"wrote {bench_path}", file=sys.stderr)

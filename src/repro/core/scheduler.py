@@ -40,6 +40,13 @@ class ScheduleResult:
     n_packed: int = 0
     # ^ queries the capacity-aware pass moved to a wider batch (or another
     #   member) to fit the caps — the autoscaler's packing-pressure signal
+    deferred_by_member: dict = field(default_factory=dict)
+    # ^ model index → how many of ``deferred_idx`` ITS cap pushed out; keys
+    #   the backlog to the bottleneck member so a later autoscaler can grow
+    #   only it (Σ values == len(deferred_idx))
+    packed_by_member: dict = field(default_factory=dict)
+    # ^ model index → queries the capacity pass moved off (or within) that
+    #   over-cap member (Σ values == n_packed)
 
 
 def greedy_schedule(
@@ -239,6 +246,7 @@ def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
             chunk = rows[s:s + b]
             by_model.setdefault(k, []).append((float(space.util[chunk, j].sum()), chunk))
     overflow: list[int] = []
+    deferred_by: dict[int, int] = {}
     for k, groups in by_model.items():
         cap = group_caps.get(k)
         if cap is None or len(groups) <= cap:
@@ -246,6 +254,7 @@ def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
         groups.sort(key=lambda g: -g[0])          # stable: ties keep FCFS order
         for _u, chunk in groups[cap:]:
             overflow.extend(chunk)
+            deferred_by[int(k)] = deferred_by.get(int(k), 0) + len(chunk)
     if not overflow:
         return res
     keep = np.setdiff1d(np.arange(n), np.asarray(overflow))
@@ -260,6 +269,7 @@ def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
         n_upgrades=res.n_upgrades,
         infeasible=res.infeasible,
         deferred_idx=np.asarray(a.query_idx)[np.sort(np.asarray(overflow))],
+        deferred_by_member=deferred_by,
     )
 
 
@@ -327,6 +337,10 @@ def greedy_schedule_capped(
     remaining = budget - res.amortized_cost
     n_packed = 0
     deferred_rows: list[int] = []
+    # both keyed by the OVER-CAP member whose cap forced the move/defer (the
+    # bottleneck signal), not by where a spilled query happened to land
+    packed_by: dict[int, int] = {}
+    deferred_by: dict[int, int] = {}
 
     def used_counts(k: int) -> dict[int, int]:
         out = {}
@@ -366,6 +380,7 @@ def greedy_schedule_capped(
                 remaining += float((space.cost[rows, j] - space.cost[rows, w]).sum())
                 col[rows] = w
                 n_packed += len(rows)
+                packed_by[k] = packed_by.get(k, 0) + len(rows)
                 merged = True
                 break
             if not merged:
@@ -394,10 +409,12 @@ def greedy_schedule_capped(
                 active[i] = True
                 remaining -= float(space.cost[i, j])
                 n_packed += 1
+                packed_by[k] = packed_by.get(k, 0) + 1
                 placed = True
                 break
             if not placed:
                 deferred_rows.append(int(i))
+                deferred_by[k] = deferred_by.get(k, 0) + 1
 
     keep = np.where(active)[0]
     chosen = col[keep]
@@ -413,6 +430,8 @@ def greedy_schedule_capped(
         infeasible=res.infeasible,
         deferred_idx=np.asarray(a.query_idx)[dropped],
         n_packed=n_packed,
+        deferred_by_member=deferred_by,
+        packed_by_member=packed_by,
     )
 
 

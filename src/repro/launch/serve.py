@@ -50,6 +50,8 @@ def engine_main(argv):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="tokens generated per fused on-device decode dispatch")
     ap.add_argument("--reduced", action="store_true",
                     help="serve the reduced (smoke) config of a big arch")
     args = ap.parse_args(argv)
@@ -70,7 +72,8 @@ def engine_main(argv):
                          f"decoder with vocab ≥ 259 (use tiny-s/m/l or --reduced dense archs)")
     model = Model(cfg, ShardingConfig(remat="none"))
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_slots=args.slots, max_len=args.max_len)
+    engine = ServingEngine(model, params, max_slots=args.slots,
+                           max_len=args.max_len, decode_block=args.decode_block)
     fmt = BatchPromptFormatter("Answer each question.")
 
     rng = np.random.default_rng(0)

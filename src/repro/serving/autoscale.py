@@ -93,6 +93,10 @@ class Autoscaler:
         self.events: list[ScaleEvent] = []
         self._streaks = _Streaks()
         self._last_action_t: float | None = None
+        # per-member capacity-pressure breakdown (WindowReport.held_by_member
+        # + packed_by_member, accumulated): logged only for now — the breach
+        # decision stays pool-wide; a later PR grows just the bottleneck key
+        self.pressure_by_member: dict[int, int] = {}
         # floor the pool to min_replicas up front (a pool built at R=1 with
         # min_replicas=2 should not wait for a breach to reach its floor)
         for m in self.members:
@@ -114,6 +118,10 @@ class Autoscaler:
         p = self.policy
         if not self.members:
             return []
+        for field_name in ("held_by_member", "packed_by_member"):
+            for k, c in getattr(rep, field_name, ()):
+                self.pressure_by_member[int(k)] = \
+                    self.pressure_by_member.get(int(k), 0) + int(c)
         pressure = self.pressure(rep)
         late = getattr(rep, "late_s", 0.0)
         breach_up = (pressure >= p.up_pressure
@@ -153,13 +161,23 @@ class Autoscaler:
         fired = []
         for m in self.members:
             cur = int(m.n_replicas)
-            target = max(p.min_replicas, min(p.max_replicas, cur + delta))
-            if target == cur:
+            # an async-building set (ReplicaSet(async_build=True)) counts its
+            # in-flight factory builds toward the target, so a sustained
+            # breach never double-builds while a warm engine is on its way
+            pending = int(getattr(m, "n_pending_builds", 0))
+            target = max(p.min_replicas, min(p.max_replicas, cur + pending + delta))
+            if target == cur + pending:
                 continue
             reached = int(m.scale_to(target))
-            if reached != cur:
-                fired.append(ScaleEvent(t=now, member=m.name, from_n=cur,
-                                        to_n=reached, reason=reason))
+            after = int(getattr(m, "n_pending_builds", 0))
+            if reached != cur or after != pending:
+                # from/to count in-flight builds: an async grow reads 1→2
+                # when the warm engine is still constructing off-thread
+                fired.append(ScaleEvent(t=now, member=m.name,
+                                        from_n=cur + pending,
+                                        to_n=reached + after,
+                                        reason=reason + (" (async build)"
+                                                         if after > pending else "")))
         self.events.extend(fired)
         return fired
 
@@ -170,5 +188,8 @@ class Autoscaler:
     def summary(self) -> str:
         ups = sum(e.to_n > e.from_n for e in self.events)
         downs = len(self.events) - ups
+        by_member = ("" if not self.pressure_by_member else
+                     ", pressure by member " + str(dict(sorted(
+                         self.pressure_by_member.items()))))
         return (f"autoscaler: {len(self.events)} actions ({ups} up, {downs} "
-                f"down), replicas now {self.replica_counts()}")
+                f"down), replicas now {self.replica_counts()}{by_member}")

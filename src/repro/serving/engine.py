@@ -1,17 +1,39 @@
 """Serving engine: slot-based continuous batching over prefill/decode steps.
 
 One engine serves one model.  The KV cache is a fixed (max_slots, ...) pytree;
-requests are admitted into free slots (their prefilled single-request cache is
-scattered into the slot), all active slots decode in lockstep, and finished
+requests are admitted into free slots (their prefilled cache rows are
+scattered into the slots), all active slots decode in lockstep, and finished
 requests retire immediately so new ones can be admitted mid-stream — the vLLM
 iteration-level scheduling idea, realized with jit-static shapes.
+
+The generation path is **fused on-device**: one jitted ``jax.lax.scan``
+(:attr:`ServingEngine._decode_k`) generates ``decode_block`` tokens per host
+dispatch with on-device greedy sampling and per-slot active/EOS/max_new
+masking, returning only a ``(K, max_slots)`` token block plus validity masks
+to the host — the host syncs once per K tokens instead of once per token.
+The KV cache is **donated** through the decode and insert jits
+(``donate_argnums``), so decode updates the cache buffers in place instead of
+copying the full ``(max_slots, max_len, ...)`` pytree every step.  Decode
+attention reads only a power-of-two **horizon** slice of the cache covering
+the longest live sequence plus the K-token block (the seq axis is bucketed
+like prompt lengths, so jit variants stay bounded): on CPU the decode step is
+memory-bound on the K/V read, and short streams in a long-``max_len`` engine
+stop paying for buffer they have not filled.  Admission is **batched**: every
+request admitted in one serving tick is padded to a shared length bucket,
+prefilled in a single call, and scatter-inserted into its slot by one fused
+``_insert_many``.
+
+The pre-fusion driver survives as :meth:`ServingEngine.serve_stepwise` (one
+host round-trip per token, per-request prefill) — the parity reference for
+``tests/test_engine.py`` and the baseline leg of
+``benchmarks/engine_decode.py``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,47 +56,131 @@ class Request:
 
 
 class ServingEngine:
-    """Continuous-batching engine for a single model on the local device(s)."""
+    """Continuous-batching engine for a single model on the local device(s).
+
+    ``decode_block`` is K, the number of tokens generated per host dispatch
+    by the fused scan; K=1 degenerates to one sync per token (still fused
+    sampling/masking on device).  Greedy outputs are bit-identical for every
+    K (parity-tested) — K only trades host round-trips against up to K−1
+    wasted lockstep steps on the final block of a stream.
+    """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8, max_len: int = 1024,
+                 decode_block: int = 8,
                  eos_id: int = ByteTokenizer.eos, pad_id: int = ByteTokenizer.pad):
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
+        self.decode_block = max(1, int(decode_block))
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.cache = model.init_cache(max_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * max_slots
-        self._prefill_len_cache: dict[int, Callable] = {}
+        self.tok = ByteTokenizer()          # engine-owned: one instance, all paths
+        # telemetry: host dispatches vs device steps (benchmarks/engine_decode.py)
+        self.n_decode_calls = 0             # host→device decode dispatches
+        self.n_decode_steps = 0             # device decode steps they executed
+        self.n_prefill_calls = 0            # admission prefill dispatches
 
         @jax.jit
         def _decode(params, tokens, cache):
+            # the pre-fusion reference step: deliberately NOT donated — one
+            # full-cache copy per token is part of what serve_stepwise
+            # baselines (benchmarks/engine_decode.py measures against it)
             return model.decode_step(params, tokens, cache)
 
         self._decode = _decode
 
         @partial(jax.jit, static_argnums=(3,))
-        def _prefill_one(params, tokens, lengths, max_len):
+        def _prefill(params, tokens, lengths, max_len):
             return model.prefill(params, tokens, max_len, lengths=lengths)
 
-        self._prefill_one = _prefill_one
+        self._prefill = _prefill
 
-        @jax.jit
-        def _insert(cache, one_cache, slot):
+        @partial(jax.jit, donate_argnums=(0,))
+        def _insert_many(cache, rows, slots):
+            # scatter B freshly prefilled cache rows into their slots in one
+            # fused update; a slot index of max_slots marks a padding row of
+            # the admission bucket and mode="drop" discards it
             def ins_axis(axis):
                 def ins(dst, src):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        dst, src.astype(dst.dtype), slot, axis=axis)
+                    src = src.astype(dst.dtype)
+                    if axis == 0:
+                        return dst.at[slots].set(src, mode="drop")
+                    return dst.at[:, slots].set(src, mode="drop")
                 return ins
             out = {}
             for key, sub in cache.items():
                 # "blocks" leaves are layer-stacked: batch dim is axis 1
                 axis = 1 if key == "blocks" else 0
-                out[key] = jax.tree.map(ins_axis(axis), sub, one_cache[key])
+                out[key] = jax.tree.map(ins_axis(axis), sub, rows[key])
             return out
 
-        self._insert = _insert
+        self._insert_many = _insert_many
+
+        def _seq_axis(leaf) -> Optional[int]:
+            # K/V cache leaves are (..., seq, kv_heads, head_dim) with
+            # seq == max_len for global attention (window/ring caches and
+            # recurrent states are smaller and never match) — the only
+            # leaves the decode horizon may shrink
+            if leaf.ndim >= 3 and leaf.shape[-3] == self.max_len:
+                return leaf.ndim - 3
+            return None
+
+        @partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+        def _decode_k(horizon, params, cache, last_tok, active, n_out, limit):
+            """K decode steps fused in one dispatch.
+
+            Device state per slot: ``last_tok`` (next input token), ``active``
+            (still generating), ``n_out`` (tokens emitted so far, prefill
+            first token included), ``limit`` (min(max_new, max_len−1−prompt)).
+            Returns the updated cache (donated — in-place), the final active
+            mask, the (K, max_slots) greedy token block and a validity mask
+            (``valid[k, i]`` ⇔ slot i was active entering step k, i.e. token
+            ``toks[k, i]`` belongs to its stream).  Inactive slots decode
+            garbage into their own cache rows, exactly like the stepwise
+            driver — admission overwrites the whole row.
+
+            ``horizon`` (static) bounds the K/V positions attention can see:
+            the scan runs on a ``[:horizon]`` slice of the seq axis and the
+            slice is written back into the donated full buffer afterwards.
+            The host guarantees horizon ≥ the largest live sequence length
+            + K, so the restriction is exact (greedy outputs are parity-
+            tested against the full-horizon stepwise path); a retired slot's
+            garbage stream may run past the horizon, where its writes drop
+            out of bounds — admission rebuilds the row from prefill anyway.
+            """
+            def shrink(leaf):
+                ax = _seq_axis(leaf)
+                if ax is None or horizon >= self.max_len:
+                    return leaf
+                return jax.lax.slice_in_dim(leaf, 0, horizon, axis=ax)
+
+            def merge(full, small):
+                if full.shape == small.shape:
+                    return small
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, small, 0, axis=full.ndim - 3)
+
+            small = jax.tree.map(shrink, cache)
+
+            def step(carry, _):
+                sc, last, act, n = carry
+                logits, sc = model.decode_step(params, last[:, None], sc)
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                n = n + act.astype(jnp.int32)
+                done = act & ((nxt == self.eos_id) | (n >= limit))
+                last = jnp.where(act, nxt, last)
+                return (sc, last, act & ~done, n), (nxt, act)
+
+            (small, _last, act, _n), (toks, valid) = jax.lax.scan(
+                step, (small, last_tok, active, n_out), None,
+                length=self.decode_block)
+            cache = jax.tree.map(merge, cache, small)
+            return cache, act, toks, valid
+
+        self._decode_k = _decode_k
 
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -84,19 +190,47 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_len)
 
-    def _admit(self, req: Request, slot: int):
-        tok = ByteTokenizer()
-        L = self._bucket_len(len(req.tokens))
-        tokens, lengths = tok.pad_batch([req.tokens], L)
-        logits, one_cache = self._prefill_one(self.params, jnp.asarray(tokens),
-                                              jnp.asarray(lengths), self.max_len)
-        self.cache = self._insert(self.cache, one_cache, slot)
-        self.slot_req[slot] = req
-        req.started_at = time.time()
-        first = int(jnp.argmax(logits[0, 0]))
-        req.out_tokens.append(first)
-        if first == self.eos_id:
-            self._retire(slot)
+    def _bucket_count(self, n: int) -> int:
+        """Pad admission batch sizes to power-of-two buckets (≤ max_slots)."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_slots)
+
+    def _admit_batch(self, reqs: list[Request], slots: list[int]):
+        """Admit ``reqs`` into ``slots`` with ONE prefill + ONE insert: all
+        prompts pad to a shared length bucket, the batch count pads to a
+        power-of-two bucket (padding rows scatter out of bounds and drop)."""
+        B = self._bucket_count(len(reqs))
+        L = self._bucket_len(max(len(r.tokens) for r in reqs))
+        seqs = [r.tokens for r in reqs] + [[self.pad_id]] * (B - len(reqs))
+        tokens, lengths = self.tok.pad_batch(seqs, L)
+        slot_arr = np.full(B, self.max_slots, dtype=np.int32)
+        slot_arr[: len(reqs)] = slots
+        logits, rows = self._prefill(self.params, jnp.asarray(tokens),
+                                     jnp.asarray(lengths), self.max_len)
+        self.n_prefill_calls += 1
+        self.cache = self._insert_many(self.cache, rows, jnp.asarray(slot_arr))
+        first = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        now = time.time()
+        for req, slot, f in zip(reqs, slots, first):
+            self.slot_req[slot] = req
+            req.started_at = now
+            req.finished_at = None      # clear stale timing on re-admission
+            req.done = False
+            req.out_tokens.append(int(f))
+            if int(f) == self.eos_id:
+                self._retire(slot)
+
+    def _admit_free(self, queue: list[Request]):
+        """Fill every free slot from the queue (FCFS, slot-index order); an
+        EOS-at-prefill retirement frees its slot for the next round."""
+        while queue:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free:
+                return
+            n = min(len(free), len(queue))
+            self._admit_batch([queue.pop(0) for _ in range(n)], free[:n])
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
@@ -108,15 +242,66 @@ class ServingEngine:
     def _active_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    def _slot_state(self):
+        """Host view of the device decode state, rebuilt from the requests
+        each fused call — the host bookkeeping stays authoritative."""
+        last = np.zeros(self.max_slots, dtype=np.int32)
+        act = np.zeros(self.max_slots, dtype=bool)
+        n_out = np.zeros(self.max_slots, dtype=np.int32)
+        limit = np.ones(self.max_slots, dtype=np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            last[i] = req.out_tokens[-1]
+            act[i] = True
+            n_out[i] = len(req.out_tokens)
+            limit[i] = min(req.max_new, self.max_len - 1 - len(req.tokens))
+        return last, act, n_out, limit
+
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
-        """Run all requests to completion with continuous batching."""
+        """Run all requests to completion with continuous batching.
+
+        Fused driver: one batched admission per tick, then one
+        ``_decode_k`` dispatch generates up to ``decode_block`` tokens for
+        every active slot before the host looks at the results again.
+        """
         queue = list(requests)
         while queue or self._active_slots():
-            # admission: fill free slots
+            self._admit_free(queue)
+            active = self._active_slots()
+            if not active:
+                continue
+            last, act, n_out, limit = self._slot_state()
+            live = max(len(self.slot_req[i].tokens) + len(self.slot_req[i].out_tokens)
+                       for i in active)
+            horizon = min(self.max_len, self._bucket_len(live + self.decode_block))
+            self.cache, act_f, toks, valid = self._decode_k(
+                horizon, self.params, self.cache, jnp.asarray(last),
+                jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
+            self.n_decode_calls += 1
+            self.n_decode_steps += self.decode_block
+            toks = np.asarray(toks)
+            valid = np.asarray(valid)
+            act_f = np.asarray(act_f)
+            for i in active:
+                req = self.slot_req[i]
+                req.out_tokens.extend(int(t) for t in toks[valid[:, i], i])
+                if not act_f[i]:
+                    self._retire(i)
+        return requests
+
+    def serve_stepwise(self, requests: list[Request]) -> list[Request]:
+        """Pre-fusion reference driver: per-request prefill admission and one
+        host round-trip (dispatch + argmax sync) per generated token.  Kept
+        for the fused-path parity tests and as the baseline leg of
+        ``benchmarks/engine_decode.py``; outputs are bit-identical to
+        :meth:`serve` under greedy sampling."""
+        queue = list(requests)
+        while queue or self._active_slots():
             for slot in range(self.max_slots):
                 if self.slot_req[slot] is None and queue:
-                    self._admit(queue.pop(0), slot)
+                    self._admit_batch([queue.pop(0)], [slot])
             active = self._active_slots()
             if not active:
                 continue
@@ -126,6 +311,8 @@ class ServingEngine:
             for i in active:
                 last[i, 0] = self.slot_req[i].out_tokens[-1]
             logits, self.cache = self._decode(self.params, jnp.asarray(last), self.cache)
+            self.n_decode_calls += 1
+            self.n_decode_steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             for i in active:
                 req = self.slot_req[i]
@@ -138,8 +325,7 @@ class ServingEngine:
 
     # convenience --------------------------------------------------------
     def generate_text(self, prompts: list[str], max_new: int = 32) -> list[str]:
-        tok = ByteTokenizer()
-        reqs = [Request(rid=i, tokens=tok.encode(p), max_new=max_new)
+        reqs = [Request(rid=i, tokens=self.tok.encode(p), max_new=max_new)
                 for i, p in enumerate(prompts)]
         self.serve(reqs)
         outs = []
@@ -147,5 +333,5 @@ class ServingEngine:
             ids = r.out_tokens
             if self.eos_id in ids:
                 ids = ids[: ids.index(self.eos_id)]
-            outs.append(tok.decode(ids))
+            outs.append(self.tok.decode(ids))
         return outs

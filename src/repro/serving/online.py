@@ -234,6 +234,13 @@ class WindowReport:
     group_models: tuple = ()          # model index of each dispatched group
     late_s: float = 0.0               # realtime: how late past the boundary
     replica_counts: tuple = ()        # active replicas per member after the round
+    held_by_member: tuple = ()        # ((member_idx, n_queries), ...) capacity
+    #   holds keyed by the member whose cap pushed the work out — query
+    #   granularity (coalesced duplicates count once), unlike the
+    #   request-granular n_capacity_held; the bottleneck-member signal a
+    #   later per-member autoscaler grows on
+    packed_by_member: tuple = ()      # ((member_idx, n_queries), ...) Δ-heap
+    #   packing moves keyed by the over-cap member that forced them
 
 
 @dataclass
@@ -467,10 +474,16 @@ class OnlineRobatchServer:
         cap_kw = {"caps": caps or None} if self._pw_caps else {}
         wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx,
                                         avail, **cap_kw)
+        held_by: dict[int, int] = {}
+        packed_by: dict[int, int] = {}
         if wplan.schedule is not None:
             # capacity-packing pressure (greedy_schedule_capped) — an
             # autoscaler signal even when nothing is held outright
             rep.n_cap_packed = int(getattr(wplan.schedule, "n_packed", 0))
+            for k, c in getattr(wplan.schedule, "deferred_by_member", {}).items():
+                held_by[int(k)] = held_by.get(int(k), 0) + int(c)
+            for k, c in getattr(wplan.schedule, "packed_by_member", {}).items():
+                packed_by[int(k)] = packed_by.get(int(k), 0) + int(c)
 
         # half-open breakers get exactly ONE probe group: any further groups
         # scheduled on a recovering member are deferred to the next window
@@ -500,12 +513,15 @@ class OnlineRobatchServer:
                 grp = [req for q in members for req in by_idx[int(q)]]
                 held.extend(grp)
                 rep.n_capacity_held += len(grp)
+                held_by[k] = held_by.get(k, 0) + len(members)
                 continue
             used[k] = used.get(k, 0) + 1
             dispatch.append((state, members))
             rep.est_cost += float(gcost)   # committed cost: dispatched only
         rep.n_deferred += len(held)
         rep.n_admitted -= len(held)   # held groups were never attempted
+        rep.held_by_member = tuple(sorted(held_by.items()))
+        rep.packed_by_member = tuple(sorted(packed_by.items()))
 
         # 6. concurrent dispatch across pool members
         futures = {}

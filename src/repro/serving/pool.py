@@ -124,6 +124,20 @@ class ReplicaSet:
     in-flight batch finishes normally) rather than torn down mid-batch, so a
     scale-down never fails a query.  Retired replicas stay attached and are
     the first capacity a later scale-up restores.
+
+    **Async warm attach.**  With ``async_build=True`` a grow that needs the
+    factory runs it on a background thread instead of inside the caller: a
+    tiny-pool factory constructs (and jit-warms) a whole
+    :class:`~repro.serving.engine.ServingEngine`, and the autoscaler fires
+    ``scale_to`` from the serving loop — building inline would stretch the
+    very window that detected the backlog.  ``scale_to`` returns the current
+    active count immediately, the build lands in a ready buffer, and the
+    finished replica *joins at the next window boundary*: ``n_available()``
+    (what the server's per-window ``caps()`` reads) and ``n_replicas``
+    attach any completed builds before reporting.  ``n_pending_builds``
+    counts launched-but-unattached builds so repeated breaches never
+    double-build.  A shrink does not cancel in-flight builds — they attach
+    and are then eligible victims for the next scale-down.
     """
 
     thread_safe = True
@@ -131,20 +145,58 @@ class ReplicaSet:
     def __init__(self, replicas: Sequence, *, name: Optional[str] = None,
                  policy: Optional[ReplicaPolicy] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 factory: Optional[Callable[[], object]] = None):
+                 factory: Optional[Callable[[], object]] = None,
+                 async_build: bool = False):
         if not replicas:
             raise ValueError("ReplicaSet needs at least one replica")
         self.replicas = list(replicas)
         self.name = name if name is not None else self.replicas[0].name
         self.tracker = ReplicaTracker(len(self.replicas), policy, clock)
         self.factory = factory
+        self.async_build = bool(async_build)
         self._inflight = [0] * len(self.replicas)
         self._lock = threading.Lock()
+        self._ready: list = []          # built off-thread, awaiting attach
+        self._pending_builds = 0        # launched factory builds not yet attached
 
     @property
     def n_replicas(self) -> int:
-        """Active (non-retired) replica count — the member's nominal size."""
+        """Active (non-retired) replica count — the member's nominal size.
+        Attaches any finished async builds first (the window-boundary join)."""
+        self._join_ready()
         return self.tracker.n_active()
+
+    @property
+    def n_pending_builds(self) -> int:
+        """Async factory builds launched but not yet attached."""
+        with self._lock:
+            return self._pending_builds + len(self._ready)
+
+    def _spawn_build(self) -> None:
+        def work():
+            try:
+                replica = self.factory()
+            except BaseException:
+                # a failed build must release its pending slot, or the
+                # phantom count suppresses every future scale-up
+                with self._lock:
+                    self._pending_builds -= 1
+                raise               # surface the fault on the thread's stderr
+            with self._lock:
+                self._pending_builds -= 1
+                self._ready.append(replica)
+
+        threading.Thread(target=work, daemon=True,
+                         name=f"{self.name}-replica-build").start()
+
+    def _join_ready(self) -> None:
+        """Attach replicas whose background build finished (never blocks)."""
+        with self._lock:
+            ready, self._ready = self._ready, []
+            for replica in ready:
+                self.replicas.append(replica)
+                self._inflight.append(0)
+                self.tracker.add_replica()
 
     def scale_to(self, n: int) -> int:
         """Grow or shrink the active replica count toward ``n``; returns the
@@ -152,12 +204,16 @@ class ReplicaSet:
         ``factory`` is set; the floor is always 1).
 
         Grow: retired replicas are restored first (clean health slate), then
-        ``factory()`` attaches brand-new ones.  Shrink: victims — preferring
+        ``factory()`` attaches brand-new ones — inline, or launched on a
+        background thread with ``async_build`` (the call then returns the
+        still-current count and the new replica joins at the next
+        ``n_available()``/``n_replicas`` read).  Shrink: victims — preferring
         already-unhealthy, then idle, then highest-index replicas — are
         *retired* in the tracker, which removes them from dispatch while any
         in-flight batch drains to completion.
         """
         n = max(1, int(n))
+        self._join_ready()
         while True:
             with self._lock:
                 states = self.tracker.replicas
@@ -168,6 +224,13 @@ class ReplicaSet:
                         self.tracker.restore(parked[0])
                         continue
                     if self.factory is None:
+                        return active
+                    if self.async_build:
+                        deficit = (n - active - self._pending_builds
+                                   - len(self._ready))
+                        for _ in range(max(0, deficit)):
+                            self._pending_builds += 1
+                            self._spawn_build()
                         return active
                 elif active > n:
                     alive = [r for r, st in enumerate(states) if not st.retired]
@@ -190,9 +253,11 @@ class ReplicaSet:
     def n_available(self) -> int:
         """Healthy-replica count — the member's CURRENT group capacity (the
         online server re-reads this every window, so an ejected replica
-        shrinks the caps the scheduler plans against).  Never 0: a fully
+        shrinks the caps the scheduler plans against, and a finished async
+        build joins here — at the window boundary).  Never 0: a fully
         ejected set still gets one probe group, and the member-level breaker
         owns the remove-from-space decision."""
+        self._join_ready()
         return max(1, self.tracker.n_healthy())
 
     @property

@@ -70,7 +70,7 @@ def _make_batches(rng, fmt, batch_size, seq_len, n_steps):
 def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
                   names=("tiny-s", "tiny-m", "tiny-l"), *, batch_size: int = 8,
                   seq_len: int = 192, max_slots: int = 4, max_len: int = 512,
-                  replicas: int = 1,
+                  replicas: int = 1, decode_block: int = 8,
                   verbose: bool = True) -> dict[str, list[ServingEngine]]:
     """Train the tiny architectures on the addition task; returns
     ``{name: [engine, ...]}`` with ``replicas`` engines per architecture.
@@ -116,7 +116,7 @@ def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
                   f"{np.mean(losses[-20:]):.2f} "
                   f"({time.time() - t0:.0f}s, {len(losses)} steps)", flush=True)
         engines[name] = [ServingEngine(model, params, max_slots=max_slots,
-                                       max_len=max_len)
+                                       max_len=max_len, decode_block=decode_block)
                         for _ in range(replicas)]
     return engines
 
@@ -167,7 +167,8 @@ def replica_factory(prototype: ServedPoolMember):
     def build() -> ServedPoolMember:
         engine = ServingEngine(proto_engine.model, proto_engine.params,
                                max_slots=proto_engine.max_slots,
-                               max_len=proto_engine.max_len)
+                               max_len=proto_engine.max_len,
+                               decode_block=proto_engine.decode_block)
         return ServedPoolMember(prototype.name, engine, prototype.formatter,
                                 prototype.task, c_in=prototype.c_in,
                                 c_out=prototype.c_out,
@@ -199,10 +200,14 @@ def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 4
                                 c_out=TINY_PRICES[name][1], context_len=512)
 
     if replicas > 1 or scalable:
+        # async_build: a scale-up's engine construction runs off the serving
+        # thread and joins at the next window boundary, so an autoscaler grow
+        # never stretches the window that detected the backlog
         def rset(name: str) -> ReplicaSet:
             members = [member(name, e) for e in engines[name]]
             return ReplicaSet(members, name=name,
-                              factory=replica_factory(members[0]))
+                              factory=replica_factory(members[0]),
+                              async_build=True)
 
         pool = [rset(name) for name in ("tiny-s", "tiny-m", "tiny-l")]
     else:

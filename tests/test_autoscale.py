@@ -62,6 +62,21 @@ def test_capped_schedule_defers_strictly_less_than_post_pass(fitted_rb, agnews):
     assert len(pack.assignment) > len(defer.assignment)
 
 
+def test_per_member_attribution_sums_match_counts(fitted_rb, agnews):
+    # scheduler side of the WindowReport attribution: per-member held/packed
+    # breakdowns must reconcile exactly with the scalar counters
+    test = agnews.subset_indices("test")[:48]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost.max(axis=1).sum())
+    caps = {0: 1, 1: 1, 2: 1}
+    for cap_mode in ("pack", "defer"):
+        res = greedy_schedule_window(space, test, budget, group_caps=caps,
+                                     cap_mode=cap_mode)
+        assert sum(res.deferred_by_member.values()) == len(res.deferred_idx)
+        assert sum(res.packed_by_member.values()) == res.n_packed
+        assert all(k in caps for k in res.deferred_by_member)
+
+
 def test_capped_schedule_spills_to_members_with_headroom(fitted_rb, agnews):
     # cap model 0 to one group but leave the others roomy: overflow must land
     # on other members (or wider batches), not be deferred outright
@@ -133,6 +148,81 @@ def test_replicate_simulated_carries_a_factory(pool):
     rs = replicate_simulated(pool[0], 1)
     assert rs.scale_to(3) == 3
     assert rs.replicas[1].name == pool[0].name       # interchangeable copies
+
+
+# ---------------------------------------------------------------------------
+# async warm attach: factory builds off the serving thread, joins next window
+# ---------------------------------------------------------------------------
+
+def test_async_build_returns_immediately_and_joins_at_boundary():
+    import threading
+    import time as _time
+
+    gate = threading.Event()
+    built = []
+
+    def factory():
+        gate.wait(timeout=5.0)            # a slow engine construction
+        m = _StubMember(1.0)
+        built.append(m)
+        return m
+
+    rs = ReplicaSet([_StubMember(0.0)], name="m", factory=factory,
+                    async_build=True)
+    t0 = _time.perf_counter()
+    assert rs.scale_to(3) == 1            # no blocking on the build
+    assert _time.perf_counter() - t0 < 1.0
+    assert rs.n_pending_builds == 2
+    assert rs.n_available() == 1          # nothing joined while gate is shut
+    # a repeated request while builds are in flight never double-builds
+    assert rs.scale_to(3) == 1
+    assert rs.n_pending_builds == 2
+    # dispatch keeps flowing on the existing replica meanwhile
+    rs.invoke_batch(None, np.arange(2))
+    gate.set()
+    deadline = _time.time() + 5.0
+    while rs.n_available() < 3 and _time.time() < deadline:
+        _time.sleep(0.01)
+    assert rs.n_available() == 3          # joined at a later boundary read
+    assert rs.n_pending_builds == 0
+    assert len(built) == 2
+    assert rs.scale_to(1) == 1            # and they shrink like any replica
+
+
+def test_autoscaler_tracks_async_pending_builds():
+    import threading
+
+    gate = threading.Event()
+    rs = ReplicaSet([_StubMember(0.0)], name="m", async_build=True,
+                    factory=lambda: (gate.wait(timeout=5.0), _StubMember(1.0))[1])
+    asc = Autoscaler([rs], AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                           up_pressure=4, hold_windows=1,
+                                           cooldown_s=0.0))
+    fired = asc.observe(_rep(0.25, held=10), queue_depth=0, now=0.25)
+    assert [(e.from_n, e.to_n) for e in fired] == [(1, 2)]
+    assert "async build" in fired[0].reason
+    assert rs.n_replicas == 1             # capacity arrives later, not inline
+    # sustained breach grows the in-flight target, not a duplicate of step 1
+    fired = asc.observe(_rep(0.5, held=10), queue_depth=0, now=0.5)
+    assert [(e.from_n, e.to_n) for e in fired] == [(2, 3)]
+    gate.set()
+
+
+# ---------------------------------------------------------------------------
+# per-member pressure attribution reaches the autoscaler's log
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_accumulates_per_member_pressure():
+    rs = replicate_simulated_stub()
+    asc = Autoscaler([rs], AutoscalePolicy())
+    asc.observe(WindowReport(t=0.25, n_capacity_held=5, n_cap_packed=3,
+                             held_by_member=((0, 5),),
+                             packed_by_member=((0, 2), (2, 1))),
+                queue_depth=0, now=0.25)
+    asc.observe(WindowReport(t=0.5, held_by_member=((2, 4),)),
+                queue_depth=0, now=0.5)
+    assert asc.pressure_by_member == {0: 7, 2: 5}
+    assert "pressure by member" in asc.summary()
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +347,30 @@ def test_autoscaled_run_holds_less_capacity_than_fixed_r1(fitted_rb, agnews, poo
                                  hold_windows=2, cooldown_s=0.5))
     assert fixed > 0                              # R=1 was actually pressured
     assert scaled < fixed                         # added capacity relieved it
+
+
+def test_window_reports_attribute_capacity_to_members(fitted_rb, agnews, pool):
+    # a caps-bound R=1 burst of UNIQUE queries: the per-member breakdowns
+    # must reconcile exactly with the scalar pressure counters
+    test = agnews.subset_indices("test")
+    base = float(fitted_rb.cost_model.state_cost(
+        0, fitted_rb.calibrations[0].b_effect, test).mean())
+    sets = [replicate_simulated(m, 1) for m in pool]
+    srv = OnlineRobatchServer(fitted_rb, sets, agnews,
+                              OnlineConfig(budget_per_s=80.0 * base * 8.0,
+                                           window_s=0.5))
+    rng = np.random.default_rng(15)
+    burst = [(1.0 + 4.0 * i / len(test), int(q))
+             for i, q in enumerate(rng.permutation(test))]
+    srv.run(burst, max_ticks=200)
+    srv.close()
+    pressured = [w for w in srv.windows if w.n_capacity_held or w.n_cap_packed]
+    assert pressured, "burst never bound the R=1 caps"
+    for w in srv.windows:
+        assert sum(c for _k, c in w.held_by_member) == w.n_capacity_held
+        assert sum(c for _k, c in w.packed_by_member) == w.n_cap_packed
+        assert all(0 <= k < len(sets) for k, _c in
+                   w.held_by_member + w.packed_by_member)
 
 
 def test_window_reports_carry_replica_counts(fitted_rb, agnews, pool):

@@ -64,6 +64,10 @@ def test_ci_workflow_is_valid():
     # the bench regression gate BLOCKS (tolerances absorb runner noise;
     # bench_check annotates regression vs mismatch vs missing baseline)
     assert "continue-on-error" not in wf["jobs"]["bench"]
+    # ...and gates the engine decode microbenchmark alongside the online run
+    bench_runs = [s.get("run") or "" for s in wf["jobs"]["bench"]["steps"]]
+    assert any("engine_decode.py" in r for r in bench_runs)
+    assert any("bench_check.py" in r for r in bench_runs)
     # tier1 runs on a python matrix with a non-blocking coverage report
     matrix = wf["jobs"]["tier1"]["strategy"]["matrix"]["python-version"]
     assert {"3.10", "3.12"} <= set(matrix)
