@@ -20,7 +20,7 @@ QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 # schema of the shared BENCH_online.json gate file — bumped together by
 # every writer (online_throughput.py AND engine_decode.py merge into the
 # same file; a per-script constant would make the schema order-dependent)
-BENCH_SCHEMA = 3          # 3: engine_decode section (benchmarks/engine_decode.py)
+BENCH_SCHEMA = 4          # 4: paged-KV leg in engine_decode (peak_kv_bytes rows)
 
 
 @functools.lru_cache(maxsize=32)

@@ -12,7 +12,11 @@ What it measures (real wall time, CPU):
   seeded, only the wall-clock rates carry runner noise;
 * **admission latency** — one batched bucket-grouped prefill of N requests
   (single ``_prefill`` + scatter ``_insert_many``) vs. N per-request
-  admissions.
+  admissions;
+* **paged vs. contiguous KV** — ``serve()`` on the shared-prefix batch at
+  slots=8/K=8 under both cache layouts: tokens/s, peak KV bytes, and the
+  pool's share/fork counters.  Bit-identical greedy outputs and a strictly
+  lower paged peak are asserted in-process, so they gate the CI bench job.
 
 Results join the blocking bench gate: the ``engine_decode`` section (and an
 ``engine`` config block) is merged into ``results/bench/BENCH_online.json``,
@@ -44,15 +48,26 @@ K_SWEEP = (1, 4, 8)
 MAX_LEN = 512                       # the tiny-pool serving config
 
 
-def _engine(model, params, slots, k):
+def _engine(model, params, slots, k, paged=False):
     # eos_id=-1 is unreachable: every request runs to max_new exactly, so
     # token/step/dispatch counts are deterministic across runners
     return ServingEngine(model, params, max_slots=slots, max_len=MAX_LEN,
-                         decode_block=k, eos_id=-1)
+                         decode_block=k, eos_id=-1, paged=paged)
 
 
 def _requests(tok, slots, max_new):
     return [Request(rid=i, tokens=tok.encode(f"bench prompt {i} abcdefg"),
+                    max_new=max_new) for i in range(slots)]
+
+
+# batch-prompting shape: one long shared system preamble, short per-query
+# tails — the workload the paged engine's prefix sharing is built for
+_SYS = ("You are a careful assistant. Answer every numbered query in order, "
+        "one line per query, citing the shared context above where relevant. ")
+
+
+def _shared_requests(tok, slots, max_new):
+    return [Request(rid=i, tokens=tok.encode(_SYS + f"query {i}: item {i}"),
                     max_new=max_new) for i in range(slots)]
 
 
@@ -97,6 +112,47 @@ def _admission(model, params, tok, slots, repeats):
     return out
 
 
+def _kv_leg(model, params, tok, max_new, repeats):
+    """Paged vs. contiguous KV on the shared-prefix batch at the top sweep
+    point (slots=8, K=8): tokens/s plus peak KV bytes from the engines' own
+    ``kv_occupancy`` telemetry.  Greedy outputs must be bit-identical across
+    the two layouts, and the paged peak must be strictly below the
+    contiguous commitment — both asserted here, inside the blocking bench
+    job, so a memory-saving regression fails CI outright."""
+    slots, k = max(SLOT_COUNTS), max(K_SWEEP)
+    rows, outs = [], {}
+    for path, paged in (("kv_contig", False), ("kv_paged", True)):
+        eng = _engine(model, params, slots, k, paged=paged)
+        eng.serve(_shared_requests(tok, slots, max_new))   # warm the variants
+        best = 0.0
+        for _ in range(repeats):
+            reqs = _shared_requests(tok, slots, max_new)
+            t0 = time.perf_counter()
+            eng.serve(reqs)
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(r.out_tokens) for r in reqs)
+            best = max(best, n_tok / dt)
+        outs[path] = [r.out_tokens for r in reqs]
+        occ = eng.kv_occupancy()
+        row = dict(slots=slots, k=k, path=path, tokens_per_s=best,
+                   gen_tokens=n_tok, peak_kv_bytes=occ["peak_kv_bytes"])
+        if paged:
+            row.update(page_size=occ["page_size"], peak_pages=occ["peak_pages"],
+                       prefix_shares=occ["prefix_shares"],
+                       cow_forks=occ["cow_forks"])
+        rows.append(row)
+        emit(f"engine_{path}_s{slots}_k{k}", 1e6 / best,
+             f"tok/s={best:.0f};peak_kv_bytes={occ['peak_kv_bytes']}")
+    assert outs["kv_paged"] == outs["kv_contig"], (
+        "paged decode diverged from the contiguous reference on the "
+        "shared-prefix batch — greedy outputs must be bit-identical")
+    contig, paged = rows
+    assert paged["peak_kv_bytes"] < contig["peak_kv_bytes"], (
+        f"paged peak KV {paged['peak_kv_bytes']} is not below the contiguous "
+        f"commitment {contig['peak_kv_bytes']} on the shared-prefix batch")
+    return rows
+
+
 def run(max_new: int | None = None, repeats: int | None = None, seed: int = 3):
     max_new = max_new or (32 if QUICK else 128)
     repeats = repeats or (2 if QUICK else 3)
@@ -129,6 +185,8 @@ def run(max_new: int | None = None, repeats: int | None = None, seed: int = 3):
             emit(f"engine_fused_s{slots}_k{k}", 1e6 / tps,
                  f"tok/s={tps:.0f};speedup={tps / ref_tps:.2f}x;"
                  f"dispatches={calls};steps={steps}")
+
+    rows += _kv_leg(model, params, tok, max_new, repeats)
 
     adm = _admission(model, params, tok, max(SLOT_COUNTS), repeats)
     rows.append(dict(slots=max(SLOT_COUNTS), path="admission", k=0,

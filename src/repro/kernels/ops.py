@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 
-__all__ = ["flash_attention", "decode_attention", "wkv6", "rglru_scan"]
+__all__ = ["flash_attention", "decode_attention", "paged_attention", "wkv6",
+           "rglru_scan"]
 
 
 def _on_tpu() -> bool:
@@ -165,6 +166,41 @@ def _decode_jnp(q, k, v, lengths):
     den = p.sum(axis=-1, keepdims=True)
     out = (num / jnp.maximum(den, 1e-30)).reshape(B, 1, H, D)
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (one new token vs a block-pooled KV cache)
+# ---------------------------------------------------------------------------
+
+def paged_attention(q, k_pool, v_pool, table, lengths, *,
+                    backend: Optional[str] = None, interpret: bool = False):
+    """q: (B, 1, H, D); k_pool/v_pool: (P, page, Hk, D); table: (B, n_pages)
+    int32 physical page indices (entries >= P are unmapped sentinels);
+    lengths: (B,) valid KV lengths.
+
+    The Pallas kernel walks the block table with scalar-prefetch DMA (no
+    contiguous copy ever materializes); the jnp fallback gathers the mapped
+    pages into a (B, n_pages*page, Hk, D) view and reuses the flash-decode
+    reduction — same masked-softmax semantics, so the two agree bitwise on
+    the valid positions.
+    """
+    if _pick(backend) == "pallas":
+        from repro.kernels.paged_attention import paged_attention_pallas
+
+        return paged_attention_pallas(q, k_pool, v_pool, table, lengths,
+                                      interpret=interpret)
+    return _paged_jnp(q, k_pool, v_pool, table, lengths)
+
+
+def _paged_jnp(q, k_pool, v_pool, table, lengths):
+    P, ps = k_pool.shape[0], k_pool.shape[1]
+    B, n_tab = table.shape
+    safe = jnp.clip(table, 0, P - 1)                   # sentinels clip; the
+    k = jnp.take(k_pool, safe, axis=0)                 # length mask hides them
+    v = jnp.take(v_pool, safe, axis=0)                 # (B, n_tab, ps, Hk, D)
+    k = k.reshape(B, n_tab * ps, *k.shape[3:])
+    v = v.reshape(B, n_tab * ps, *v.shape[3:])
+    return _decode_jnp(q, k, v, lengths)
 
 
 # ---------------------------------------------------------------------------

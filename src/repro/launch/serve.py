@@ -52,6 +52,11 @@ def engine_main(argv):
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens generated per fused on-device decode dispatch")
+    ap.add_argument("--contiguous", action="store_true",
+                    help="use the contiguous (max_slots, max_len) KV layout "
+                         "instead of the default paged block pool")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page in the paged layout")
     ap.add_argument("--reduced", action="store_true",
                     help="serve the reduced (smoke) config of a big arch")
     args = ap.parse_args(argv)
@@ -72,8 +77,14 @@ def engine_main(argv):
                          f"decoder with vocab ≥ 259 (use tiny-s/m/l or --reduced dense archs)")
     model = Model(cfg, ShardingConfig(remat="none"))
     params = model.init(jax.random.PRNGKey(0))
+    paged = not args.contiguous
+    if paged and (cfg.enc_dec or any(k != "attn" for k in cfg.layer_kinds())):
+        print(f"{cfg.name}: paged KV needs a decoder-only global-attention "
+              f"stack; falling back to the contiguous layout")
+        paged = False
     engine = ServingEngine(model, params, max_slots=args.slots,
-                           max_len=args.max_len, decode_block=args.decode_block)
+                           max_len=args.max_len, decode_block=args.decode_block,
+                           paged=paged, page_size=args.page_size)
     fmt = BatchPromptFormatter("Answer each question.")
 
     rng = np.random.default_rng(0)
@@ -92,6 +103,11 @@ def engine_main(argv):
     out_toks = sum(len(r.out_tokens) for r in reqs)
     print(f"{cfg.name}: served {done}/{len(reqs)} requests "
           f"({out_toks} tokens) in {dt:.1f}s via {args.slots} slots")
+    occ = engine.kv_occupancy()
+    if occ.get("paged"):
+        print(f"  kv pages: {occ['pages_used']}/{occ['n_pages']} live "
+              f"(peak {occ['peak_pages']}), {occ['prefix_shares']} prefix "
+              f"shares, {occ['cow_forks']} CoW forks")
     for r in reqs[:3]:
         print(f"  req{r.rid}: prompt {len(r.tokens)} toks -> "
               f"{tok.decode(r.out_tokens)[:48]!r}")

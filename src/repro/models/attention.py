@@ -131,6 +131,29 @@ def attention_decode(p, cfg: ModelConfig, x, cache, *, window: Optional[int] = N
         else:
             q = apply_rope(q, pos[:, None], cfg)
             k_new = apply_rope(k_new, pos[:, None], cfg)
+    table = fl.get("kv_table")
+    if table is not None:
+        # Paged KV: cache k/v are a (P, page_size, Hk, hd) block pool shared
+        # by every slot; ``table`` (B, n_cols) maps each slot's logical pages
+        # to physical ones (entries >= P are unmapped — the write drops, the
+        # read masks).  Pages being appended into are private (the engine
+        # CoW-forks shared ones before dispatch), so no two live slots ever
+        # scatter to the same physical location.
+        assert window is None, "paged KV cache supports global attention only"
+        P, ps = cache["k"].shape[0], cache["k"].shape[1]
+        n_cols = table.shape[1]
+        page = pos // ps
+        phys = jnp.where(page < n_cols,
+                         table[jnp.arange(B), jnp.minimum(page, n_cols - 1)], P)
+        k_buf = cache["k"].at[phys, pos % ps].set(
+            k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+        v_buf = cache["v"].at[phys, pos % ps].set(
+            v_new[:, 0].astype(cache["v"].dtype), mode="drop")
+        out = ops.paged_attention(q, k_buf, v_buf, table, pos + 1,
+                                  backend=fl.get("backend"))
+        out = apply_dense(p["o"], out.reshape(B, 1, H * hd))
+        return out, {"k": k_buf, "v": v_buf, "len": pos + 1}
+
     S_buf = cache["k"].shape[1]
     write_at = pos % S_buf if window is not None else pos
     bidx = jnp.arange(B)

@@ -473,6 +473,38 @@ class Model:
         return jax.tree.map(lambda s: s.sds(), self.cache_specs(batch, max_len, enc_len),
                             is_leaf=lambda x: isinstance(x, ParamSpec))
 
+    def paged_cache_specs(self, n_pages: int, page_size: int, batch: int) -> dict:
+        """Cache specs for the paged serving layout: each attention layer's
+        K/V become one ``(n_pages, page_size, Hk, hd)`` block pool shared by
+        all slots (the per-slot block tables live host-side in the engine's
+        allocator); ``len`` stays per-slot.  Only decoder-only global-attention
+        stacks qualify — recurrent state and ring buffers have no paged form.
+        """
+        cfg = self.cfg
+        assert not cfg.enc_dec and all(k == "attn" for k in cfg.layer_kinds()), \
+            "paged KV cache requires a decoder-only global-attention stack"
+        dt = jnp.bfloat16 if self.dtype == jnp.bfloat16 else jnp.float32
+
+        def block():
+            kv = lambda: ParamSpec(
+                (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt,
+                ("kv_pages", "kv_page", "kv_heads", "head_dim"))
+            return {"k": kv(), "v": kv(),
+                    "len": ParamSpec((batch,), jnp.int32, ("batch",))}
+
+        spec: dict = {}
+        if self.n_groups > 0:
+            spec["blocks"] = {f"b{i}": _stack_spec(block(), self.n_groups)
+                              for i in range(len(self.pattern))}
+        for j in range(len(self.rem_kinds)):
+            spec[f"rem{j}"] = block()
+        return spec
+
+    def init_paged_cache(self, n_pages: int, page_size: int, batch: int) -> dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.paged_cache_specs(n_pages, page_size, batch),
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+
     # ---------------- prefill ----------------
     def prefill(self, params, inputs, max_len: int, enc_inputs=None, lengths=None):
         """Run the full prompt, build caches.  Returns (last_logits, cache).
@@ -524,11 +556,18 @@ class Model:
         return logits, cache
 
     # ---------------- decode ----------------
-    def decode_step(self, params, tokens, cache):
-        """tokens: (B, 1) int32 (or (B, 1, d) embeds).  Returns (logits, cache)."""
+    def decode_step(self, params, tokens, cache, table=None):
+        """tokens: (B, 1) int32 (or (B, 1, d) embeds).  Returns (logits, cache).
+
+        ``table``: optional (B, n_cols) int32 block table switching the
+        attention layers onto a paged KV cache (see ``paged_cache_specs``);
+        one table serves every layer — all layers page identically.
+        """
         cfg = self.cfg
         x = self._embed_in(params, tokens)
         flags = {**self._flags(), "moe_exact": True}   # no capacity drops mid-decode
+        if table is not None:
+            flags["kv_table"] = table
         new_cache: dict = {}
         if self.n_groups > 0:
             def group_body(h, xs):

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.transformer import Model
+from repro.serving.kvpool import PagedCacheManager
 
 
 @dataclass
@@ -63,19 +64,42 @@ class ServingEngine:
     sampling/masking on device).  Greedy outputs are bit-identical for every
     K (parity-tested) — K only trades host round-trips against up to K−1
     wasted lockstep steps on the final block of a stream.
+
+    ``paged=True`` swaps the contiguous ``(max_slots, max_len, ...)`` KV
+    pytree for a paged layout: per-layer block *pools* of ``page_size``-token
+    pages plus host-side per-slot block tables (:class:`PagedCacheManager`).
+    Batched admission prefills the shared batch-prompt prefix once and maps
+    every sibling slot's table onto the same physical pages (refcounted);
+    a slot gets a private copy only when decode first appends into a shared
+    page (copy-on-write, performed as one fused page-copy before the decode
+    dispatch).  Greedy outputs are bit-identical to the contiguous path:
+    causal attention makes the shared prefix K/V independent of what follows
+    it, and reads beyond a slot's length are masked to exact zeros in both
+    layouts.  ``share_prefix=False`` keeps paging but gives every slot
+    private pages (the CoW machinery then never fires).
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8, max_len: int = 1024,
-                 decode_block: int = 8,
+                 decode_block: int = 8, paged: bool = False, page_size: int = 16,
+                 share_prefix: bool = True,
                  eos_id: int = ByteTokenizer.eos, pad_id: int = ByteTokenizer.pad):
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.decode_block = max(1, int(decode_block))
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.share_prefix = bool(share_prefix)
         self.eos_id = eos_id
         self.pad_id = pad_id
-        self.cache = model.init_cache(max_slots, max_len)
+        if self.paged:
+            self.kv = PagedCacheManager(max_slots, max_len, self.page_size)
+            self.cache = model.init_paged_cache(self.kv.alloc.n_pages,
+                                                self.page_size, max_slots)
+        else:
+            self.kv = None
+            self.cache = model.init_cache(max_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.tok = ByteTokenizer()          # engine-owned: one instance, all paths
         # telemetry: host dispatches vs device steps (benchmarks/engine_decode.py)
@@ -182,6 +206,92 @@ class ServingEngine:
 
         self._decode_k = _decode_k
 
+        @partial(jax.jit, donate_argnums=(0,))
+        def _insert_pages(cache, rows, slots, dst_pages):
+            """Scatter freshly prefilled rows into the page pools.
+
+            ``rows`` is a prefill cache whose K/V leaves are ``(B, Lp, ...)``
+            with ``Lp`` a page multiple; each row splits into ``Lp/page_size``
+            logical pages and lands at the physical page ``dst_pages[b, j]``
+            (sentinel ≥ n_pages drops the write — padding rows of the
+            admission bucket, and shared prefix pages the owner row already
+            wrote).  ``len`` leaves scatter per slot exactly as in the
+            contiguous ``_insert_many``.
+            """
+            ps = self.page_size
+            flat = dst_pages.reshape(-1)
+
+            def ins_axis(axis):
+                def ins(dst, src):
+                    src = src.astype(dst.dtype)
+                    if dst.ndim - axis >= 4:        # K/V pool leaf
+                        lead = src.shape[:axis]
+                        b, lp = src.shape[axis], src.shape[axis + 1]
+                        src_r = src.reshape(*lead, b * (lp // ps), ps,
+                                            *src.shape[axis + 2:])
+                        if axis == 0:
+                            return dst.at[flat].set(src_r, mode="drop")
+                        return dst.at[:, flat].set(src_r, mode="drop")
+                    if axis == 0:                   # per-slot length leaf
+                        return dst.at[slots].set(src, mode="drop")
+                    return dst.at[:, slots].set(src, mode="drop")
+                return ins
+
+            out = {}
+            for key, sub in cache.items():
+                axis = 1 if key == "blocks" else 0
+                out[key] = jax.tree.map(ins_axis(axis), sub, rows[key])
+            return out
+
+        self._insert_pages = _insert_pages
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def _fork_pages(cache, src_pages, dst_pages):
+            """Copy-on-write device copy: physical page ``src[i]`` → ``dst[i]``
+            in every layer's pools.  Sentinel entries (the fork list is padded
+            to a size bucket) clip their read to the last real page and drop
+            their write."""
+            def cp_axis(axis):
+                def cp(leaf):
+                    if leaf.ndim - axis < 4:
+                        return leaf                 # length leaf: no pages
+                    safe = jnp.minimum(src_pages, leaf.shape[axis] - 1)
+                    if axis == 0:
+                        return leaf.at[dst_pages].set(leaf[safe], mode="drop")
+                    return leaf.at[:, dst_pages].set(leaf[:, safe], mode="drop")
+                return cp
+
+            return {key: jax.tree.map(cp_axis(1 if key == "blocks" else 0), sub)
+                    for key, sub in cache.items()}
+
+        self._fork_pages = _fork_pages
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def _decode_k_paged(params, cache, table, last_tok, active, n_out, limit):
+            """Paged twin of ``_decode_k``: same fused K-step scan, same
+            donated in-place cache, but attention walks ``table`` (already
+            sliced host-side to the bucketed horizon's column count, which
+            bounds both per-step attention cost and jit variants — the paged
+            analogue of the contiguous horizon slice).  No seq-axis shrink:
+            the pool is shared, the table IS the horizon.
+            """
+            def step(carry, _):
+                sc, last, act, n = carry
+                logits, sc = model.decode_step(params, last[:, None], sc,
+                                               table=table)
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                n = n + act.astype(jnp.int32)
+                done = act & ((nxt == self.eos_id) | (n >= limit))
+                last = jnp.where(act, nxt, last)
+                return (sc, last, act & ~done, n), (nxt, act)
+
+            (cache, _last, act, _n), (toks, valid) = jax.lax.scan(
+                step, (cache, last_tok, active, n_out), None,
+                length=self.decode_block)
+            return cache, act, toks, valid
+
+        self._decode_k_paged = _decode_k_paged
+
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
         """Pad prompt lengths to power-of-two buckets to bound jit variants."""
@@ -197,20 +307,81 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_slots)
 
+    def _sibling_share_pages(self, owner: list[int], sib: list[int]) -> int:
+        """How many of the owner's prompt pages a sibling admitted in the
+        same batch may point at.  Page j is shareable iff the two prompts
+        agree on every position of it the SIBLING will ever read unmasked —
+        i.e. the common token prefix reaches ``min(len(sib), page_end)``.
+        So a sibling that is a prefix of the owner (identical prompts
+        included) shares even the final partial page (positions past its
+        length are masked, and its first decode append CoW-forks the page);
+        past a genuine divergence the floor applies."""
+        common = 0
+        for a, b in zip(owner, sib):
+            if a != b:
+                break
+            common += 1
+        if common == len(sib):
+            return -(-common // self.page_size)
+        return common // self.page_size
+
     def _admit_batch(self, reqs: list[Request], slots: list[int]):
         """Admit ``reqs`` into ``slots`` with ONE prefill + ONE insert: all
         prompts pad to a shared length bucket, the batch count pads to a
-        power-of-two bucket (padding rows scatter out of bounds and drop)."""
+        power-of-two bucket (padding rows scatter out of bounds and drop).
+
+        Paged mode pads prompts to a page multiple and builds the sharing
+        plan first: the owner (first request) allocates and writes all its
+        prompt pages; every sibling points its table at the owner's common-
+        prefix pages (refcount bump, write dropped via sentinel) and
+        allocates only the pages past the shared prefix.  The shared prefix
+        K/V is therefore prefilled B times but *stored* once — causal
+        attention makes each row's prefix K/V bit-identical, so which row's
+        bytes land is immaterial.
+        """
         B = self._bucket_count(len(reqs))
         L = self._bucket_len(max(len(r.tokens) for r in reqs))
-        seqs = [r.tokens for r in reqs] + [[self.pad_id]] * (B - len(reqs))
-        tokens, lengths = self.tok.pad_batch(seqs, L)
-        slot_arr = np.full(B, self.max_slots, dtype=np.int32)
-        slot_arr[: len(reqs)] = slots
-        logits, rows = self._prefill(self.params, jnp.asarray(tokens),
-                                     jnp.asarray(lengths), self.max_len)
-        self.n_prefill_calls += 1
-        self.cache = self._insert_many(self.cache, rows, jnp.asarray(slot_arr))
+        if self.paged:
+            ps = self.page_size
+            Lp = -(-L // ps) * ps           # page-multiple prompt buffer
+            seqs = [r.tokens for r in reqs] + [[self.pad_id]] * (B - len(reqs))
+            tokens, lengths = self.tok.pad_batch(seqs, Lp)
+            dst = np.full((B, Lp // ps), self.kv.alloc.n_pages, np.int32)
+            owner_pages: list[int] = []
+            for idx, (req, slot) in enumerate(zip(reqs, slots)):
+                n_need = -(-len(req.tokens) // ps)
+                if idx == 0:
+                    pages = self.kv.alloc.alloc_n(n_need)
+                    owner_pages = pages
+                    dst[idx, :n_need] = pages
+                else:
+                    n_sh = 0
+                    if self.share_prefix:
+                        n_sh = min(self._sibling_share_pages(reqs[0].tokens,
+                                                             req.tokens),
+                                   n_need, len(owner_pages))
+                    pages = [self.kv.alloc.share(p) for p in owner_pages[:n_sh]]
+                    priv = self.kv.alloc.alloc_n(n_need - n_sh)
+                    dst[idx, n_sh:n_need] = priv
+                    pages = pages + priv
+                self.kv.map_slot(slot, pages)
+            logits, rows = self._prefill(self.params, jnp.asarray(tokens),
+                                         jnp.asarray(lengths), Lp)
+            self.n_prefill_calls += 1
+            slot_arr = np.full(B, self.max_slots, dtype=np.int32)
+            slot_arr[: len(reqs)] = slots
+            self.cache = self._insert_pages(self.cache, rows,
+                                            jnp.asarray(slot_arr),
+                                            jnp.asarray(dst))
+        else:
+            seqs = [r.tokens for r in reqs] + [[self.pad_id]] * (B - len(reqs))
+            tokens, lengths = self.tok.pad_batch(seqs, L)
+            slot_arr = np.full(B, self.max_slots, dtype=np.int32)
+            slot_arr[: len(reqs)] = slots
+            logits, rows = self._prefill(self.params, jnp.asarray(tokens),
+                                         jnp.asarray(lengths), self.max_len)
+            self.n_prefill_calls += 1
+            self.cache = self._insert_many(self.cache, rows, jnp.asarray(slot_arr))
         first = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         now = time.time()
         for req, slot, f in zip(reqs, slots, first):
@@ -238,6 +409,10 @@ class ServingEngine:
             req.done = True
             req.finished_at = time.time()
         self.slot_req[slot] = None
+        if self.paged:
+            # drop the slot's table references; only pages no sibling still
+            # shares actually return to the free list
+            self.kv.release_slot(slot)
 
     def _active_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -258,6 +433,62 @@ class ServingEngine:
             limit[i] = min(req.max_new, self.max_len - 1 - len(req.tokens))
         return last, act, n_out, limit
 
+    def _prepare_paged(self, active: list[int], horizon: int):
+        """Page maintenance before one paged decode dispatch: grow every
+        active slot's table to cover its next ``decode_block`` writes, CoW-
+        fork any still-shared page in that write range (one fused device
+        copy for the whole tick), and upload the table sliced to the
+        horizon's column count — the slice is what bounds per-step attention
+        cost, playing the role of the contiguous path's seq-axis shrink."""
+        ps = self.page_size
+        cap = self.kv.pages_per_slot * ps
+        src: list[int] = []
+        dst: list[int] = []
+        for i in active:
+            req = self.slot_req[i]
+            ln = len(req.tokens) + len(req.out_tokens)
+            end = min(ln + self.decode_block, cap)
+            self.kv.extend_slot(i, -(-end // ps))
+            s, d = self.kv.fork_for_write(i, ln, end)
+            src += s
+            dst += d
+        if src:
+            # pad the fork list to a power-of-two bucket (bounds jit
+            # variants); sentinel pads clip their read and drop their write
+            nb = 1
+            while nb < len(src):
+                nb *= 2
+            sentinel = self.kv.alloc.n_pages
+            sa = np.full(nb, sentinel, np.int32)
+            da = np.full(nb, sentinel, np.int32)
+            sa[: len(src)] = src
+            da[: len(dst)] = dst
+            self.cache = self._fork_pages(self.cache, jnp.asarray(sa),
+                                          jnp.asarray(da))
+        n_cols = min(self.kv.pages_per_slot, -(-horizon // ps))
+        return jnp.asarray(self.kv.table[:, :n_cols])
+
+    def kv_occupancy(self) -> dict:
+        """KV memory telemetry for the serving plane (WindowReport / bench).
+
+        Contiguous engines report the committed buffer size (every slot owns
+        a full ``max_len`` row whether it uses it or not); paged engines
+        report live and peak *mapped* bytes — distinct physical pages times
+        per-page bytes summed across layers — which is what prefix sharing
+        and page-granular growth actually save.
+        """
+        kv_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache)
+                       if leaf.ndim >= 3)
+        if not self.paged:
+            return {"paged": False, "kv_bytes": kv_bytes,
+                    "peak_kv_bytes": kv_bytes}
+        occ = self.kv.occupancy()
+        page_bytes = kv_bytes // max(self.kv.alloc.n_pages, 1)
+        occ.update(paged=True, page_bytes=page_bytes,
+                   kv_bytes=occ["pages_used"] * page_bytes,
+                   peak_kv_bytes=occ["peak_pages"] * page_bytes)
+        return occ
+
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
         """Run all requests to completion with continuous batching.
@@ -276,9 +507,15 @@ class ServingEngine:
             live = max(len(self.slot_req[i].tokens) + len(self.slot_req[i].out_tokens)
                        for i in active)
             horizon = min(self.max_len, self._bucket_len(live + self.decode_block))
-            self.cache, act_f, toks, valid = self._decode_k(
-                horizon, self.params, self.cache, jnp.asarray(last),
-                jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
+            if self.paged:
+                table = self._prepare_paged(active, horizon)
+                self.cache, act_f, toks, valid = self._decode_k_paged(
+                    self.params, self.cache, table, jnp.asarray(last),
+                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
+            else:
+                self.cache, act_f, toks, valid = self._decode_k(
+                    horizon, self.params, self.cache, jnp.asarray(last),
+                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
             self.n_decode_calls += 1
             self.n_decode_steps += self.decode_block
             toks = np.asarray(toks)
@@ -296,7 +533,12 @@ class ServingEngine:
         host round-trip (dispatch + argmax sync) per generated token.  Kept
         for the fused-path parity tests and as the baseline leg of
         ``benchmarks/engine_decode.py``; outputs are bit-identical to
-        :meth:`serve` under greedy sampling."""
+        :meth:`serve` under greedy sampling.  Contiguous-layout only — it is
+        the *reference*, and paging it would leave no fixed point to test
+        against."""
+        if self.paged:
+            raise RuntimeError("serve_stepwise is the contiguous parity "
+                               "reference; use serve() on a paged engine")
         queue = list(requests)
         while queue or self._active_slots():
             for slot in range(self.max_slots):

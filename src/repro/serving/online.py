@@ -241,6 +241,10 @@ class WindowReport:
     #   later per-member autoscaler grows on
     packed_by_member: tuple = ()      # ((member_idx, n_queries), ...) Δ-heap
     #   packing moves keyed by the over-cap member that forced them
+    kv_pages: tuple = ()              # ((member_idx, used, shared, forks), ...)
+    #   paged-KV occupancy per member with a real engine behind it — the
+    #   memory-headroom signal the autoscaler and the bench gate read; empty
+    #   entries (simulated members) are omitted
 
 
 @dataclass
@@ -393,6 +397,15 @@ class OnlineRobatchServer:
         NEXT round plans against), and append the report."""
         rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))
                                    for m in self.pool)
+        kv = []
+        for k, m in enumerate(self.pool):
+            fn = getattr(m, "kv_occupancy", None)
+            occ = fn() if fn is not None else None
+            if occ and occ.get("paged"):
+                kv.append((k, int(occ.get("pages_used", 0)),
+                           int(occ.get("pages_shared", 0)),
+                           int(occ.get("cow_forks", 0))))
+        rep.kv_pages = tuple(kv)
         if self.autoscaler is not None:
             self.autoscaler.observe(rep, len(self.pending), rep.t)
             rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))

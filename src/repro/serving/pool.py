@@ -92,6 +92,11 @@ class ServedPoolMember:
                  rng=None) -> np.ndarray:
         return evaluate_chunked(self, wl, idx, batch_size)
 
+    def kv_occupancy(self) -> dict:
+        """KV memory telemetry of the backing engine (see
+        :meth:`repro.serving.engine.ServingEngine.kv_occupancy`)."""
+        return self.engine.kv_occupancy()
+
 
 class ReplicaSet:
     """N interchangeable replicas behind ONE pool-member facade.
@@ -316,6 +321,22 @@ class ReplicaSet:
     def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
                  rng=None) -> np.ndarray:
         return evaluate_chunked(self, wl, idx, batch_size)
+
+    def kv_occupancy(self) -> dict:
+        """Aggregate KV telemetry over replicas that expose it: sums bytes
+        and page counters so the set reads as one member (simulated replicas
+        report nothing and contribute zeros)."""
+        total: dict = {}
+        for rep in self.replicas:
+            fn = getattr(rep, "kv_occupancy", None)
+            if fn is None:
+                continue
+            for k, v in fn().items():
+                if isinstance(v, bool):
+                    total[k] = total.get(k, False) or v
+                elif isinstance(v, (int, float)):
+                    total[k] = total.get(k, 0) + v
+        return total
 
 
 def replicate_simulated(member, n: int, **kwargs) -> ReplicaSet:

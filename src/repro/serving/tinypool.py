@@ -70,7 +70,8 @@ def _make_batches(rng, fmt, batch_size, seq_len, n_steps):
 def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
                   names=("tiny-s", "tiny-m", "tiny-l"), *, batch_size: int = 8,
                   seq_len: int = 192, max_slots: int = 4, max_len: int = 512,
-                  replicas: int = 1, decode_block: int = 8,
+                  replicas: int = 1, decode_block: int = 8, paged: bool = True,
+                  page_size: int = 16,
                   verbose: bool = True) -> dict[str, list[ServingEngine]]:
     """Train the tiny architectures on the addition task; returns
     ``{name: [engine, ...]}`` with ``replicas`` engines per architecture.
@@ -116,7 +117,8 @@ def train_engines(rng, fmt: BatchPromptFormatter, steps: int,
                   f"{np.mean(losses[-20:]):.2f} "
                   f"({time.time() - t0:.0f}s, {len(losses)} steps)", flush=True)
         engines[name] = [ServingEngine(model, params, max_slots=max_slots,
-                                       max_len=max_len, decode_block=decode_block)
+                                       max_len=max_len, decode_block=decode_block,
+                                       paged=paged, page_size=page_size)
                         for _ in range(replicas)]
     return engines
 
@@ -168,7 +170,10 @@ def replica_factory(prototype: ServedPoolMember):
         engine = ServingEngine(proto_engine.model, proto_engine.params,
                                max_slots=proto_engine.max_slots,
                                max_len=proto_engine.max_len,
-                               decode_block=proto_engine.decode_block)
+                               decode_block=proto_engine.decode_block,
+                               paged=proto_engine.paged,
+                               page_size=proto_engine.page_size,
+                               share_prefix=proto_engine.share_prefix)
         return ServedPoolMember(prototype.name, engine, prototype.formatter,
                                 prototype.task, c_in=prototype.c_in,
                                 c_out=prototype.c_out,

@@ -1,0 +1,53 @@
+"""Hypothesis import shim: real hypothesis when installed, inert stand-ins
+otherwise — so ONLY the property-based tests skip when it is missing.
+
+The seed used ``pytest.importorskip("hypothesis")`` at module level in four
+test modules, silently skipping every test in them (including plain example
+tests — ``test_moe_dispatch.py`` contained no property tests at all).  Test
+modules now do ``from hypcompat import given, settings, st`` instead: with
+hypothesis absent, ``@given`` marks just that test skipped, strategy
+construction is a no-op, and everything else in the module still runs.
+
+CI installs hypothesis (``requirements-ci.txt``) and exports
+``REQUIRE_HYPOTHESIS=1``, which turns a broken install into a hard import
+error here — the formerly-skipped modules can never silently skip again
+(the workflow additionally greps the pytest summary for skips).
+"""
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert strategy: every combinator returns another inert strategy
+        (decoration-time expressions like ``st.lists(st.integers(), ...)``
+        must evaluate; the decorated test is skipped before drawing)."""
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    class _St:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _St()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(property test; examples still run)")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None

@@ -4,12 +4,12 @@ fallbacks against the same oracles, plus hypothesis property sweeps."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st   # property tests skip w/o hypothesis
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv6_scan import wkv6_pallas
 
@@ -96,6 +96,109 @@ def test_decode_attention_property(B, S, gq):
     lengths = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
     want = ref.decode_attention_ref(q, k, v, lengths)
     got = decode_attention_pallas(q, k, v, lengths, kv_block=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+def _paginate(k, v, page_size, lengths, n_extra=3):
+    """Scatter contiguous ``(B, S, Hk, D)`` K/V into a shuffled page pool.
+
+    Returns ``(k_pool, v_pool, table)`` where ``table[b, j]`` is the physical
+    page holding logical positions ``[j*ps, (j+1)*ps)`` of row ``b``.  Table
+    entries for pages entirely past ``lengths[b]`` are the sentinel ``P``
+    (matching the engine's unmapped-column convention), the pool carries
+    ``n_extra`` unreferenced pages, and every out-of-range element is filled
+    with large garbage so any leak through the length mask is loud.
+    """
+    B, S, Hk, D = k.shape
+    n_tab = -(-S // page_size)
+    kp = np.full((B, n_tab * page_size, Hk, D), 1e3, np.float32)
+    vp = np.full_like(kp, 1e3)
+    kp[:, :S] = np.asarray(k, np.float32)
+    vp[:, :S] = np.asarray(v, np.float32)
+    P = B * n_tab + n_extra
+    phys = RNG.permutation(P)[: B * n_tab].reshape(B, n_tab)
+    k_pool = np.full((P, page_size, Hk, D), 1e3, np.float32)
+    v_pool = np.full_like(k_pool, 1e3)
+    k_pool[phys.reshape(-1)] = kp.reshape(B * n_tab, page_size, Hk, D)
+    v_pool[phys.reshape(-1)] = vp.reshape(B * n_tab, page_size, Hk, D)
+    table = np.where(np.arange(n_tab)[None] * page_size < np.asarray(lengths)[:, None],
+                     phys, P)
+    return (jnp.asarray(k_pool, k.dtype), jnp.asarray(v_pool, v.dtype),
+            jnp.asarray(table, jnp.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("page_size", [16, 64])
+@pytest.mark.parametrize("B,S,H,Hk,D", [
+    (3, 40, 8, 2, 16),
+    (2, 130, 4, 4, 32),
+    (1, 64, 8, 1, 64),
+])
+def test_paged_attention_vs_oracle(dtype, page_size, B, S, H, Hk, D):
+    q = arr(B, 1, H, D, dtype=dtype)
+    k, v = arr(B, S, Hk, D, dtype=dtype), arr(B, S, Hk, D, dtype=dtype)
+    # ragged lengths, always including one full-length row
+    lengths = np.append(RNG.integers(1, S + 1, B - 1), S).astype(np.int32)
+    k_pool, v_pool, table = _paginate(k, v, page_size, lengths)
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(lengths))
+    got = paged_attention_pallas(q, k_pool, v_pool, table, jnp.asarray(lengths),
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_attention_shared_and_forked_pages():
+    """Two slots alias the same physical prefix pages; slot 1's tail page is a
+    CoW fork holding divergent tokens.  Each row must match the dense oracle
+    on its own logical sequence — sharing is invisible to attention."""
+    ps, H, Hk, D = 16, 4, 2, 16
+    S = 3 * ps
+    pre_k, pre_v = arr(1, 2 * ps, Hk, D), arr(1, 2 * ps, Hk, D)
+    tails = [(arr(1, ps, Hk, D), arr(1, ps, Hk, D)) for _ in range(2)]
+    k = jnp.concatenate([jnp.concatenate([pre_k, tk], 1) for tk, _ in tails], 0)
+    v = jnp.concatenate([jnp.concatenate([pre_v, tv], 1) for _, tv in tails], 0)
+    # pool: pages 0-1 = shared prefix, 2 = slot0 tail, 3 = slot1 fork, 4 = junk
+    k_pool = jnp.concatenate([pre_k.reshape(2, ps, Hk, D), tails[0][0], tails[1][0],
+                              jnp.full((1, ps, Hk, D), 1e3)], 0)
+    v_pool = jnp.concatenate([pre_v.reshape(2, ps, Hk, D), tails[0][1], tails[1][1],
+                              jnp.full((1, ps, Hk, D), 1e3)], 0)
+    table = jnp.asarray([[0, 1, 2], [0, 1, 3]], jnp.int32)
+    lengths = jnp.asarray([S, S - 5], jnp.int32)   # forked row mid-page
+    q = arr(2, 1, H, D)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    got = paged_attention_pallas(q, k_pool, v_pool, table, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_ops_paged_matches_oracle_jnp_fallback():
+    """The ops-layer gather fallback agrees with the dense oracle (and hence
+    with the kernel) on the same shuffled, sentinel-bearing table."""
+    B, S, H, Hk, D, ps = 3, 70, 4, 2, 16, 16
+    q, k, v = arr(B, 1, H, D), arr(B, S, Hk, D), arr(B, S, Hk, D)
+    lengths = np.asarray([1, 37, 70], np.int32)
+    k_pool, v_pool, table = _paginate(k, v, ps, lengths)
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(lengths))
+    got = ops.paged_attention(q, k_pool, v_pool, table, jnp.asarray(lengths),
+                              backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 70), st.sampled_from([16, 32]), st.integers(0, 2))
+def test_paged_attention_property(B, S, page_size, gq):
+    """Random shapes / GQA ratios / page sizes: paged gather == dense oracle."""
+    Hk, D = 2, 16
+    H = Hk * 2 ** gq
+    q, k, v = arr(B, 1, H, D), arr(B, S, Hk, D), arr(B, S, Hk, D)
+    lengths = RNG.integers(1, S + 1, B).astype(np.int32)
+    k_pool, v_pool, table = _paginate(k, v, page_size, lengths)
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(lengths))
+    got = paged_attention_pallas(q, k_pool, v_pool, table, jnp.asarray(lengths),
+                                 interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
 
 

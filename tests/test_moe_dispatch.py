@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
 
 from repro.config import ModelConfig, MoEConfig, ShardingConfig, get_arch
 from repro.models import moe as moe_mod

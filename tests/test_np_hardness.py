@@ -9,8 +9,7 @@ import itertools
 
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st   # property tests skip w/o hypothesis
 
 from repro.core.pareto import CandidateSpace
 from repro.core.problem import State

@@ -2,8 +2,7 @@
 (Thm. 5.3), greedy vs brute-force, budget monotonicity (hypothesis-driven)."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st   # property tests skip w/o hypothesis
 
 from repro.core.pareto import CandidateSpace, pareto_frontier
 from repro.core.problem import State

@@ -104,7 +104,12 @@ ABS_FLOOR = {
 EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          "replicas", "window_s", "phase", "max_replicas", "end_replicas",
          "slots", "k", "path", "steps", "dispatches", "prefills",
-         "gen_tokens", "n_requests"}
+         "gen_tokens", "n_requests",
+         # paged-KV leg: memory footprint and allocator counters are pure
+         # functions of the seeded greedy run — any drift is a layout or
+         # sharing behaviour change, not runner noise
+         "peak_kv_bytes", "page_size", "peak_pages", "prefix_shares",
+         "cow_forks"}
 
 UPDATE_HINT = ("if the change is intentional, refresh the baseline: "
                "BENCH_QUICK=1 python benchmarks/online_throughput.py "
