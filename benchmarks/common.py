@@ -18,9 +18,10 @@ from repro.core import Robatch
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 # schema of the shared BENCH_online.json gate file — bumped together by
-# every writer (online_throughput.py AND engine_decode.py merge into the
-# same file; a per-script constant would make the schema order-dependent)
-BENCH_SCHEMA = 4          # 4: paged-KV leg in engine_decode (peak_kv_bytes rows)
+# every writer (online_throughput.py, engine_decode.py AND http_serving.py
+# merge into the same file; a per-script constant would make the schema
+# order-dependent)
+BENCH_SCHEMA = 5          # 5: http_serving leg (HTTP front-end qps/TTFC rows)
 
 
 @functools.lru_cache(maxsize=32)

@@ -1,0 +1,201 @@
+"""HTTP front-end benchmark: concurrent-client throughput and latency of the
+OpenAI-compatible wire surface (``repro.http``) over the live ingress bridge.
+
+What it measures (real wall time, loopback HTTP):
+
+* **unary** — ``POST /v1/chat/completions`` round-trips: requests/s sustained
+  by N concurrent clients, p50/p99 full-response latency;
+* **stream** — the same with ``"stream": true``: time-to-first-chunk (TTFC)
+  vs. full SSE latency, with the framing contract asserted in-process — every
+  stream must deliver the role frame, **>= 2 content chunks** (the
+  decode_block-cadence guarantee), a ``finish_reason`` frame and the
+  ``[DONE]`` sentinel.
+
+The pool is the calibrated simulator (deterministic content, so chunk and
+completion counts are exact across runners); every request addresses a
+distinct ``query_idx`` so the response cache never blurs the latency
+distribution.  The budget is set effectively unlimited — this leg gates the
+HTTP plane (framing, demux, concurrency, parity counters), not the budget
+scheduler, which ``online_throughput.py`` already gates.
+
+Results join the blocking bench gate: the ``http_serving`` section (and an
+``http`` config block) is merged into ``results/bench/BENCH_online.json``
+for ``tools/bench_check.py`` — counter metrics exactly (completed, chunk
+totals), wall-clock rates and latencies with wide runner-noise tolerances.
+
+    PYTHONPATH=src python benchmarks/http_serving.py     # BENCH_QUICK=1 to shrink
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import BENCH_SCHEMA, QUICK, RESULTS_DIR, emit, save, setup
+from repro.http import HttpFrontend
+from repro.serving.online import OnlineConfig, OnlineRobatchServer
+
+CLIENTS = (1, 4) if QUICK else (1, 4, 8)
+WINDOW_S = 0.05
+
+
+def _post(base: str, payload: dict, timeout: float = 60.0):
+    req = urllib.request.Request(
+        base + "/v1/chat/completions", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    return urllib.request.urlopen(req, timeout=timeout)
+
+
+def _unary_once(base: str, q: int):
+    t0 = time.perf_counter()
+    with _post(base, {"messages": [{"role": "user", "content": f"#{q}"}],
+                      "query_idx": q}) as r:
+        body = json.loads(r.read())
+    latency = time.perf_counter() - t0
+    content = body["choices"][0]["message"]["content"]
+    ok = bool(content) and body["robatch"]["query_idx"] is not None
+    return ok, None, latency, 0
+
+
+def _stream_once(base: str, q: int):
+    t0 = time.perf_counter()
+    ttfc, chunks, finished, done = None, 0, False, False
+    with _post(base, {"messages": [{"role": "user", "content": f"#{q}"}],
+                      "query_idx": q, "stream": True}) as r:
+        for line in r:
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            payload = line[len(b"data: "):]
+            if payload == b"[DONE]":
+                done = True
+                break
+            frame = json.loads(payload)
+            choice = frame["choices"][0]
+            if "content" in choice.get("delta", {}):
+                if ttfc is None:
+                    ttfc = time.perf_counter() - t0
+                chunks += 1
+            if choice.get("finish_reason") == "stop":
+                finished = True
+    latency = time.perf_counter() - t0
+    return (chunks >= 2 and finished and done), ttfc, latency, chunks
+
+
+def _leg(base: str, mode: str, n_clients: int, per_client: int, q0: int):
+    """N clients, each issuing ``per_client`` back-to-back requests against
+    its own slice of distinct query indices; returns per-request records."""
+    once = _stream_once if mode == "stream" else _unary_once
+    records: list[tuple] = []
+    lock = threading.Lock()
+
+    def client(c: int):
+        for i in range(per_client):
+            rec = once(base, q0 + c * per_client + i)
+            with lock:
+                records.append(rec)
+
+    threads = [threading.Thread(target=client, args=(c,), daemon=True)
+               for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return records, time.perf_counter() - t0
+
+
+def _pct(xs: list, p: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(p * len(xs)))] if xs else 0.0
+
+
+def run(per_client: int | None = None, seed: int = 0):
+    per_client = per_client or (4 if QUICK else 8)
+    wl, pool, rb = setup("agnews", router="knn", coreset_size=64, seed=seed)
+    # budget effectively unlimited: this leg gates the HTTP plane, not the
+    # budget scheduler — completion counts must be exact across runners
+    cfg = OnlineConfig(budget_per_s=1e6, window_s=WINDOW_S, realtime=True)
+    srv = OnlineRobatchServer(rb, pool, wl, cfg)
+    rows = []
+    with HttpFrontend(srv, port=0) as fe:
+        base = f"http://127.0.0.1:{fe.port}"
+        q0 = 0
+        for mode in ("unary", "stream"):
+            for n_clients in CLIENTS:
+                records, wall = _leg(base, mode, n_clients, per_client, q0)
+                n = n_clients * per_client
+                q0 += n
+                oks = [r[0] for r in records]
+                ttfcs = [r[1] for r in records if r[1] is not None]
+                lats = [r[2] for r in records]
+                chunks = sum(r[3] for r in records)
+                row = dict(scenario="http", mode=mode, clients=n_clients,
+                           n_requests=n, completed=int(sum(oks)),
+                           qps=n / wall, latency_p50_s=_pct(lats, 0.50),
+                           latency_p99_s=_pct(lats, 0.99),
+                           total_chunks=chunks, wall_s=wall)
+                derived = (f"qps={row['qps']:.1f};"
+                           f"p50={row['latency_p50_s'] * 1e3:.0f}ms;"
+                           f"p99={row['latency_p99_s'] * 1e3:.0f}ms")
+                if mode == "stream":
+                    row["ttfc_p50_s"] = _pct(ttfcs, 0.50)
+                    derived += f";ttfc_p50={row['ttfc_p50_s'] * 1e3:.0f}ms"
+                rows.append(row)
+                emit(f"http_{mode}_c{n_clients}", wall / n * 1e6, derived)
+                assert row["completed"] == n, (
+                    f"{mode} x{n_clients}: {row['completed']}/{n} requests "
+                    f"completed the wire contract")
+                if mode == "stream":
+                    # deterministic: simulated members stream nothing live, so
+                    # every sink splits its sealed content into exactly 2 deltas
+                    assert chunks == 2 * n, (
+                        f"stream x{n_clients}: {chunks} content chunks for {n} "
+                        f"requests (need exactly 2 per request, >= 2 is the "
+                        f"wire contract)")
+    assert srv.stats().n_dropped == 0, "unlimited budget must shed nothing"
+
+    save("http_serving", rows)
+    _merge_into_gate(rows, dict(task="agnews", clients=list(CLIENTS),
+                                per_client=per_client, window_s=WINDOW_S,
+                                seed=seed))
+    return rows
+
+
+def _merge_into_gate(rows, http_cfg):
+    """Attach the http_serving section to the shared BENCH_online.json (the
+    file the blocking CI gate compares); other sections are preserved."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
+    try:
+        with open(bench_path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        bench = {"config": {}}
+    bench["schema"] = BENCH_SCHEMA
+    bench.setdefault("config", {})["http"] = http_cfg
+    bench["http_serving"] = rows
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {bench_path} (http_serving section)", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--per-client", type=int, default=None,
+                    help="requests per client thread (default 8; 4 under "
+                         "BENCH_QUICK=1)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(per_client=args.per_client, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

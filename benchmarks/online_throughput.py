@@ -357,12 +357,14 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
     save("online_throughput", rows)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
-    try:        # keep an engine_decode section a prior run merged in
+    try:        # keep sections other writers merged in on a prior run
         with open(bench_path) as f:
             prior = json.load(f)
-        if "engine_decode" in prior:
-            bench["engine_decode"] = prior["engine_decode"]
-            bench["config"]["engine"] = prior.get("config", {}).get("engine")
+        for sec, cfg_key in (("engine_decode", "engine"),
+                             ("http_serving", "http")):
+            if sec in prior:
+                bench[sec] = prior[sec]
+                bench["config"][cfg_key] = prior.get("config", {}).get(cfg_key)
     except (OSError, json.JSONDecodeError):
         pass
     with open(bench_path, "w") as f:

@@ -102,9 +102,27 @@ class Gateway:
         return self.policy(policy, **params).run(idx, budget)
 
     # ------------------------------------------------------------------ online
+    def _resolve_autoscale(self, config, autoscale):
+        """``autoscale`` overrides ``config.autoscale``: an
+        :class:`repro.serving.autoscale.AutoscalePolicy`, ``True`` to take the
+        bounds the ``PoolSpec`` declares via ``max_replicas``, or ``False`` to
+        pin the pool fixed."""
+        from dataclasses import replace
+
+        if autoscale is None:
+            return config
+        if autoscale is True:
+            autoscale = self.spec.pool.autoscale_policy()
+            if autoscale is None:
+                raise ValueError("Gateway autoscale=True needs the PoolSpec "
+                                 "to declare max_replicas > 0")
+        elif autoscale is False:
+            autoscale = None                     # explicit opt-out: fixed pool
+        return replace(config, autoscale=autoscale)
+
     def serve(self, arrivals, config, policy: Optional[str] = None,
               pool: Optional[Sequence] = None, live: bool = False,
-              clock=None, autoscale=None, **params):
+              clock=None, autoscale=None, metrics=None, **params):
         """Stream an arrival list through the online serving layer under the
         selected policy; returns :class:`ServerStats` and leaves the drained
         server on ``self.server`` for inspection.
@@ -113,29 +131,24 @@ class Gateway:
         (injectable via ``clock``); ``live=True`` additionally fronts it with
         a :class:`repro.serving.online.LiveArrivalSource` submission thread
         instead of in-loop admission.  ``autoscale`` overrides
-        ``config.autoscale``: an :class:`repro.serving.autoscale.
-        AutoscalePolicy`, ``True`` to take the bounds the ``PoolSpec``
-        declares via ``max_replicas``, or ``False`` to pin the pool fixed."""
-        from dataclasses import replace
-
+        ``config.autoscale`` (see :meth:`_resolve_autoscale`).  ``metrics``
+        takes a :class:`repro.http.metrics.MetricsRegistry` populated live
+        through the server's observability hooks (the same wiring
+        :meth:`serve_http` exposes at ``GET /metrics``)."""
         from repro.serving.online import OnlineRobatchServer
 
         if live and not getattr(config, "realtime", False):
             raise ValueError("Gateway.serve(live=True) needs "
                              "OnlineConfig(realtime=True) — a live arrival "
                              "thread cannot pace a virtual clock")
-        if autoscale is not None:
-            if autoscale is True:
-                autoscale = self.spec.pool.autoscale_policy()
-                if autoscale is None:
-                    raise ValueError("Gateway.serve(autoscale=True) needs the "
-                                     "PoolSpec to declare max_replicas > 0")
-            elif autoscale is False:
-                autoscale = None                 # explicit opt-out: fixed pool
-            config = replace(config, autoscale=autoscale)
+        config = self._resolve_autoscale(config, autoscale)
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config, clock=clock)
+        if metrics is not None:
+            from repro.http.metrics import bind_server_metrics
+
+            bind_server_metrics(metrics, srv)
         try:
             if live:
                 stats = srv.run_live(arrivals)
@@ -145,3 +158,21 @@ class Gateway:
             srv.close()
         self.server = srv
         return stats
+
+    def serve_http(self, config, policy: Optional[str] = None,
+                   pool: Optional[Sequence] = None, host: str = "127.0.0.1",
+                   port: int = 0, autoscale=None, metrics=None, **params):
+        """Bring up the OpenAI-compatible HTTP front-end (:mod:`repro.http`)
+        over a live online server and return the started
+        :class:`repro.http.server.HttpFrontend` (``.port`` carries the bound
+        port; call ``.stop()`` to shut down).  The underlying server is left
+        on ``self.server`` for inspection, as with :meth:`serve`."""
+        from repro.http.server import HttpFrontend
+        from repro.serving.online import OnlineRobatchServer
+
+        config = self._resolve_autoscale(config, autoscale)
+        pol = self.policy(policy, **params)
+        srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
+                                  self.wl, config)
+        self.server = srv
+        return HttpFrontend(srv, host=host, port=port, metrics=metrics).start()

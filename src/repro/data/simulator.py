@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -53,6 +54,8 @@ class BatchResult:
     in_tokens: int               # actual input tokens billed (sys + queries)
     out_tokens: int              # actual output tokens billed (incl. degeneration)
     latency_s: float             # simulated wall clock (for straggler handling)
+    answers: Optional[list] = None   # (b,) parsed answer texts when the member
+    #   actually generated text (real engines); None for calibrated simulators
 
 
 def evaluate_chunked(member, wl: Workload, idx: np.ndarray,

@@ -1,0 +1,20 @@
+"""HTTP front-end for the RoBatch serving plane: an OpenAI-compatible wire
+surface (``/v1/chat/completions`` with SSE streaming, ``/v1/models``), health
+(``/healthz``) and Prometheus metrics (``/metrics``) — stdlib-only.
+
+Entry points::
+
+    from repro.http import HttpFrontend, MetricsRegistry
+
+    fe = HttpFrontend(online_server, port=0).start()   # or Gateway.serve_http
+    ...
+    fe.stop()
+
+or from the CLI: ``python -m repro.launch.serve http --port 8080``.
+"""
+from repro.http.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                                bind_server_metrics)
+from repro.http.server import HttpFrontend
+
+__all__ = ["HttpFrontend", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "bind_server_metrics"]

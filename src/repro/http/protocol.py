@@ -1,0 +1,183 @@
+"""OpenAI chat-completions wire schema and SSE framing, stdlib-only.
+
+The front-end speaks the `/v1/chat/completions` request/response shape any
+OpenAI SDK emits; routing metadata the schema has no slot for (which pool
+member served, the judged utility, the billed cost share, cache/batch state)
+rides in a ``robatch`` extension object on every response.
+
+Query resolution maps a chat message onto the workload the gateway was fitted
+on.  The serving plane routes by *workload index* (the router embedding, cost
+columns and calibrations are all indexed), so free-text ingress must land on
+an index; the ladder, first match wins:
+
+1. an explicit integer ``query_idx`` field in the request body,
+2. exact text match against the pool's :class:`repro.serving.pool.TextTask`
+   queries (real engine pools),
+3. ``#N`` / ``qN`` in the message content — an explicit index reference,
+4. a stable content hash onto the serving universe — arbitrary curl text
+   exercises the full plane deterministically.
+
+SSE framing follows the OpenAI streaming contract: ``data: {chunk}\\n\\n``
+frames with ``object: chat.completion.chunk``, a first frame carrying the
+assistant role, one frame per content delta, a terminal frame with
+``finish_reason``, then the literal ``data: [DONE]`` sentinel.
+"""
+from __future__ import annotations
+
+import json
+import re
+import zlib
+from typing import Optional
+
+__all__ = ["ApiError", "parse_chat_body", "resolve_query_idx",
+           "completion_response", "chunk_frame", "role_frame", "finish_frame",
+           "sse_event", "SSE_DONE", "models_response", "usage_for"]
+
+SSE_DONE = b"data: [DONE]\n\n"
+
+_IDX_RE = re.compile(r"^\s*(?:#|q)?(\d+)\s*$", re.IGNORECASE)
+
+
+class ApiError(Exception):
+    """Maps to an OpenAI-style error envelope with an HTTP status."""
+
+    def __init__(self, status: int, message: str, err_type: str = "invalid_request_error"):
+        super().__init__(message)
+        self.status = status
+        self.err_type = err_type
+
+    def body(self) -> dict:
+        return {"error": {"message": str(self), "type": self.err_type,
+                          "code": self.status}}
+
+
+def parse_chat_body(raw: bytes) -> dict:
+    """Decode and structurally validate a chat-completions request body;
+    returns ``{"content", "stream", "model", "query_idx"}``."""
+    try:
+        body = json.loads(raw.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ApiError(400, f"request body is not valid JSON: {e}")
+    if not isinstance(body, dict):
+        raise ApiError(400, "request body must be a JSON object")
+    messages = body.get("messages")
+    if not isinstance(messages, list) or not messages:
+        raise ApiError(400, "'messages' must be a non-empty array")
+    content: Optional[str] = None
+    for msg in reversed(messages):
+        if isinstance(msg, dict) and msg.get("role") == "user":
+            content = msg.get("content")
+            break
+    if not isinstance(content, str) or not content:
+        raise ApiError(400, "need at least one user message with string content")
+    query_idx = body.get("query_idx")
+    if query_idx is not None and not isinstance(query_idx, int):
+        raise ApiError(400, "'query_idx' must be an integer when present")
+    return {"content": content, "stream": bool(body.get("stream", False)),
+            "model": body.get("model"), "query_idx": query_idx}
+
+
+def resolve_query_idx(parsed: dict, universe, text_index: dict) -> int:
+    """The resolution ladder above; ``universe`` is the serving index array,
+    ``text_index`` maps exact TextTask query strings to workload indices."""
+    n = len(universe)
+    if n == 0:
+        raise ApiError(503, "server has no serving universe", "server_error")
+    if parsed["query_idx"] is not None:
+        q = parsed["query_idx"]
+        if not 0 <= q < n:
+            raise ApiError(400, f"query_idx {q} outside the serving universe "
+                                f"[0, {n})")
+        return int(universe[q])
+    content = parsed["content"]
+    hit = text_index.get(content)
+    if hit is None:
+        hit = text_index.get(content.strip())
+    if hit is not None:
+        return int(hit)
+    m = _IDX_RE.match(content)
+    if m and int(m.group(1)) < n:
+        return int(universe[int(m.group(1))])
+    return int(universe[zlib.crc32(content.strip().encode("utf-8")) % n])
+
+
+def usage_for(wl, query_idx: int) -> dict:
+    """Token accounting from the workload's calibrated counts (the serving
+    plane bills batch-amortized tokens; this is the per-query view)."""
+    prompt = int(wl.sys_tokens + wl.in_tokens[query_idx])
+    completion = int(wl.out_tokens[query_idx])
+    return {"prompt_tokens": prompt, "completion_tokens": completion,
+            "total_tokens": prompt + completion}
+
+
+def _robatch_ext(req, model_name: Optional[str]) -> dict:
+    return {"query_idx": req.query_idx, "model_idx": req.model,
+            "model": model_name, "batch": req.batch,
+            "utility": req.utility, "cost": req.cost,
+            "cache_hit": req.cache_hit, "n_reroutes": req.n_reroutes,
+            "latency_s": round(req.latency, 6)}
+
+
+def completion_response(req, model_name: Optional[str], wl,
+                        created: int = 0) -> dict:
+    """Non-streamed ``chat.completion`` body for a completed OnlineRequest.
+
+    ``id`` is deterministic in the request id and ``created`` defaults to 0:
+    responses are bit-comparable across serving paths and runs (the parity
+    guarantee the tests pin); a wall timestamp would be the only nondeterminism.
+    """
+    return {
+        "id": f"chatcmpl-{req.rid}",
+        "object": "chat.completion",
+        "created": created,
+        "model": model_name or "robatch",
+        "choices": [{
+            "index": 0,
+            "message": {"role": "assistant", "content": req.content or ""},
+            "finish_reason": "stop",
+        }],
+        "usage": usage_for(wl, req.query_idx),
+        "robatch": _robatch_ext(req, model_name),
+    }
+
+
+def sse_event(payload: dict) -> bytes:
+    return b"data: " + json.dumps(payload, separators=(",", ":")).encode() + b"\n\n"
+
+
+def _chunk(req, model_name: Optional[str], delta: dict,
+           finish_reason: Optional[str], created: int = 0) -> dict:
+    return {
+        "id": f"chatcmpl-{req.rid}",
+        "object": "chat.completion.chunk",
+        "created": created,
+        "model": model_name or "robatch",
+        "choices": [{"index": 0, "delta": delta,
+                     "finish_reason": finish_reason}],
+    }
+
+
+def role_frame(req, model_name: Optional[str] = None) -> bytes:
+    return sse_event(_chunk(req, model_name, {"role": "assistant"}, None))
+
+
+def chunk_frame(req, delta_text: str, model_name: Optional[str] = None) -> bytes:
+    return sse_event(_chunk(req, model_name, {"content": delta_text}, None))
+
+
+def finish_frame(req, model_name: Optional[str], wl) -> bytes:
+    body = _chunk(req, model_name, {}, "stop")
+    body["usage"] = usage_for(wl, req.query_idx)
+    body["robatch"] = _robatch_ext(req, model_name)
+    return sse_event(body)
+
+
+def models_response(pool) -> dict:
+    """``GET /v1/models``: pool members with their per-token prices."""
+    return {"object": "list", "data": [{
+        "id": m.name, "object": "model", "owned_by": "robatch",
+        "context_len": int(m.context_len),
+        "pricing": {"input_per_1m_tokens": float(m.c_in),
+                    "output_per_1m_tokens": float(m.c_out)},
+        "replicas": int(getattr(m, "n_replicas", 1)),
+    } for m in pool]}

@@ -29,6 +29,21 @@ pressure and drains it back when idle, between ``--min-replicas`` and
     PYTHONPATH=src python -m repro.launch.serve online --qps 40 \
         --autoscale --min-replicas 1 --max-replicas 4
 
+``http`` — the OpenAI-compatible HTTP front-end (``repro.http``): fit the
+same control plane, then serve it over the wire — ``POST
+/v1/chat/completions`` (SSE streaming with ``"stream": true``), ``GET
+/v1/models``, ``GET /healthz`` and Prometheus ``GET /metrics`` — until
+SIGINT/SIGTERM (or ``--max-seconds``)::
+
+    PYTHONPATH=src python -m repro.launch.serve http --port 8000
+    PYTHONPATH=src python -m repro.launch.serve http --port 0 --policy robatch \
+        --replicas 2 --autoscale --max-replicas 4
+    curl -N localhost:8000/v1/chat/completions -d \
+        '{"messages":[{"role":"user","content":"#7"}],"stream":true}'
+
+``--port 0`` binds an ephemeral port (printed on the ``listening on`` line —
+how ``tools/smoke.sh`` runs it).
+
 ``--policy`` selects any name from the policy registry
 (``repro.api.list_policies()``); ``--spec`` takes a ``RunSpec`` JSON (a file
 path or an inline JSON string) and subsumes the individual flags.  Legacy
@@ -259,13 +274,109 @@ def online_main(argv):
             print(f"  t={e.t:7.2f}s {e.member}: {e.from_n} -> {e.to_n} ({e.reason})")
 
 
+def http_main(argv):
+    ap = argparse.ArgumentParser(prog="serve http")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="bind port (0 = ephemeral; the bound port is printed "
+                         "on the 'listening on' line)")
+    ap.add_argument("--policy", default=None,
+                    help="registered policy name (repro.api.list_policies())")
+    ap.add_argument("--spec", default=None,
+                    help="RunSpec JSON — a file path or an inline JSON string")
+    ap.add_argument("--task", default=None, help="workload benchmark name")
+    ap.add_argument("--family", default=None, help="simulated pool family")
+    ap.add_argument("--qps", type=float, default=40.0,
+                    help="assumed offered load for budget sizing")
+    ap.add_argument("--window", type=float, default=0.1, help="admission window (s)")
+    ap.add_argument("--budget-x", type=float, default=3.0,
+                    help="budget rate = qps × cheapest-state cost × this factor")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="engines per pool member (ReplicaSet when > 1)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="backlog-driven replica autoscaling between "
+                         "--min-replicas and --max-replicas")
+    ap.add_argument("--min-replicas", type=int, default=None,
+                    help="autoscale floor (default 1)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="autoscale ceiling (default 4 with --autoscale)")
+    ap.add_argument("--max-seconds", type=float, default=0.0,
+                    help="serve for N wall seconds then exit (0 = until "
+                         "SIGINT/SIGTERM)")
+    ap.add_argument("--n-train", type=int, default=None)
+    ap.add_argument("--coreset", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    import signal
+    import threading
+
+    from repro.api import Gateway, UnknownPolicyError, get_policy, list_policies
+    from repro.data import BENCHMARKS
+    from repro.serving.online import OnlineConfig
+
+    if args.qps <= 0:
+        raise SystemExit("serve http: --qps must be positive")
+    spec = _online_spec(args)
+    if args.replicas is not None:
+        spec.pool.replicas = args.replicas
+    if args.min_replicas is not None:
+        spec.pool.min_replicas = args.min_replicas
+    if args.max_replicas is not None:
+        spec.pool.max_replicas = args.max_replicas
+    if args.autoscale and spec.pool.max_replicas <= 0:
+        spec.pool.max_replicas = 4
+    if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
+        raise SystemExit(f"serve http: unknown task {spec.pool.task!r}; "
+                         f"known: {sorted(BENCHMARKS)}")
+    try:
+        get_policy(spec.policy.name)
+    except UnknownPolicyError:
+        raise SystemExit(f"serve http: unknown policy {spec.policy.name!r}; "
+                         f"known: {list_policies()}")
+
+    gw = Gateway.from_spec(spec)
+    print(f"fitting RoBatch on {spec.pool.task}/{spec.pool.family} "
+          f"({spec.pool.n_train} train, coreset {spec.coreset_size})...",
+          flush=True)
+    gw.fit()
+    rb = gw.robatch
+
+    test = gw.wl.subset_indices("test")
+    base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
+    rate = args.qps * base * args.budget_x
+    autoscale = spec.pool.autoscale_policy() if args.autoscale else None
+    cfg = OnlineConfig(budget_per_s=rate, window_s=args.window,
+                       realtime=True, autoscale=autoscale)
+    fe = gw.serve_http(cfg, host=args.host, port=args.port)
+    print(f"serve http: listening on http://{args.host}:{fe.port} "
+          f"(policy={spec.policy.name}, {len(gw.pool)} members, "
+          f"window {args.window}s, budget ${rate:.6f}/s)", flush=True)
+
+    stop = threading.Event()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, lambda *_: stop.set())
+    t0 = time.monotonic()
+    while not stop.is_set():
+        stop.wait(0.25)
+        if args.max_seconds and time.monotonic() - t0 >= args.max_seconds:
+            break
+    fe.stop()
+    srv = gw.server
+    print(f"serve http: shutdown clean — {fe.n_http_requests} http requests, "
+          f"{len(srv.completed)} completed, {len(srv.windows)} windows, "
+          f"${srv.bucket.total_spent:.6f} spent", flush=True)
+    if srv.windows:
+        print(f"  last window: {srv.windows[-1].summary()}", flush=True)
+
+
 def main():
     argv = sys.argv[1:]
-    if argv and argv[0] in ("engine", "online"):
+    if argv and argv[0] in ("engine", "online", "http"):
         mode, rest = argv[0], argv[1:]
     else:
         mode, rest = "engine", argv     # legacy: bare flags mean engine mode
-    (online_main if mode == "online" else engine_main)(rest)
+    {"online": online_main, "http": http_main}.get(mode, engine_main)(rest)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,12 @@ class Request:
     enqueued_at: float = field(default_factory=time.time)
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
+    on_tokens: Optional[Callable[[list[int], bool], None]] = None
+    # ^ streaming hook: called once per host dispatch that appended to
+    #   out_tokens — the prefill's first token at admission, then each fused
+    #   decode block (so the cadence is exactly ``decode_block`` tokens).
+    #   Args: the freshly appended token ids and whether the request is done.
+    #   Called from the serving thread; sinks must not block.
 
 
 class ServingEngine:
@@ -392,6 +398,8 @@ class ServingEngine:
             req.out_tokens.append(int(f))
             if int(f) == self.eos_id:
                 self._retire(slot)
+            if req.on_tokens is not None:
+                req.on_tokens([int(f)], req.done)
 
     def _admit_free(self, queue: list[Request]):
         """Fill every free slot from the queue (FCFS, slot-index order); an
@@ -523,9 +531,12 @@ class ServingEngine:
             act_f = np.asarray(act_f)
             for i in active:
                 req = self.slot_req[i]
-                req.out_tokens.extend(int(t) for t in toks[valid[:, i], i])
+                block = [int(t) for t in toks[valid[:, i], i]]
+                req.out_tokens.extend(block)
                 if not act_f[i]:
                     self._retire(i)
+                if req.on_tokens is not None:
+                    req.on_tokens(block, req.done)
         return requests
 
     def serve_stepwise(self, requests: list[Request]) -> list[Request]:
@@ -563,6 +574,8 @@ class ServingEngine:
                 if (int(nxt[i]) == self.eos_id or len(req.out_tokens) >= req.max_new
                         or total_len >= self.max_len - 1):
                     self._retire(i)
+                if req.on_tokens is not None:
+                    req.on_tokens([int(nxt[i])], req.done)
         return requests
 
     # convenience --------------------------------------------------------

@@ -51,6 +51,17 @@ Design points:
   arrival *generation* is split from *pacing* (:func:`arrival_stream` vs. the
   pacer), so one seeded stream replays identically in both modes.
 
+* **Live ingress.**  ``submit_request`` is the bridge the HTTP front-end
+  (:mod:`repro.http`) sits on: it returns an :class:`OnlineRequest` carrying a
+  ``done_event`` the caller blocks on and, for streamed responses, a
+  :class:`StreamSink` the batch-prompt demultiplexer pushes per-decode-block
+  text deltas into.  ``run_bridge`` paces the same windowed ``step()`` loop
+  against the wall clock with no pre-generated arrival list — requests arrive
+  concurrently from handler threads.  ``_complete`` finalizes every request
+  with its answer text (``OnlineRequest.content``): the parsed generation for
+  real engines, a deterministic synthesized line for calibrated simulators,
+  the cached text on a cache hit.
+
 * **Replica capacity.**  A replicated member
   (:class:`repro.serving.pool.ReplicaSet`) can run at most ``n_replicas``
   batch-groups concurrently, so the server threads per-member group caps into
@@ -72,6 +83,7 @@ Design points:
 from __future__ import annotations
 
 import inspect
+import queue
 import threading
 import time
 from collections import OrderedDict, deque
@@ -86,7 +98,7 @@ from repro.serving.autoscale import Autoscaler, AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
-           "WindowReport", "ServerStats", "OnlineRobatchServer",
+           "StreamSink", "WindowReport", "ServerStats", "OnlineRobatchServer",
            "MonotonicClock", "FakeClock", "LiveArrivalSource",
            "arrival_stream", "poisson_arrivals"]
 
@@ -119,6 +131,56 @@ class FakeClock:
         self.t += max(0.0, float(dt))
 
 
+class StreamSink:
+    """Per-request live delta channel between the serving plane and a waiting
+    consumer (an SSE handler thread, a test).
+
+    The batch-prompt demultiplexer (:meth:`repro.serving.pool.ServedPoolMember.
+    invoke_batch`) pushes text deltas as decode blocks land; ``_complete``
+    seals the stream with the authoritative final answer — any tail the live
+    deltas did not cover is pushed first, then a terminal ``("done", None)``
+    event (or ``("error", reason)`` for a shed request).  Members that never
+    generate text (calibrated simulators, cache hits) stream nothing live, so
+    the seal splits their content into two deltas — every streamed completion
+    carries ≥ 2 content chunks, whatever served it.
+
+    Events on ``q``: ``("delta", text)``, ``("error", reason)``,
+    ``("done", None)``.  push/finish are called from serving-side threads,
+    the queue consumer from the subscriber's.
+    """
+
+    def __init__(self):
+        self.q: "queue.Queue[tuple[str, Optional[str]]]" = queue.Queue()
+        self.emitted = ""             # concatenation of all pushed deltas
+        self.n_deltas = 0
+        self.closed = False
+
+    def push(self, delta: str) -> None:
+        if not delta or self.closed:
+            return
+        self.emitted += delta
+        self.n_deltas += 1
+        self.q.put(("delta", delta))
+
+    def finish(self, content: str, *, split: bool = False,
+               error: Optional[str] = None) -> None:
+        if self.closed:
+            return
+        if error is not None:
+            self.q.put(("error", error))
+        else:
+            tail = content[len(self.emitted):] \
+                if content.startswith(self.emitted) else content
+            if split and not self.emitted and len(tail) > 1:
+                mid = (len(tail) + 1) // 2
+                self.push(tail[:mid])
+                self.push(tail[mid:])
+            elif tail:
+                self.push(tail)
+        self.closed = True
+        self.q.put(("done", None))
+
+
 @dataclass
 class OnlineRequest:
     """One streamed query: a workload index plus serving lifecycle state."""
@@ -134,6 +196,9 @@ class OnlineRequest:
     cache_hit: bool = False
     n_reroutes: int = 0
     dropped: bool = False
+    content: Optional[str] = None     # final answer text (set at completion)
+    stream: Optional[StreamSink] = None   # live delta channel (submit_request)
+    done_event: Optional[threading.Event] = None  # set when _complete runs
 
     @property
     def latency(self) -> float:
@@ -169,16 +234,18 @@ class ResponseCache:
 
     The byte-level batch prompt is deterministic in the query text, so a
     repeated query is served from cache at zero cost.  Values are
-    ``(utility, model_idx)`` — what the judge scored when the query was first
-    served, and where."""
+    ``(utility, model_idx, content)`` — what the judge scored when the query
+    was first served, where, and the answer text it got (``None`` when the
+    member produced no text — the server re-synthesizes deterministically)."""
 
     def __init__(self, max_entries: int = 4096):
         self.max_entries = max_entries
-        self._entries: OrderedDict[int, tuple[float, int]] = OrderedDict()
+        self._entries: OrderedDict[int, tuple[float, int, Optional[str]]] = \
+            OrderedDict()
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: int) -> Optional[tuple[float, int]]:
+    def get(self, key: int) -> Optional[tuple[float, int, Optional[str]]]:
         if key in self._entries:
             self._entries.move_to_end(key)
             self.hits += 1
@@ -186,7 +253,7 @@ class ResponseCache:
         self.misses += 1
         return None
 
-    def put(self, key: int, value: tuple[float, int]) -> None:
+    def put(self, key: int, value: tuple[float, int, Optional[str]]) -> None:
         self._entries[key] = value
         self._entries.move_to_end(key)
         while len(self._entries) > self.max_entries:
@@ -245,6 +312,30 @@ class WindowReport:
     #   paged-KV occupancy per member with a real engine behind it — the
     #   memory-headroom signal the autoscaler and the bench gate read; empty
     #   entries (simulated members) are omitted
+
+    @property
+    def kv_occupancy(self) -> int:
+        """Total live KV pages across members this round (0 when no member
+        runs a paged engine)."""
+        return sum(used for _, used, _s, _f in self.kv_pages)
+
+    def summary(self) -> str:
+        """One operator-readable line per scheduling round — includes the
+        paged-KV occupancy that previously lived only in the dataclass."""
+        line = (f"t={self.t:.2f}s pending={self.n_pending} "
+                f"admitted={self.n_admitted} groups={self.n_groups} "
+                f"deferred={self.n_deferred} held={self.n_capacity_held} "
+                f"packed={self.n_cap_packed} shed={self.n_shed} "
+                f"spent=${self.spent:.6f}")
+        if self.late_s:
+            line += f" late={self.late_s * 1e3:.0f}ms"
+        if self.replica_counts:
+            line += f" replicas={list(self.replica_counts)}"
+        if self.kv_pages:
+            per = " ".join(f"m{k}:{used}p/{shared}sh/{forks}cow"
+                           for k, used, shared, forks in self.kv_pages)
+            line += f" kv_pages[{self.kv_occupancy} live: {per}]"
+        return line
 
 
 @dataclass
@@ -340,6 +431,11 @@ class OnlineRobatchServer:
         self._pool_exec = ThreadPoolExecutor(max_workers=workers)
         self._next_rid = 0
         self.n_coalesced = 0
+        # observability hooks (repro.http.metrics binds these): called from
+        # the serving thread — keep them fast and non-blocking
+        self.on_window = None         # fn(WindowReport) after every round
+        self.on_complete = None       # fn(OnlineRequest) at every completion
+        self._bridge_t0: Optional[float] = None   # run_bridge timeline origin
 
     # ------------------------------------------------------------- admission
     def submit(self, query_idx: int, at: Optional[float] = None) -> OnlineRequest:
@@ -347,6 +443,26 @@ class OnlineRobatchServer:
         with self._submit_lock:
             req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
                                 arrived_at=self.now if at is None else at)
+            self._next_rid += 1
+            self.pending.append(req)
+            return req
+
+    def submit_request(self, query_idx: int, *, stream: bool = False,
+                       at: Optional[float] = None) -> OnlineRequest:
+        """Live-ingress submit: the request carries a ``done_event`` the
+        caller can block on, and (with ``stream=True``) a :class:`StreamSink`
+        receiving per-decode-block text deltas.  Arrival time defaults to the
+        bridge timeline when :meth:`run_bridge` is running, else the server's
+        current tick."""
+        if at is None and self._bridge_t0 is not None:
+            at = self.clock.now() - self._bridge_t0
+        with self._submit_lock:
+            # sink and event attach BEFORE the request becomes visible to the
+            # serving loop — a step() racing ahead must find them in place
+            req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
+                                arrived_at=self.now if at is None else at,
+                                done_event=threading.Event(),
+                                stream=StreamSink() if stream else None)
             self._next_rid += 1
             self.pending.append(req)
             return req
@@ -371,9 +487,19 @@ class OnlineRobatchServer:
         return caps
 
     # -------------------------------------------------------------- serving
+    def _default_content(self, req: OnlineRequest) -> str:
+        """Deterministic answer text for members that produce none (the
+        calibrated simulators): a pure function of (member, query, utility),
+        so HTTP responses stay bit-identical across runs and serving paths."""
+        if req.model is None:
+            return ""
+        return (f"[{self.pool[req.model].name}] q{req.query_idx} "
+                f"utility={req.utility:.3f}")
+
     def _complete(self, req: OnlineRequest, *, at: float, utility: float,
                   model: Optional[int], batch: Optional[int], cost: float,
-                  cache_hit: bool = False, dropped: bool = False) -> None:
+                  cache_hit: bool = False, dropped: bool = False,
+                  content: Optional[str] = None) -> None:
         req.completed_at = at
         req.utility = utility
         req.model = model
@@ -381,15 +507,27 @@ class OnlineRobatchServer:
         req.cost = cost
         req.cache_hit = cache_hit
         req.dropped = dropped
+        req.content = "" if dropped else (
+            content if content is not None else self._default_content(req))
+        if req.stream is not None:
+            if dropped:
+                req.stream.finish("", error="request shed (budget/reroute limit)")
+            else:
+                req.stream.finish(req.content, split=True)
         self.completed.append(req)
+        if req.done_event is not None:
+            req.done_event.set()
+        if self.on_complete is not None:
+            self.on_complete(req)
 
-    def _invoke(self, k: int, members: np.ndarray):
+    def _invoke(self, k: int, members: np.ndarray, streams=None):
+        kw = {"streams": streams} if streams else {}
         if getattr(self.pool[k], "thread_safe", False):
             # ReplicaSets serialize per replica internally — concurrent groups
             # on one member are exactly what the replicas are for
-            return self.pool[k].invoke_batch(self.wl, members)
+            return self.pool[k].invoke_batch(self.wl, members, **kw)
         with self._locks[k]:          # engines are not thread-safe; members are
-            return self.pool[k].invoke_batch(self.wl, members)
+            return self.pool[k].invoke_batch(self.wl, members, **kw)
 
     def _finish_window(self, rep: WindowReport) -> WindowReport:
         """Seal one round: record per-member replica counts, give the
@@ -411,6 +549,8 @@ class OnlineRobatchServer:
             rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))
                                        for m in self.pool)
         self.windows.append(rep)
+        if self.on_window is not None:
+            self.on_window(rep)
         return rep
 
     def step(self, now: Optional[float] = None) -> WindowReport:
@@ -426,9 +566,9 @@ class OnlineRobatchServer:
         for req in take:
             hit = self.cache.get(req.query_idx)
             if hit is not None:
-                u, k = hit
+                u, k, text = hit
                 self._complete(req, at=now, utility=u, model=k, batch=None,
-                               cost=0.0, cache_hit=True)
+                               cost=0.0, cache_hit=True, content=text)
                 rep.n_cache_hits += 1
             else:
                 misses.append(req)
@@ -536,11 +676,19 @@ class OnlineRobatchServer:
         rep.held_by_member = tuple(sorted(held_by.items()))
         rep.packed_by_member = tuple(sorted(packed_by.items()))
 
-        # 6. concurrent dispatch across pool members
+        # 6. concurrent dispatch across pool members; members that generate
+        #    text get the live per-position subscriber sinks so SSE deltas
+        #    flow at decode-block cadence (simulators stream at completion)
         futures = {}
         for state, members in dispatch:
             k = int(state.model)
-            fut = self._pool_exec.submit(self._invoke, k, members)
+            streams = None
+            if getattr(self.pool[k], "supports_streams", False):
+                streams = {pos: sinks for pos, q in enumerate(members)
+                           if (sinks := [r.stream for r in by_idx[int(q)]
+                                         if r.stream is not None])}
+            fut = self._pool_exec.submit(self._invoke, k, members,
+                                         streams or None)
             futures[fut] = (state, members)
         rep.n_groups = len(dispatch)
         rep.group_models = tuple(int(s.model) for s, _ in dispatch)
@@ -571,11 +719,14 @@ class OnlineRobatchServer:
             rep.spent += cost
             done_at = now + float(out.latency_s)
             share = cost / max(1, len(members))
-            for q, u in zip(members, out.utilities):
-                self.cache.put(int(q), (float(u), k))
+            answers = getattr(out, "answers", None)
+            for pos, (q, u) in enumerate(zip(members, out.utilities)):
+                text = answers[pos] if answers is not None else None
+                self.cache.put(int(q), (float(u), k, text))
                 for req in by_idx[int(q)]:
                     self._complete(req, at=done_at, utility=float(u), model=k,
-                                   batch=int(state.batch), cost=share)
+                                   batch=int(state.batch), cost=share,
+                                   content=text)
         retry = sorted(requeue + held, key=lambda r: r.rid)
         if retry:                     # FCFS: oldest retried request re-enters first
             self.pending.extendleft(reversed(retry))
@@ -633,6 +784,47 @@ class OnlineRobatchServer:
             rep = self.step(now)
             rep.late_s = max(0.0, now - target)
         return self.stats()
+
+    def run_bridge(self, stop_event: threading.Event, *,
+                   max_ticks: int = 10_000_000, drain_ticks: int = 1000) -> None:
+        """Live-ingress serving loop: no pre-generated arrival list — requests
+        arrive concurrently via :meth:`submit_request` (e.g. from HTTP handler
+        threads) while this loop fires one scheduling round per wall-clock
+        window boundary, exactly like :meth:`run_paced`.
+
+        On ``stop_event`` the loop stops admitting ticks and *drains*: pending
+        requests get up to ``drain_ticks`` further rounds to complete (budget
+        refills keep accruing on the bridge timeline), then any stragglers are
+        completed as dropped — a waiter on ``done_event`` is never stranded.
+        """
+        clock = self.clock
+        t0 = clock.now()
+        self._bridge_t0 = t0
+        try:
+            for tick in range(1, max_ticks + 1):
+                if stop_event.is_set():
+                    break
+                target = tick * self.cfg.window_s
+                lag = target - (clock.now() - t0)
+                if lag > 0:
+                    # interruptible sleep: a shutdown mid-window wakes the
+                    # loop instead of waiting the window out
+                    stop_event.wait(lag)
+                    if stop_event.is_set():
+                        break
+                now = clock.now() - t0
+                rep = self.step(now)
+                rep.late_s = max(0.0, now - target)
+            for _ in range(drain_ticks):
+                if not self.pending:
+                    break
+                self.step(clock.now() - t0)
+            while self.pending:       # unaffordable stragglers: fail, don't hang
+                req = self.pending.popleft()
+                self._complete(req, at=clock.now() - t0, utility=0.0,
+                               model=None, batch=None, cost=0.0, dropped=True)
+        finally:
+            self._bridge_t0 = None
 
     def run_live(self, arrivals: Sequence[tuple[float, int]], *,
                  duration_s: Optional[float] = None,

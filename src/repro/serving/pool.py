@@ -51,6 +51,10 @@ class TextTask:
 class ServedPoolMember:
     """One pool member backed by a live ServingEngine."""
 
+    supports_streams = True
+    # ^ invoke_batch accepts ``streams`` (per-position live subscriber sinks);
+    #   the online dispatcher feature-detects this attribute before forwarding
+
     def __init__(self, name: str, engine: ServingEngine, formatter: BatchPromptFormatter,
                  task: TextTask, c_in: float, c_out: float, context_len: int,
                  max_answer_tokens: int = 8):
@@ -65,7 +69,64 @@ class ServedPoolMember:
         self._lock = threading.Lock()
         self._rid = itertools.count()   # monotonic per-member invocation id
 
-    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
+    def _stream_demux(self, b: int, streams: dict):
+        """Per-decode-block demultiplexer for the batch-prompt wire format.
+
+        The engine's ``Request.on_tokens`` hook fires once per fused
+        ``decode_block`` dispatch with the freshly appended token ids; this
+        closure accumulates them, splits the byte stream on the answer
+        separator, and pushes each subscribed position's *text delta* to its
+        sinks — so SSE chunks flow mid-generation at decode-block cadence.
+
+        Splitting happens on raw bytes (the separator is one byte), so
+        position boundaries are exact even when a multi-byte UTF-8 character
+        straddles two decode blocks.  While a part is still open, only its
+        longest cleanly decodable prefix is emitted and trailing whitespace is
+        held back; when the part closes (a later separator, EOS, or the
+        generation ending) the final text is the same ``strip()``-ed answer
+        :meth:`BatchPromptFormatter.parse` produces — so the concatenated
+        deltas always equal the request's non-streamed answer.
+        """
+        sep = self.formatter.sep.encode()
+        eos = self.engine.eos_id
+        acc: list[int] = []
+        emitted = ["" for _ in range(b)]
+        closed = [False] * b
+
+        def clean_prefix(raw: bytes) -> str:
+            try:
+                return raw.decode("utf-8")
+            except UnicodeDecodeError as e:
+                return raw[: e.start].decode("utf-8", errors="ignore")
+
+        def push(pos: int, text: str) -> None:
+            delta = text[len(emitted[pos]):] if text.startswith(emitted[pos]) \
+                else text          # defensive: never retract, re-push whole
+            if delta:
+                emitted[pos] += delta
+                for sink in streams[pos]:
+                    sink.push(delta)
+
+        def on_tokens(new_ids: list[int], done: bool) -> None:
+            acc.extend(new_ids)
+            ids, ended = acc, done
+            if eos in ids:
+                ids, ended = ids[: ids.index(eos)], True
+            raw = bytes(i for i in ids if i < 256)
+            parts = raw.split(sep)
+            for pos in streams:
+                if pos >= b or pos >= len(parts) or closed[pos]:
+                    continue
+                if pos < len(parts) - 1 or ended:
+                    closed[pos] = True
+                    push(pos, parts[pos].decode("utf-8", errors="replace").strip())
+                else:
+                    push(pos, clean_prefix(parts[pos]).strip())
+
+        return on_tokens
+
+    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray,
+                     streams: Optional[dict] = None) -> BatchResult:
         b = len(batch_idx)
         queries = [self.task.queries[int(i)] for i in batch_idx]
         prompt = self.formatter.format(queries)
@@ -74,6 +135,8 @@ class ServedPoolMember:
         # traces can tell invocations apart (next() is atomic under the GIL)
         req = Request(rid=next(self._rid), tokens=prompt,
                       max_new=self.max_answer_tokens * b + b)
+        if streams:
+            req.on_tokens = self._stream_demux(b, streams)
         with self._lock:              # one engine, one in-flight batch
             self.engine.serve([req])
         latency = time.perf_counter() - t0
@@ -86,7 +149,8 @@ class ServedPoolMember:
         util = np.array([self.task.judge(a, self.task.answers[int(i)])
                          for a, i in zip(answers, batch_idx)])
         return BatchResult(utilities=util, in_tokens=len(prompt),
-                           out_tokens=len(req.out_tokens), latency_s=latency)
+                           out_tokens=len(req.out_tokens), latency_s=latency,
+                           answers=answers)
 
     def evaluate(self, wl: Workload, idx: np.ndarray, batch_size: int,
                  rng=None) -> np.ndarray:
@@ -296,7 +360,15 @@ class ReplicaSet:
             self._inflight[r] += 1
             return r
 
-    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray) -> BatchResult:
+    @property
+    def supports_streams(self) -> bool:
+        """Live token streaming is offered iff the replicas offer it (the set
+        merely routes the ``streams`` subscription to whichever replica wins
+        dispatch)."""
+        return bool(getattr(self.replicas[0], "supports_streams", False))
+
+    def invoke_batch(self, wl: Workload, batch_idx: np.ndarray,
+                     streams: Optional[dict] = None) -> BatchResult:
         tried: set[int] = set()
         last: Optional[Exception] = None
         while True:
@@ -305,8 +377,10 @@ class ReplicaSet:
                 raise RuntimeError(
                     f"{self.name}: all {self.n_replicas} replicas failed") from last
             t0 = time.perf_counter()
+            kw = {"streams": streams} if streams and getattr(
+                self.replicas[r], "supports_streams", False) else {}
             try:
-                out = self.replicas[r].invoke_batch(wl, batch_idx)
+                out = self.replicas[r].invoke_batch(wl, batch_idx, **kw)
             except Exception as e:        # noqa: BLE001 — replica fault
                 last = e
                 self.tracker.record_failure(r)

@@ -64,9 +64,11 @@ def test_ci_workflow_is_valid():
     # the bench regression gate BLOCKS (tolerances absorb runner noise;
     # bench_check annotates regression vs mismatch vs missing baseline)
     assert "continue-on-error" not in wf["jobs"]["bench"]
-    # ...and gates the engine decode microbenchmark alongside the online run
+    # ...and gates the engine decode + HTTP front-end benchmarks alongside
+    # the online run
     bench_runs = [s.get("run") or "" for s in wf["jobs"]["bench"]["steps"]]
     assert any("engine_decode.py" in r for r in bench_runs)
+    assert any("http_serving.py" in r for r in bench_runs)
     assert any("bench_check.py" in r for r in bench_runs)
     # tier1 runs on a python matrix with a non-blocking coverage report
     matrix = wf["jobs"]["tier1"]["strategy"]["matrix"]["python-version"]
@@ -81,3 +83,35 @@ def test_ci_workflow_is_valid():
     assert os.path.exists(os.path.join(ROOT, "ruff.toml"))
     assert os.path.exists(os.path.join(ROOT, "benchmarks", "baselines",
                                        "BENCH_online.json"))
+
+
+def test_http_surface_contract():
+    """The HTTP front-end's workflow contract: the launcher exposes the
+    documented mode and flags, the smoke script drives the wire end-to-end,
+    and README + architecture document the endpoints."""
+    serve_src = open(os.path.join(ROOT, "src", "repro", "launch",
+                                  "serve.py")).read()
+    for flag in ("--host", "--port", "--policy", "--replicas", "--autoscale",
+                 "--max-seconds"):
+        assert flag in serve_src, f"serve.py lost the {flag} flag"
+    assert '"http"' in serve_src and "serve_http" in serve_src
+    for marker in ("listening on http://", "shutdown clean"):
+        assert marker in serve_src, f"serve.py lost the {marker!r} marker"
+
+    smoke = open(os.path.join(ROOT, "tools", "smoke.sh")).read()
+    assert "serve http --port 0" in smoke or "serve http --port 0" in \
+        smoke.replace("\\\n    ", " "), "smoke.sh lost the http leg"
+    for needle in ('"stream":true', "/metrics", "SIGTERM",
+                   "shutdown clean"):
+        assert needle in smoke, f"smoke.sh http leg lost {needle!r}"
+
+    endpoints = ("/v1/chat/completions", "/v1/models", "/healthz", "/metrics")
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    arch = open(os.path.join(ROOT, "docs", "architecture.md")).read()
+    for ep in endpoints:
+        assert ep in readme, f"README.md does not document {ep}"
+        assert ep in arch, f"architecture.md does not document {ep}"
+    # the streaming story: the decode_block-cadence hook and the ingress
+    # bridge are load-bearing design points, not implementation trivia
+    assert "decode_block" in arch and "submit_request" in arch
+    assert "curl" in readme and "stream" in readme

@@ -1,5 +1,6 @@
 """Slow smoke target: tools/smoke.sh runs the quickstart, the tiny real pool
-(small step count) and the online serving CLI once per registered policy.
+(small step count), the online serving CLI once per registered policy, and
+the HTTP front-end (ephemeral port, streamed curl, clean SIGTERM shutdown).
 
 Deselected by default (pytest.ini adds ``-m "not slow"``); run with::
 
@@ -26,4 +27,7 @@ def test_smoke_script():
     for name in list_policies():
         assert f"policy={name} windows=" in out.stdout, \
             f"serve CLI did not complete under policy {name!r}"
+    # the HTTP leg booted, streamed over the wire and shut down cleanly
+    assert "serve http: listening on http://127.0.0.1:" in out.stdout
+    assert "serve http: shutdown clean" in out.stdout
     assert "smoke: OK" in out.stdout

@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Bench regression gate: compare a fresh ``BENCH_online.json`` (written by
-``benchmarks/online_throughput.py``, plus the ``engine_decode`` section
-merged in by ``benchmarks/engine_decode.py``) against the committed baseline.
+``benchmarks/online_throughput.py``, plus the ``engine_decode`` and
+``http_serving`` sections merged in by ``benchmarks/engine_decode.py`` and
+``benchmarks/http_serving.py``) against the committed baseline.
 
 Usage::
 
@@ -81,6 +82,14 @@ TOLERANCES = {
     "tokens_per_s": 0.75,
     "batched_ms": 0.75,
     "sequential_ms": 0.75,
+    # http_serving: loopback-HTTP wall-clock rates and latencies — dominated
+    # by runner speed and thread scheduling; the exact counters (completed,
+    # total_chunks — the >= 2-chunks-per-stream wire contract) are the
+    # tripwire, these catch order-of-magnitude drift
+    "qps": 0.80,
+    "latency_p50_s": 0.80,
+    "latency_p99_s": 0.80,
+    "ttfc_p50_s": 0.80,
 }
 # counter metrics sit near 0 in healthy baselines, where a purely relative
 # band degenerates to [0, 0]; the tolerance is taken over max(|baseline|,
@@ -100,6 +109,11 @@ ABS_FLOOR = {
     "reroutes": 4,
     "replica_failures": 4,
     "replica_ejections": 2,
+    # loopback latencies sit in the low-milliseconds on fast runners, where a
+    # relative band is narrower than OS scheduling jitter
+    "latency_p50_s": 0.2,
+    "latency_p99_s": 0.5,
+    "ttfc_p50_s": 0.2,
 }
 EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          "replicas", "window_s", "phase", "max_replicas", "end_replicas",
@@ -109,12 +123,17 @@ EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          # functions of the seeded greedy run — any drift is a layout or
          # sharing behaviour change, not runner noise
          "peak_kv_bytes", "page_size", "peak_pages", "prefix_shares",
-         "cow_forks"}
+         "cow_forks",
+         # http_serving: wire-contract counters — every request must complete
+         # and every stream must carry exactly 2 content chunks on the
+         # deterministic simulated pool; any drift is a framing/demux change
+         "scenario", "mode", "clients", "total_chunks"}
 
 UPDATE_HINT = ("if the change is intentional, refresh the baseline: "
                "BENCH_QUICK=1 python benchmarks/online_throughput.py "
                "--pool sim --duration 10 && "
                "BENCH_QUICK=1 python benchmarks/engine_decode.py && "
+               "BENCH_QUICK=1 python benchmarks/http_serving.py && "
                "python tools/bench_check.py --update-baseline "
                "(then commit benchmarks/baselines/BENCH_online.json)")
 
@@ -133,10 +152,11 @@ def _rows(section):
 
 def _key(row: dict) -> tuple:
     # window_s/replicas/phase key the online sections; slots/k/path key the
-    # engine_decode sweep (absent fields stay None, so keys never collide
-    # across sections)
+    # engine_decode sweep; mode/clients key the http_serving matrix (absent
+    # fields stay None, so keys never collide across sections)
     return (row.get("window_s"), row.get("replicas"), row.get("phase"),
-            row.get("slots"), row.get("k"), row.get("path"))
+            row.get("slots"), row.get("k"), row.get("path"),
+            row.get("mode"), row.get("clients"))
 
 
 def compare(current: dict, baseline: dict) -> list[str]:

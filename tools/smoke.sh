@@ -7,7 +7,9 @@
 #      small step count, scheduled offline AND streamed online,
 #   3. the online serving CLI over the simulator, ONCE PER REGISTERED POLICY
 #      (repro.api.list_policies()) — a policy that registers but crashes at
-#      plan time fails smoke.
+#      plan time fails smoke,
+#   4. the HTTP front-end: boot `serve http` on an ephemeral port, curl a
+#      streamed completion and /metrics, SIGTERM, assert a clean shutdown.
 # Wired into the suite as a slow-marked test:
 #   PYTHONPATH=src python -m pytest -m slow tests/test_smoke.py
 set -euo pipefail
@@ -34,5 +36,31 @@ done
 # 2-replica members (capacity caps + least-loaded dispatch)
 python -m repro.launch.serve online --realtime --duration 3 --qps 10 \
     --n-train 128 --coreset 32 --replicas 2
+
+# HTTP front-end: ephemeral port, one streamed SSE completion + /metrics via
+# curl, then SIGTERM — the launcher must report a clean shutdown
+HTTP_LOG=$(mktemp)
+python -m repro.launch.serve http --port 0 --n-train 128 --coreset 32 \
+    --window 0.05 >"$HTTP_LOG" 2>&1 &
+HTTP_PID=$!
+for _ in $(seq 1 120); do
+    grep -q "listening on" "$HTTP_LOG" && break
+    kill -0 "$HTTP_PID" 2>/dev/null || { cat "$HTTP_LOG"; exit 1; }
+    sleep 1
+done
+PORT=$(sed -n 's/.*listening on http:\/\/127\.0\.0\.1:\([0-9]*\).*/\1/p' "$HTTP_LOG")
+[ -n "$PORT" ] || { echo "smoke: no http port in launcher output"; cat "$HTTP_LOG"; exit 1; }
+STREAM=$(curl -sS -N --max-time 60 "http://127.0.0.1:$PORT/v1/chat/completions" \
+    -H 'Content-Type: application/json' \
+    -d '{"messages":[{"role":"user","content":"#3"}],"stream":true}')
+echo "$STREAM" | grep -q '"object":"chat.completion.chunk"'
+echo "$STREAM" | grep -q 'data: \[DONE\]'
+curl -sS --max-time 30 "http://127.0.0.1:$PORT/metrics" \
+    | grep -q '^robatch_member_pressure{member='
+kill -TERM "$HTTP_PID"
+wait "$HTTP_PID"
+cat "$HTTP_LOG"
+grep -q "serve http: shutdown clean" "$HTTP_LOG"
+rm -f "$HTTP_LOG"
 
 echo "smoke: OK"
