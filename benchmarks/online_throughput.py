@@ -84,13 +84,14 @@ def _build(pool_kind: str, steps: int, seed: int, max_replicas: int):
 
 
 def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed,
-            policy=None, autoscale=None, arrivals=None, drain_ticks=0):
+            policy=None, autoscale=None, arrivals=None, drain_ticks=0,
+            semcache=None):
     test = wl.subset_indices("test")
     base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect, test).mean())
     rate = qps * base * budget_x
     cfg = OnlineConfig(budget_per_s=rate, window_s=window_s,
                        breaker=BreakerPolicy(failure_threshold=1, recovery_time_s=1e9),
-                       autoscale=autoscale)
+                       autoscale=autoscale, semantic_cache=semcache)
     srv = OnlineRobatchServer(policy if policy is not None else rb, pool, wl, cfg)
     if arrivals is None:
         arrivals = poisson_arrivals(np.random.default_rng(seed), qps, duration,
@@ -102,6 +103,28 @@ def _stream(rb, pool, wl, *, window_s, qps, duration, budget_x, seed,
     wall = time.perf_counter() - t0
     srv.close()
     return srv, stats, wall, len(arrivals)
+
+
+def _neardup_arrivals(rng, qps, duration, test, emb, nn_frac):
+    """Seeded Poisson stream where a ``nn_frac`` fraction of arrivals asks the
+    nearest *neighbor* (not a repeat) of a previously-arrived query — the
+    exact-match cache cannot touch those, so semantic-cache hits in the sweep
+    come only from embedding-space similarity."""
+    sims = emb[test] @ emb[test].T
+    np.fill_diagonal(sims, -np.inf)
+    nn = np.argmax(sims, axis=1)                  # positions within `test`
+    pos_of = {int(q): p for p, q in enumerate(test)}
+    out, seen, t = [], [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / qps))
+        if t >= duration:
+            return out
+        if seen and float(rng.random()) < nn_frac:
+            q = int(test[nn[pos_of[seen[int(rng.integers(0, len(seen)))]]]])
+        else:
+            q = int(test[int(rng.integers(0, len(test)))])
+            seen.append(q)
+        out.append((t, q))
 
 
 def _ramp_arrivals(rng, test, phases):
@@ -137,7 +160,8 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
                             replica_qps=r_qps, replica_budget_x=r_budget_x,
                             ramp_hi=ramp_hi, autoscale_max=max_r),
              "window_sweep": [], "replica_sweep": [], "cap_mode_compare": {},
-             "autoscale": [], "breaker_outage": {}, "replica_outage": {}}
+             "autoscale": [], "breaker_outage": {}, "replica_outage": {},
+             "semcache_sweep": []}
 
     # ---- window-size sweep --------------------------------------------------
     usage = np.zeros(len(pool), dtype=int)
@@ -353,6 +377,77 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
     assert not row["breaker_tripped"], \
         "a single-replica outage must not trip the member's breaker"
     assert row["replica_failures"] > 0, "outage did not reach the flaky replica"
+
+    # ---- semantic-cache threshold sweep: hit-rate vs. utility-loss vs. cost -
+    # a near-duplicate stream (exact repeats excluded by construction) swept
+    # over cosine thresholds drawn from the test set's NN-similarity
+    # distribution; the off (no cache) run anchors cost-saved, and the
+    # threshold=inf run must be bit-identical to it (the wired server with an
+    # impossible threshold IS the cache-less server)
+    from repro.serving.semcache import SemanticCacheConfig
+
+    emb = wl.embeddings
+    nn_frac = 0.5
+    sem_arrivals = _neardup_arrivals(np.random.default_rng(seed + 2), qps,
+                                     duration, test_idx, emb, nn_frac)
+    sims = emb[test_idx] @ emb[test_idx].T
+    np.fill_diagonal(sims, -np.inf)
+    nn_best = sims.max(axis=1)
+    sem_thresholds = [round(float(np.quantile(nn_best, q)), 4)
+                      for q in (0.10, 0.50, 0.90)]
+    bench["config"]["semcache"] = dict(thresholds=sem_thresholds,
+                                       nn_frac=nn_frac)
+    base_record, base_cost = None, 0.0
+    for tau in [None] + sem_thresholds + [float("inf")]:
+        sc = (None if tau is None
+              else SemanticCacheConfig(sim_threshold=float(tau)))
+        srv, stats, wall, n_arr = _stream(rb, pool, wl, window_s=WINDOWS[0],
+                                          qps=qps, duration=duration,
+                                          budget_x=budget_x, seed=seed,
+                                          arrivals=sem_arrivals, semcache=sc)
+        record = [(r.rid, r.query_idx, round(r.completed_at, 9), r.model,
+                   round(float(r.utility or 0.0), 9), round(r.cost, 12))
+                  for r in srv.completed]
+        if tau is None:
+            base_record, base_cost = record, stats.total_cost
+        scs = srv.semcache.stats() if srv.semcache is not None else {}
+        hits, sem_misses = int(scs.get("hits", 0)), int(scs.get("misses", 0))
+        label = "off" if tau is None else f"{tau:g}"
+        row = dict(pool=pool_kind, scenario="semcache", window_s=WINDOWS[0],
+                   sim_threshold=None if tau is None else float(tau),
+                   sem_hits=hits, sem_misses=sem_misses,
+                   sem_insertions=int(scs.get("insertions", 0)),
+                   hit_rate=hits / max(1, hits + sem_misses),
+                   utility_loss=float(stats.sem_utility_loss),
+                   eps_bound=(float(srv.semcache.eps_model(float(tau)))
+                              if sc is not None else 0.0),
+                   mean_utility=stats.mean_utility, cost=stats.total_cost,
+                   cost_saved=base_cost - stats.total_cost,
+                   off_identical=bool(record == base_record), wall_s=wall)
+        rows.append(row)
+        bench["semcache_sweep"].append({k: row[k] for k in (
+            "sim_threshold", "sem_hits", "sem_misses", "sem_insertions",
+            "hit_rate", "utility_loss", "eps_bound", "mean_utility", "cost",
+            "cost_saved", "off_identical")})
+        emit(f"online_semcache_{label}", wall / max(1, n_arr) * 1e6,
+             f"hits={hits};hit_rate={row['hit_rate']:.3f};"
+             f"loss={row['utility_loss']:.3f};cost=${stats.total_cost:.5f};"
+             f"saved=${row['cost_saved']:.5f};util={stats.mean_utility:.3f}")
+        assert stats.n_completed == stats.n_submitted, "semcache run lost queries"
+        if tau is not None and np.isfinite(tau):
+            assert hits > 0, f"near-dup stream produced no hits at tau={tau}"
+            # every hit's accounted ε(sim) must respect the threshold's bound:
+            # sim ≥ τ and ε monotone non-increasing ⇒ ε(sim) ≤ ε(τ)
+            for r in srv.completed:
+                if r.sem_hit and (r.utility or 0.0) + r.sem_loss > 0:
+                    eps = r.sem_loss / (r.utility + r.sem_loss)
+                    assert eps <= row["eps_bound"] + 1e-9, \
+                        f"hit ε={eps:.4f} exceeds ε(τ)={row['eps_bound']:.4f}"
+        if tau == float("inf"):
+            assert row["off_identical"], \
+                "threshold=inf serving diverged from the cache-less baseline"
+    assert bench["semcache_sweep"][1]["cost_saved"] > 0, \
+        "the loosest threshold saved no cost on a near-duplicate stream"
 
     save("online_throughput", rows)
     os.makedirs(RESULTS_DIR, exist_ok=True)

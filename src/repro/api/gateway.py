@@ -120,6 +120,20 @@ class Gateway:
             autoscale = None                     # explicit opt-out: fixed pool
         return replace(config, autoscale=autoscale)
 
+    def _resolve_semcache(self, config):
+        """Inject the PoolSpec's declared semantic cache when the caller's
+        ``OnlineConfig`` does not already carry one — spec-level
+        ``semantic_cache=True`` enables it for every serve entry point
+        without threading a config through each call site."""
+        from dataclasses import replace
+
+        if config.semantic_cache is not None:
+            return config
+        semcache = self.spec.pool.semcache_config()
+        if semcache is None:
+            return config
+        return replace(config, semantic_cache=semcache)
+
     def serve(self, arrivals, config, policy: Optional[str] = None,
               pool: Optional[Sequence] = None, live: bool = False,
               clock=None, autoscale=None, metrics=None, **params):
@@ -141,7 +155,7 @@ class Gateway:
             raise ValueError("Gateway.serve(live=True) needs "
                              "OnlineConfig(realtime=True) — a live arrival "
                              "thread cannot pace a virtual clock")
-        config = self._resolve_autoscale(config, autoscale)
+        config = self._resolve_semcache(self._resolve_autoscale(config, autoscale))
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config, clock=clock)
@@ -170,7 +184,7 @@ class Gateway:
         from repro.http.server import HttpFrontend
         from repro.serving.online import OnlineRobatchServer
 
-        config = self._resolve_autoscale(config, autoscale)
+        config = self._resolve_semcache(self._resolve_autoscale(config, autoscale))
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config)

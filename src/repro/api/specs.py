@@ -51,6 +51,8 @@ class PoolSpec:
     replicas: int = 1                # engines per member (ReplicaSet when > 1)
     min_replicas: int = 0            # autoscale floor (0 = unset → 1)
     max_replicas: int = 0            # autoscale ceiling (0 = fixed-size pool)
+    semantic_cache: bool = False     # embedding-space near-duplicate cache
+    sim_threshold: float = 0.92      # cosine hit threshold when enabled
 
     def build(self):
         """Materialize → (workload, pool).
@@ -109,6 +111,17 @@ class PoolSpec:
                   max_replicas=self.max_replicas or max(1, self.replicas))
         kw.update(overrides)
         return AutoscalePolicy(**kw)
+
+    def semcache_config(self, **overrides):
+        """A :class:`~repro.serving.semcache.SemanticCacheConfig` from this
+        spec's flags (``None`` when the spec does not enable the cache)."""
+        if not self.semantic_cache:
+            return None
+        from repro.serving.semcache import SemanticCacheConfig
+
+        kw = dict(sim_threshold=self.sim_threshold)
+        kw.update(overrides)
+        return SemanticCacheConfig(**kw)
 
     def to_dict(self) -> dict:
         return asdict(self)

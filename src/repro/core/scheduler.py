@@ -23,7 +23,7 @@ from repro.core.problem import Assignment
 
 __all__ = ["ScheduleResult", "greedy_schedule", "greedy_schedule_vectorized",
            "greedy_schedule_window", "greedy_schedule_capped", "restrict_space",
-           "take_rows", "brute_force_schedule"]
+           "take_rows", "brute_force_schedule", "attach_free_assignments"]
 
 
 @dataclass
@@ -47,6 +47,31 @@ class ScheduleResult:
     packed_by_member: dict = field(default_factory=dict)
     # ^ model index → queries the capacity pass moved off (or within) that
     #   over-cap member (Σ values == n_packed)
+    n_free: int = 0
+    # ^ zero-cost assignments folded into this round's accounting after the
+    #   frontier walk (semantic-cache hits priced at cost=0, utility
+    #   u·(1−ε(sim)) — see attach_free_assignments)
+    free_utility: float = 0.0
+    # ^ Σ discounted utility of those free assignments (already included in
+    #   est_utility once attached)
+
+
+def attach_free_assignments(res: ScheduleResult,
+                            utilities) -> ScheduleResult:
+    """Fold zero-cost assignments into a window's schedule accounting.
+
+    A semantic-cache hit serves a query at zero marginal cost with utility
+    ``u·(1−ε(sim))`` — the same (cost, utility) currency the frontier walk
+    optimizes, just with a degenerate cost column.  The online server calls
+    this after :func:`greedy_schedule_window` so the round's ``est_utility``
+    covers the hits exactly like any committed upgrade, while
+    ``amortized_cost``/``spent_budget`` are untouched (free assignments draw
+    nothing from the bucket)."""
+    utilities = [float(u) for u in utilities]
+    res.n_free += len(utilities)
+    res.free_utility += sum(utilities)
+    res.est_utility += sum(utilities)
+    return res
 
 
 def greedy_schedule(

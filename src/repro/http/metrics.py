@@ -275,6 +275,20 @@ def bind_server_metrics(registry: MetricsRegistry, server,
                                    "response cache live entries")
     cache_hits = registry.gauge(f"{prefix}_cache_hits_total",
                                 "response cache hits")
+    sem_events = registry.counter(
+        f"{prefix}_semcache_events_total",
+        "semantic cache events (hit/miss/insert/evict/expire)", ("event",))
+    sem_entries = registry.gauge(f"{prefix}_semcache_entries",
+                                 "semantic cache live entries")
+    sem_bytes = registry.gauge(f"{prefix}_semcache_bytes",
+                               "semantic cache stored answer bytes")
+    sem_loss = registry.gauge(
+        f"{prefix}_semcache_utility_loss_sum",
+        "summed calibrated utility-loss estimate u·ε(sim) over hits")
+    sem_sim = registry.histogram(
+        f"{prefix}_semcache_hit_similarity",
+        "cosine similarity of semantic cache hits",
+        buckets=(0.80, 0.84, 0.88, 0.90, 0.92, 0.94, 0.96, 0.98, 0.99, 1.0))
 
     from repro.serving.fault import CircuitState
     state_code = {CircuitState.CLOSED: 0, CircuitState.HALF_OPEN: 1,
@@ -287,14 +301,21 @@ def bind_server_metrics(registry: MetricsRegistry, server,
         breaker_trips.labels(member=name)     # zero-valued child
     trips_seen = [br.n_trips for br in server.breakers]
 
+    # semantic-cache counters are cumulative on the cache object — scrape
+    # deltas per window so a re-bound registry never double-counts
+    sem_seen = {"hit": 0, "miss": 0, "insert": 0, "evict": 0, "expire": 0}
+
     def on_complete(req) -> None:
         if req.dropped:
             completions.labels(outcome="dropped").inc()
         else:
-            outcome = "cache_hit" if req.cache_hit else "served"
+            outcome = ("sem_hit" if req.sem_hit
+                       else "cache_hit" if req.cache_hit else "served")
             completions.labels(outcome=outcome).inc()
             latency.observe(max(0.0, req.latency))
             utility.inc(float(req.utility or 0.0))
+            if req.sem_hit:
+                sem_sim.observe(req.sem_sim)
         if req.model is not None and req.cost:
             cost.labels(member=names[req.model]).inc(req.cost)
 
@@ -305,6 +326,18 @@ def bind_server_metrics(registry: MetricsRegistry, server,
         spent_g.set(server.bucket.total_spent)
         cache_entries.set(len(server.cache))
         cache_hits.set(server.cache.hits)
+        sc = getattr(server, "semcache", None)
+        if sc is not None:
+            sem_entries.set(len(sc))
+            sem_bytes.set(sc.total_bytes)
+            sem_loss.set(sc.utility_loss)
+            for event, total in (("hit", sc.hits), ("miss", sc.misses),
+                                 ("insert", sc.insertions),
+                                 ("evict", sc.evictions),
+                                 ("expire", sc.expirations)):
+                if total > sem_seen[event]:
+                    sem_events.labels(event=event).inc(total - sem_seen[event])
+                    sem_seen[event] = total
         for event, n in (("admitted", rep.n_admitted),
                          ("deferred", rep.n_deferred),
                          ("shed", rep.n_shed), ("failed", rep.n_failed),

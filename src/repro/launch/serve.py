@@ -29,6 +29,13 @@ pressure and drains it back when idle, between ``--min-replicas`` and
     PYTHONPATH=src python -m repro.launch.serve online --qps 40 \
         --autoscale --min-replicas 1 --max-replicas 4
 
+``--semantic-cache`` adds the embedding-space near-duplicate response cache
+(``repro.serving.semcache``) behind the exact-match one; ``--sim-threshold``
+sets its cosine hit threshold (docs/caching.md)::
+
+    PYTHONPATH=src python -m repro.launch.serve online --qps 40 \
+        --semantic-cache --sim-threshold 0.9
+
 ``http`` — the OpenAI-compatible HTTP front-end (``repro.http``): fit the
 same control plane, then serve it over the wire — ``POST
 /v1/chat/completions`` (SSE streaming with ``"stream": true``), ``GET
@@ -195,6 +202,11 @@ def online_main(argv):
                     help="autoscale floor (default 1)")
     ap.add_argument("--max-replicas", type=int, default=None,
                     help="autoscale ceiling (default 4 with --autoscale)")
+    ap.add_argument("--semantic-cache", action="store_true",
+                    help="embedding-space near-duplicate response cache "
+                         "(repro.serving.semcache; see docs/caching.md)")
+    ap.add_argument("--sim-threshold", type=float, default=None,
+                    help="semantic-cache cosine hit threshold (default 0.92)")
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--coreset", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
@@ -217,6 +229,11 @@ def online_main(argv):
         spec.pool.max_replicas = args.max_replicas
     if args.autoscale and spec.pool.max_replicas <= 0:
         spec.pool.max_replicas = 4               # sensible default ceiling
+    if args.semantic_cache:
+        spec.pool.semantic_cache = True
+    if args.sim_threshold is not None:
+        spec.pool.semantic_cache = True
+        spec.pool.sim_threshold = args.sim_threshold
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -268,6 +285,12 @@ def online_main(argv):
     print(f"policy={spec.policy.name} windows={len(stats.windows)} "
           f"deferred={deferred} shed={sum(w.n_shed for w in stats.windows)} "
           f"cache_entries={len(srv.cache)}")
+    if srv.semcache is not None:
+        sc = srv.semcache.stats()
+        print(f"semcache: hits={sc['hits']} misses={sc['misses']} "
+              f"entries={sc['entries']} bytes={sc['bytes']} "
+              f"threshold={srv.semcache.cfg.sim_threshold} "
+              f"utility_loss={sc['utility_loss']:.4f}")
     if srv.autoscaler is not None:
         print(srv.autoscaler.summary())
         for e in srv.autoscaler.events:
@@ -300,6 +323,11 @@ def http_main(argv):
                     help="autoscale floor (default 1)")
     ap.add_argument("--max-replicas", type=int, default=None,
                     help="autoscale ceiling (default 4 with --autoscale)")
+    ap.add_argument("--semantic-cache", action="store_true",
+                    help="embedding-space near-duplicate response cache "
+                         "(repro.serving.semcache; see docs/caching.md)")
+    ap.add_argument("--sim-threshold", type=float, default=None,
+                    help="semantic-cache cosine hit threshold (default 0.92)")
     ap.add_argument("--max-seconds", type=float, default=0.0,
                     help="serve for N wall seconds then exit (0 = until "
                          "SIGINT/SIGTERM)")
@@ -326,6 +354,11 @@ def http_main(argv):
         spec.pool.max_replicas = args.max_replicas
     if args.autoscale and spec.pool.max_replicas <= 0:
         spec.pool.max_replicas = 4
+    if args.semantic_cache:
+        spec.pool.semantic_cache = True
+    if args.sim_threshold is not None:
+        spec.pool.semantic_cache = True
+        spec.pool.sim_threshold = args.sim_threshold
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve http: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -366,6 +399,10 @@ def http_main(argv):
     print(f"serve http: shutdown clean — {fe.n_http_requests} http requests, "
           f"{len(srv.completed)} completed, {len(srv.windows)} windows, "
           f"${srv.bucket.total_spent:.6f} spent", flush=True)
+    if srv.semcache is not None:
+        sc = srv.semcache.stats()
+        print(f"semcache: hits={sc['hits']} misses={sc['misses']} "
+              f"entries={sc['entries']} bytes={sc['bytes']}", flush=True)
     if srv.windows:
         print(f"  last window: {srv.windows[-1].summary()}", flush=True)
 

@@ -37,6 +37,10 @@ Design points:
   query text (docs/batch_format.md), so responses are cacheable by query
   identity; a hit completes immediately and bills zero cost.  Duplicate
   queries *within* one window coalesce onto a single scheduled instance.
+  ``OnlineConfig(semantic_cache=...)`` layers a second, embedding-space cache
+  behind the exact one (:mod:`repro.serving.semcache`): near-duplicate queries
+  above a cosine threshold reuse a cached answer at zero cost, discounted by a
+  calibrated utility-loss estimate ε(sim) — see docs/caching.md.
 * **Virtual time.**  The server is tick-driven on an injectable clock: service
   latencies come from ``BatchResult.latency_s`` (measured for real engines,
   simulated for the calibrated pool), so benchmarks never sleep.
@@ -93,9 +97,10 @@ from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
-from repro.core.scheduler import restrict_space, take_rows
+from repro.core.scheduler import attach_free_assignments, restrict_space, take_rows
 from repro.serving.autoscale import Autoscaler, AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
+from repro.serving.semcache import SemanticCacheConfig
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
            "StreamSink", "WindowReport", "ServerStats", "OnlineRobatchServer",
@@ -194,6 +199,9 @@ class OnlineRequest:
     batch: Optional[int] = None
     cost: float = 0.0                 # this request's share of billed cost
     cache_hit: bool = False
+    sem_hit: bool = False             # served by the semantic (embedding) cache
+    sem_sim: float = 0.0              # cosine similarity of the semantic hit
+    sem_loss: float = 0.0             # calibrated utility-loss estimate u·ε(sim)
     n_reroutes: int = 0
     dropped: bool = False
     content: Optional[str] = None     # final answer text (set at completion)
@@ -277,6 +285,10 @@ class OnlineConfig:
     autoscale: Optional[AutoscalePolicy] = None
     # ^ backlog-driven replica autoscaling (repro.serving.autoscale); None
     #   keeps the pool fixed — only members exposing scale_to participate
+    semantic_cache: Optional[SemanticCacheConfig] = None
+    # ^ embedding-space near-duplicate cache (repro.serving.semcache) probed
+    #   after the exact-match cache and ahead of admission; None (the
+    #   default) keeps the serving path bit-identical to the cache-less plane
 
 
 @dataclass
@@ -286,6 +298,8 @@ class WindowReport:
     t: float
     n_pending: int = 0                # queue depth entering the round
     n_cache_hits: int = 0
+    n_sem_hits: int = 0               # semantic-cache (near-duplicate) hits
+    sem_utility_loss: float = 0.0     # Σ u·ε(sim) the hits were discounted by
     n_coalesced: int = 0              # duplicate queries merged in-window
     n_admitted: int = 0               # scheduled this round
     n_deferred: int = 0               # unaffordable/over-cap, retried next round
@@ -353,11 +367,16 @@ class ServerStats:
     mean_utility: float
     total_cost: float
     budget_allowance: float           # rate·duration + burst capacity
+    n_sem_hits: int = 0               # semantic-cache completions
+    sem_utility_loss: float = 0.0     # Σ u·ε(sim) across those completions
     windows: list = field(default_factory=list)
 
     def summary(self) -> str:
+        cached = f"{self.n_cache_hits} cached"
+        if self.n_sem_hits:
+            cached += f" +{self.n_sem_hits} sem"
         return (f"served {self.n_completed - self.n_dropped}/{self.n_submitted} "
-                f"({self.n_cache_hits} cached, {self.n_dropped} dropped, "
+                f"({cached}, {self.n_dropped} dropped, "
                 f"{self.n_reroutes} reroutes) in {self.duration_s:.1f}s · "
                 f"{self.qps:.1f} qps · p50 {self.latency_p50:.2f}s "
                 f"p99 {self.latency_p99:.2f}s · util {self.mean_utility:.3f} · "
@@ -404,6 +423,12 @@ class OnlineRobatchServer:
         self.now = 0.0
         self.bucket = BudgetBucket(config.budget_per_s, config.burst_s)
         self.cache = ResponseCache(config.cache_entries)
+        self.semcache = None
+        if config.semantic_cache is not None:
+            from repro.serving.semcache import SemanticCache
+
+            self.semcache = SemanticCache.from_artifacts(
+                self.rb, config.semantic_cache)
         self.breakers = [CircuitBreaker(config.breaker, clock=lambda: self.now)
                          for _ in self.pool]
         # replica trackers left on their default wall clock are rebound to the
@@ -561,8 +586,12 @@ class OnlineRobatchServer:
         take = [self.pending.popleft()
                 for _ in range(min(len(self.pending), self.cfg.max_window))]
 
-        # 1. response cache: hits complete immediately and bill nothing
+        # 1. response cache: exact hits complete immediately and bill nothing;
+        #    exact misses probe the semantic cache (embedding-space near
+        #    duplicates), which completes at cost 0 with the discounted
+        #    utility u·(1−ε(sim)) — anything left enters scheduling
         misses: list[OnlineRequest] = []
+        sem_utils: list[float] = []
         for req in take:
             hit = self.cache.get(req.query_idx)
             if hit is not None:
@@ -570,6 +599,19 @@ class OnlineRobatchServer:
                 self._complete(req, at=now, utility=u, model=k, batch=None,
                                cost=0.0, cache_hit=True, content=text)
                 rep.n_cache_hits += 1
+                continue
+            sem = (self.semcache.lookup(req.query_idx, now=now)
+                   if self.semcache is not None else None)
+            if sem is not None:
+                req.sem_hit = True
+                req.sem_sim = sem.similarity
+                req.sem_loss = sem.utility_loss
+                self._complete(req, at=now, utility=sem.utility,
+                               model=sem.model, batch=None, cost=0.0,
+                               cache_hit=True, content=sem.content)
+                rep.n_sem_hits += 1
+                rep.sem_utility_loss += sem.utility_loss
+                sem_utils.append(sem.utility)
             else:
                 misses.append(req)
 
@@ -627,6 +669,11 @@ class OnlineRobatchServer:
         cap_kw = {"caps": caps or None} if self._pw_caps else {}
         wplan = self.policy.plan_window(take_rows(space, np.arange(n_adm)), idx,
                                         avail, **cap_kw)
+        if wplan.schedule is not None and sem_utils:
+            # core-scheduler accounting: semantic hits enter the window's
+            # ScheduleResult as (cost=0, utility=u·(1−ε)) assignments, so
+            # frontier-level utility totals include what the cache served
+            attach_free_assignments(wplan.schedule, sem_utils)
         held_by: dict[int, int] = {}
         packed_by: dict[int, int] = {}
         if wplan.schedule is not None:
@@ -723,6 +770,8 @@ class OnlineRobatchServer:
             for pos, (q, u) in enumerate(zip(members, out.utilities)):
                 text = answers[pos] if answers is not None else None
                 self.cache.put(int(q), (float(u), k, text))
+                if self.semcache is not None:
+                    self.semcache.insert(int(q), float(u), k, text, now=done_at)
                 for req in by_idx[int(q)]:
                     self._complete(req, at=done_at, utility=float(u), model=k,
                                    batch=int(state.batch), cost=share,
@@ -886,6 +935,9 @@ class OnlineRobatchServer:
             mean_utility=float(np.mean([r.utility for r in served])) if served else 0.0,
             total_cost=self.bucket.total_spent,
             budget_allowance=self.bucket.rate * dur + self.bucket.capacity,
+            n_sem_hits=self.semcache.hits if self.semcache is not None else 0,
+            sem_utility_loss=(self.semcache.utility_loss
+                              if self.semcache is not None else 0.0),
             windows=self.windows,
         )
 

@@ -1,0 +1,275 @@
+"""Semantic response cache: thresholded NN lookup in the router's embedding
+space, ε(sim) utility-loss calibration, TTL/LRU eviction under a byte budget,
+and the online-plane wiring (zero-cost completions that reconcile with
+``WindowReport`` telemetry and stay bit-identical when disabled)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import ScheduleResult, attach_free_assignments
+from repro.serving.fault import BreakerPolicy
+from repro.serving.online import OnlineConfig, OnlineRobatchServer
+from repro.serving.semcache import (
+    EpsilonModel,
+    SemanticCache,
+    SemanticCacheConfig,
+)
+
+
+def _cache(rb, **kw):
+    return SemanticCache.from_artifacts(rb, SemanticCacheConfig(**kw))
+
+
+def _nn_pairs(wl, min_sim, n=8):
+    """(query, neighbor, sim) triples from the test split with sim >= min_sim,
+    most-similar first."""
+    test = wl.subset_indices("test")
+    emb = wl.embeddings[test]
+    sims = emb @ emb.T
+    np.fill_diagonal(sims, -np.inf)
+    nn = np.argmax(sims, axis=1)
+    best = sims[np.arange(len(test)), nn]
+    order = np.argsort(-best)
+    out = []
+    for p in order:
+        if best[p] < min_sim or len(out) >= n:
+            break
+        out.append((int(test[p]), int(test[nn[p]]), float(best[p])))
+    return out
+
+
+def _server(rb, pool, wl, *, semcache=None, qps=40.0, budget_x=3.0,
+            window_s=0.25):
+    test = wl.subset_indices("test")
+    base = float(rb.cost_model.state_cost(0, rb.calibrations[0].b_effect,
+                                          test).mean())
+    cfg = OnlineConfig(budget_per_s=qps * base * budget_x, window_s=window_s,
+                       breaker=BreakerPolicy(failure_threshold=1,
+                                             recovery_time_s=1e9),
+                       semantic_cache=semcache)
+    return OnlineRobatchServer(rb, pool, wl, cfg)
+
+
+# ---------------------------------------------------------------------------
+# ε(sim) calibration
+# ---------------------------------------------------------------------------
+
+def test_epsilon_model_monotone_nonincreasing_and_clipped(fitted_rb):
+    eps = _cache(fitted_rb).eps_model
+    assert np.all(np.diff(eps.eps_grid) <= 1e-12)
+    sims = np.linspace(-1.0, 1.0, 101)
+    vals = np.array([eps(s) for s in sims])
+    assert np.all((0.0 <= vals) & (vals <= 1.0))
+    # the property the bench loss bound leans on: sim >= tau => eps <= eps(tau)
+    assert np.all(np.diff(vals) <= 1e-12)
+
+
+def test_epsilon_model_degenerate_similarity_spread():
+    emb = np.tile(np.array([[1.0, 0.0]]), (8, 1)).astype(np.float32)
+    util = np.linspace(0, 1, 8)[:, None] * np.ones((8, 3))
+    eps = EpsilonModel.fit(emb, util, n_pairs=64, n_bins=4, seed=0)
+    assert 0.0 <= eps(1.0) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# cache mechanics: hit/miss/threshold boundary, TTL, LRU byte budget
+# ---------------------------------------------------------------------------
+
+def test_self_hit_is_priced_with_epsilon(fitted_rb):
+    sc = _cache(fitted_rb, sim_threshold=0.9)
+    q = int(fitted_rb.wl.subset_indices("test")[0])
+    sc.insert(q, 0.8, 1, "answer")
+    hit = sc.lookup(q)
+    assert hit is not None and hit.source_idx == q
+    assert hit.similarity == pytest.approx(1.0, abs=1e-5)
+    eps = sc.eps_model(hit.similarity)
+    assert hit.epsilon == pytest.approx(eps)
+    assert hit.utility == pytest.approx(0.8 * (1 - eps))
+    assert hit.utility_loss == pytest.approx(0.8 * eps)
+    assert hit.model == 1 and hit.content == "answer"
+    assert sc.hits == 1 and sc.utility_loss == pytest.approx(hit.utility_loss)
+
+
+def test_threshold_boundary_straddles_measured_similarity(fitted_rb, agnews):
+    (q, nn, sim), = _nn_pairs(agnews, 0.8, n=1)
+    below = _cache(fitted_rb, sim_threshold=sim - 1e-4)
+    above = _cache(fitted_rb, sim_threshold=sim + 1e-4)
+    for sc in (below, above):
+        sc.insert(nn, 0.7, 0, "cached")
+    assert below.lookup(q) is not None
+    assert above.lookup(q) is None
+    assert below.hits == 1 and above.misses == 1
+
+
+def test_inf_threshold_disables_lookup_and_insert(fitted_rb):
+    sc = _cache(fitted_rb, sim_threshold=float("inf"))
+    q = int(fitted_rb.wl.subset_indices("test")[0])
+    sc.insert(q, 0.9, 0, "x")
+    assert len(sc) == 0 and sc.insertions == 0
+    assert sc.lookup(q) is None
+    assert sc.hits == 0 and sc.misses == 0   # not even a counted miss
+
+
+def test_ttl_expires_entries_on_the_serving_timeline(fitted_rb):
+    sc = _cache(fitted_rb, sim_threshold=0.99, ttl_s=1.0)
+    q = int(fitted_rb.wl.subset_indices("test")[0])
+    sc.insert(q, 0.9, 0, "x", now=0.0)
+    assert sc.lookup(q, now=0.5) is not None
+    assert sc.lookup(q, now=1.5) is None
+    assert sc.expirations == 1 and len(sc) == 0
+
+
+def test_lru_eviction_under_byte_budget(fitted_rb):
+    test = fitted_rb.wl.subset_indices("test")
+    sc = _cache(fitted_rb, sim_threshold=2.0, max_bytes=3 * 200)
+    for k in range(4):
+        sc.insert(int(test[k]), 0.5, 0, "a" * (200 - 96))
+    assert sc.evictions == 1 and len(sc) == 3
+    assert int(test[0]) not in sc._entries          # oldest evicted first
+    assert sc.total_bytes <= sc.cfg.max_bytes
+    # a lookup hit refreshes recency: make test[1] most-recent, then insert —
+    # test[2] (now the LRU entry) is the one evicted
+    sc2 = _cache(fitted_rb, sim_threshold=0.0, max_bytes=2 * 200)
+    sc2.insert(int(test[1]), 0.5, 0, "a" * 104)
+    sc2.insert(int(test[2]), 0.5, 0, "a" * 104)
+    assert sc2.lookup(int(test[1])).source_idx == int(test[1])
+    sc2.insert(int(test[3]), 0.5, 0, "a" * 104)
+    assert int(test[2]) not in sc2._entries
+    assert int(test[1]) in sc2._entries
+
+
+def test_oversize_entry_is_not_stored(fitted_rb):
+    sc = _cache(fitted_rb, sim_threshold=0.9, max_bytes=128)
+    q = int(fitted_rb.wl.subset_indices("test")[0])
+    sc.insert(q, 0.9, 0, "a" * 4096)
+    assert len(sc) == 0 and sc.total_bytes == 0
+
+
+def test_lsh_index_hits_agree_with_brute_force(fitted_rb, agnews):
+    pairs = _nn_pairs(agnews, 0.8)
+    brute = _cache(fitted_rb, sim_threshold=0.8)
+    lsh = _cache(fitted_rb, sim_threshold=0.8, index="lsh")
+    for _q, nn, _s in pairs:
+        brute.insert(nn, 0.6, 0, "c")
+        lsh.insert(nn, 0.6, 0, "c")
+    n_agree = 0
+    for q, _nn, _s in pairs:
+        b, l = brute.lookup(q), lsh.lookup(q)
+        if l is not None:                    # LSH trades a little recall
+            assert b is not None
+            assert l.similarity <= b.similarity + 1e-6
+            assert l.similarity >= lsh.cfg.sim_threshold
+            n_agree += 1
+    assert n_agree > 0, "LSH probe found no near-duplicates at all"
+
+
+# ---------------------------------------------------------------------------
+# scheduler accounting
+# ---------------------------------------------------------------------------
+
+def test_attach_free_assignments_accounting():
+    res = ScheduleResult(assignment=None, est_utility=2.0, amortized_cost=0.5,
+                         spent_budget=0.5, n_upgrades=0, infeasible=False)
+    out = attach_free_assignments(res, [0.5, 0.25])
+    assert out is res
+    assert res.n_free == 2
+    assert res.free_utility == pytest.approx(0.75)
+    assert res.est_utility == pytest.approx(2.75)
+    assert res.amortized_cost == pytest.approx(0.5)   # hits cost nothing
+
+
+# ---------------------------------------------------------------------------
+# online-plane wiring
+# ---------------------------------------------------------------------------
+
+def _neardup_arrivals(wl, min_sim=0.8, n=8):
+    """Each neighbor arrives two windows after its source was served."""
+    arr = []
+    for k, (q, nn, _s) in enumerate(_nn_pairs(wl, min_sim, n=n)):
+        arr.append((k * 2.0 + 0.1, nn))
+        arr.append((k * 2.0 + 1.1, q))
+    return sorted(arr)
+
+
+def test_sem_hits_complete_at_zero_cost_and_reconcile(fitted_rb, agnews, pool):
+    srv = _server(fitted_rb, pool, agnews,
+                  semcache=SemanticCacheConfig(sim_threshold=0.8))
+    stats = srv.run(_neardup_arrivals(agnews))
+    srv.close()
+    sem = [r for r in srv.completed if r.sem_hit]
+    assert sem and stats.n_sem_hits == len(sem)
+    for r in sem:
+        assert r.cost == 0.0 and r.cache_hit and not r.dropped
+        assert r.sem_sim >= 0.8
+        assert r.content is not None
+    assert sum(w.n_sem_hits for w in stats.windows) == len(sem)
+    assert (sum(w.sem_utility_loss for w in stats.windows)
+            == pytest.approx(sum(r.sem_loss for r in sem)))
+    assert stats.sem_utility_loss == pytest.approx(sum(r.sem_loss for r in sem))
+    # free assignments folded into the windows' schedule accounting
+    assert srv.semcache.stats()["hits"] == len(sem)
+
+
+def test_inf_threshold_server_is_bit_identical_to_no_cache(fitted_rb, agnews,
+                                                           pool):
+    arrivals = _neardup_arrivals(agnews)
+
+    def record(semcache):
+        srv = _server(fitted_rb, pool, agnews, semcache=semcache)
+        srv.run(list(arrivals))
+        srv.close()
+        return [(r.rid, r.query_idx, r.completed_at, r.utility, r.model,
+                 r.batch, r.cost, r.cache_hit) for r in srv.completed]
+
+    off = record(None)
+    inf = record(SemanticCacheConfig(sim_threshold=float("inf")))
+    assert off == inf
+
+
+def test_seeded_stream_serves_deterministically(fitted_rb, agnews, pool):
+    arrivals = _neardup_arrivals(agnews)
+
+    def run():
+        srv = _server(fitted_rb, pool, agnews,
+                      semcache=SemanticCacheConfig(sim_threshold=0.8))
+        srv.run(list(arrivals))
+        srv.close()
+        return ([(r.rid, r.query_idx, r.completed_at, r.utility, r.model,
+                  r.cost, r.sem_hit, r.sem_sim, r.sem_loss)
+                 for r in srv.completed], srv.semcache.stats())
+
+    a, b = run(), run()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# spec / gateway plumbing
+# ---------------------------------------------------------------------------
+
+def test_poolspec_semcache_roundtrip_and_config():
+    from repro.api import PoolSpec, RunSpec
+
+    spec = RunSpec(pool=PoolSpec(semantic_cache=True, sim_threshold=0.88))
+    back = RunSpec.from_json(spec.to_json())
+    assert back.pool.semantic_cache is True
+    assert back.pool.sim_threshold == 0.88
+    cfg = back.pool.semcache_config()
+    assert isinstance(cfg, SemanticCacheConfig)
+    assert cfg.sim_threshold == 0.88
+    assert PoolSpec().semcache_config() is None
+
+
+def test_gateway_injects_spec_declared_semcache(fitted_rb, agnews, pool):
+    from repro.api import Gateway, PoolSpec, RunSpec
+
+    gw = Gateway.from_spec(RunSpec(pool=PoolSpec(
+        task="agnews", n_train=192, n_val=48, n_test=96,
+        semantic_cache=True, sim_threshold=0.8)))
+    gw.fit()
+    cfg = gw._resolve_semcache(OnlineConfig(budget_per_s=1.0))
+    assert cfg.semantic_cache is not None
+    assert cfg.semantic_cache.sim_threshold == 0.8
+    # an explicit config wins over the spec's declaration
+    explicit = OnlineConfig(budget_per_s=1.0,
+                            semantic_cache=SemanticCacheConfig(
+                                sim_threshold=0.95))
+    assert gw._resolve_semcache(explicit).semantic_cache.sim_threshold == 0.95

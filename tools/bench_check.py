@@ -90,6 +90,13 @@ TOLERANCES = {
     "latency_p50_s": 0.80,
     "latency_p99_s": 0.80,
     "ttfc_p50_s": 0.80,
+    # semcache_sweep: the hit counters are EXACT (seeded stream, deterministic
+    # embedding space); these bands absorb float drift in the utility/cost
+    # accounting the hits feed into
+    "hit_rate": 0.25,
+    "utility_loss": 0.30,
+    "eps_bound": 0.25,
+    "cost_saved": 0.50,
 }
 # counter metrics sit near 0 in healthy baselines, where a purely relative
 # band degenerates to [0, 0]; the tolerance is taken over max(|baseline|,
@@ -114,6 +121,9 @@ ABS_FLOOR = {
     "latency_p50_s": 0.2,
     "latency_p99_s": 0.5,
     "ttfc_p50_s": 0.2,
+    "hit_rate": 0.05,
+    "utility_loss": 1.0,
+    "cost_saved": 1e-5,
 }
 EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          "replicas", "window_s", "phase", "max_replicas", "end_replicas",
@@ -127,7 +137,12 @@ EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          # http_serving: wire-contract counters — every request must complete
          # and every stream must carry exactly 2 content chunks on the
          # deterministic simulated pool; any drift is a framing/demux change
-         "scenario", "mode", "clients", "total_chunks"}
+         "scenario", "mode", "clients", "total_chunks",
+         # semcache_sweep: seeded near-dup stream over a deterministic
+         # embedding space — hit/miss/insert counts and the off-vs-inf
+         # bit-identity flag are behaviour-change tripwires
+         "sim_threshold", "sem_hits", "sem_misses", "sem_insertions",
+         "off_identical"}
 
 UPDATE_HINT = ("if the change is intentional, refresh the baseline: "
                "BENCH_QUICK=1 python benchmarks/online_throughput.py "
@@ -152,11 +167,13 @@ def _rows(section):
 
 def _key(row: dict) -> tuple:
     # window_s/replicas/phase key the online sections; slots/k/path key the
-    # engine_decode sweep; mode/clients key the http_serving matrix (absent
-    # fields stay None, so keys never collide across sections)
+    # engine_decode sweep; mode/clients key the http_serving matrix;
+    # sim_threshold keys the semcache sweep (absent fields stay None, so keys
+    # never collide across sections)
     return (row.get("window_s"), row.get("replicas"), row.get("phase"),
             row.get("slots"), row.get("k"), row.get("path"),
-            row.get("mode"), row.get("clients"))
+            row.get("mode"), row.get("clients"),
+            repr(row.get("sim_threshold")))
 
 
 def compare(current: dict, baseline: dict) -> list[str]:

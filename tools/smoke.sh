@@ -37,6 +37,13 @@ done
 python -m repro.launch.serve online --realtime --duration 3 --qps 10 \
     --n-train 128 --coreset 32 --replicas 2
 
+# semantic cache: embedding-space near-duplicate hits priced at u·(1−ε(sim))
+# (docs/caching.md) — the launcher must print its hit/miss summary line
+SEM_OUT=$(python -m repro.launch.serve online --semantic-cache \
+    --sim-threshold 0.85 --qps 20 --duration 5 --n-train 128 --coreset 32)
+echo "$SEM_OUT"
+echo "$SEM_OUT" | grep -q "^semcache: hits="
+
 # HTTP front-end: ephemeral port, one streamed SSE completion + /metrics via
 # curl, then SIGTERM — the launcher must report a clean shutdown
 HTTP_LOG=$(mktemp)
