@@ -21,7 +21,7 @@ QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 # every writer (online_throughput.py, engine_decode.py AND http_serving.py
 # merge into the same file; a per-script constant would make the schema
 # order-dependent)
-BENCH_SCHEMA = 6          # 6: semcache_sweep leg (semantic-cache thresholds)
+BENCH_SCHEMA = 7          # 7: speculative-decode leg (engine_decode spec rows)
 
 
 @functools.lru_cache(maxsize=32)

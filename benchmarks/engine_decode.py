@@ -16,7 +16,16 @@ What it measures (real wall time, CPU):
 * **paged vs. contiguous KV** — ``serve()`` on the shared-prefix batch at
   slots=8/K=8 under both cache layouts: tokens/s, peak KV bytes, and the
   pool's share/fork counters.  Bit-identical greedy outputs and a strictly
-  lower paged peak are asserted in-process, so they gate the CI bench job.
+  lower paged peak are asserted in-process, so they gate the CI bench job;
+* **routed speculative decode** — a trained tiny-s drafting ``spec_k=8``
+  tokens per round for a trained tiny-m target
+  (:class:`repro.serving.speculative.SpeculativeEngine`) on an
+  accept-friendly in-distribution batch-prompt stream, vs. the target engine
+  decoding alone.  Training is a FIXED 120 steps (never QUICK-scaled): the
+  accept rate — and with it the round/draft/accept/bonus counters the gate
+  compares exactly — depends on how far the two models have converged toward
+  agreeing.  Bit-identical outputs and a >= 1.3x single-stream speedup are
+  asserted in-process.
 
 Results join the blocking bench gate: the ``engine_decode`` section (and an
 ``engine`` config block) is merged into ``results/bench/BENCH_online.json``,
@@ -86,6 +95,109 @@ def _run(eng, tok, slots, max_new, fused, repeats):
                   eng.n_prefill_calls - p0, n_tok)
         best = max(best, n_tok / dt)
     return best, counts
+
+
+# routed speculative decode: configuration is LOCKED — training steps, stream
+# shape and spec_k together determine the accept rate, and the gate compares
+# the resulting round/draft/accept counters exactly
+SPEC_TRAIN_STEPS = 120              # fixed; NOT scaled down under BENCH_QUICK
+SPEC_K = 8
+SPEC_STREAMS = 16                   # batch prompts in the stream
+SPEC_B = 5                          # queries per batch prompt (training max is 6:
+#                                     out-of-distribution widths crater accept)
+SPEC_MAX_NEW = 16
+SPEC_PAGE = 16
+
+
+def _spec_requests(fmt, rng):
+    from repro.serving.engine import Request as Req
+    from repro.serving.tinypool import gen_query
+
+    reqs = []
+    for i in range(SPEC_STREAMS):
+        qs = [gen_query(rng)[0] for _ in range(SPEC_B)]
+        reqs.append(Req(rid=i, tokens=fmt.format(qs), max_new=SPEC_MAX_NEW))
+    return reqs
+
+
+def _spec_leg(repeats):
+    """Speculative vs. target-only decode on the accept-friendly stream.
+
+    tiny-s drafts for tiny-m; both are trained (fixed step count) on the
+    batch-prompt addition task so the draft actually agrees with the target —
+    untrained weights accept near 0 and the leg would measure pure overhead.
+    The stream is in-distribution (b=5 queries per prompt, inside the
+    training formatter's 1..6 range) so the answers are the deterministic
+    short digit strings both models learned.  Outputs must be bit-identical
+    to the target decoding alone (deterministic-match acceptance), and at
+    slots=1 the speedup must clear 1.3x — both asserted here, inside the
+    blocking bench job."""
+    import numpy as np
+
+    from repro.serving.batcher import BatchPromptFormatter
+    from repro.serving.speculative import SpeculativeEngine
+    from repro.serving.tinypool import SYSTEM_PROMPT, train_engines
+
+    fmt = BatchPromptFormatter(SYSTEM_PROMPT)
+    engines = train_engines(np.random.default_rng(0), fmt, SPEC_TRAIN_STEPS,
+                            names=("tiny-s", "tiny-m"), verbose=False)
+    draft, target = engines["tiny-s"][0], engines["tiny-m"][0]
+
+    rows, speedups = [], {}
+    for slots in SLOT_COUNTS:
+        tgt = ServingEngine(target.model, target.params, max_slots=slots,
+                            max_len=MAX_LEN, decode_block=SPEC_K,
+                            paged=True, page_size=SPEC_PAGE)
+        spec = SpeculativeEngine(target.model, target.params,
+                                 draft.model, draft.params, max_slots=slots,
+                                 max_len=MAX_LEN, spec_k=SPEC_K,
+                                 page_size=SPEC_PAGE)
+        legs = {}
+        for path, eng in (("spec_target", tgt), ("spec", spec)):
+            eng.serve(_spec_requests(fmt, np.random.default_rng(42)))  # warm
+            best = 0.0
+            for _ in range(repeats):
+                reqs = _spec_requests(fmt, np.random.default_rng(42))
+                t0 = time.perf_counter()
+                eng.serve(reqs)
+                dt = time.perf_counter() - t0
+                n_tok = sum(len(r.out_tokens) for r in reqs)
+                best = max(best, n_tok / dt)
+            legs[path] = (best, [r.out_tokens for r in reqs], n_tok)
+        assert legs["spec"][1] == legs["spec_target"][1], (
+            "speculative decode diverged from the target-only engine — "
+            "deterministic-match acceptance must be bit-identical")
+        tps_t, _, n_tok = legs["spec_target"]
+        tps_s = legs["spec"][0]
+        speedups[slots] = tps_s / tps_t
+        rows.append(dict(slots=slots, k=SPEC_K, path="spec_target",
+                         tokens_per_s=tps_t, gen_tokens=n_tok))
+        # per-(repeats+warm) cumulative counters divide evenly: every serve()
+        # of the seeded stream takes the identical rounds/accepts
+        n_runs = repeats + 1
+        assert spec.n_rounds % n_runs == 0
+        rows.append(dict(slots=slots, k=SPEC_K, path="spec",
+                         tokens_per_s=tps_s, gen_tokens=n_tok,
+                         speedup=tps_s / tps_t,
+                         accept_rate=spec.accept_rate(),
+                         rounds=spec.n_rounds // n_runs,
+                         drafted=spec.n_drafted // n_runs,
+                         accepted=spec.n_accepted // n_runs,
+                         bonus=spec.n_bonus // n_runs))
+        emit(f"engine_spec_s{slots}_k{SPEC_K}", 1e6 / tps_s,
+             f"tok/s={tps_s:.0f};target={tps_t:.0f};"
+             f"speedup={tps_s / tps_t:.2f}x;accept={spec.accept_rate():.2f}")
+
+    # the routed-speculation contract on this hardware class (CPU): the
+    # trained tiny-s draft must buy the tiny-m target >= 1.3x single-stream
+    # decode throughput on the accept-friendly stream, and must never cost
+    # more than ~10% at any swept slot count
+    assert speedups[1] >= 1.3, (
+        f"speculative decode at slots=1 is only {speedups[1]:.2f}x the "
+        f"target-only path (needs >= 1.3x)")
+    assert min(speedups.values()) >= 0.9, (
+        f"speculative decode regressed below target-only: {speedups}")
+    return rows
 
 
 def _admission(model, params, tok, slots, repeats):
@@ -187,6 +299,7 @@ def run(max_new: int | None = None, repeats: int | None = None, seed: int = 3):
                  f"dispatches={calls};steps={steps}")
 
     rows += _kv_leg(model, params, tok, max_new, repeats)
+    rows += _spec_leg(repeats)
 
     adm = _admission(model, params, tok, max(SLOT_COUNTS), repeats)
     rows.append(dict(slots=max(SLOT_COUNTS), path="admission", k=0,
@@ -205,7 +318,11 @@ def run(max_new: int | None = None, repeats: int | None = None, seed: int = 3):
     save("engine_decode", rows)
     _merge_into_gate(rows, dict(max_len=MAX_LEN, max_new=max_new, seed=seed,
                                 slot_counts=list(SLOT_COUNTS),
-                                k_sweep=list(K_SWEEP), arch="tiny-s"))
+                                k_sweep=list(K_SWEEP), arch="tiny-s",
+                                spec=dict(train_steps=SPEC_TRAIN_STEPS,
+                                          spec_k=SPEC_K, streams=SPEC_STREAMS,
+                                          b=SPEC_B, max_new=SPEC_MAX_NEW,
+                                          draft="tiny-s", target="tiny-m")))
     return rows
 
 

@@ -120,6 +120,21 @@ class Gateway:
             autoscale = None                     # explicit opt-out: fixed pool
         return replace(config, autoscale=autoscale)
 
+    def _resolve_generation(self, config):
+        """Inject the PoolSpec's declared default GenerationConfig when the
+        caller's ``OnlineConfig`` does not already carry one — spec-level
+        sampling fields (``temperature``/``top_k``/``top_p``/``gen_seed``)
+        then apply to every serve entry point, exactly like the semantic
+        cache's spec-level enablement."""
+        from dataclasses import replace
+
+        if config.generation is not None:
+            return config
+        gen = self.spec.pool.generation_config()
+        if gen is None:
+            return config
+        return replace(config, generation=gen)
+
     def _resolve_semcache(self, config):
         """Inject the PoolSpec's declared semantic cache when the caller's
         ``OnlineConfig`` does not already carry one — spec-level
@@ -155,7 +170,8 @@ class Gateway:
             raise ValueError("Gateway.serve(live=True) needs "
                              "OnlineConfig(realtime=True) — a live arrival "
                              "thread cannot pace a virtual clock")
-        config = self._resolve_semcache(self._resolve_autoscale(config, autoscale))
+        config = self._resolve_generation(
+            self._resolve_semcache(self._resolve_autoscale(config, autoscale)))
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config, clock=clock)
@@ -184,7 +200,8 @@ class Gateway:
         from repro.http.server import HttpFrontend
         from repro.serving.online import OnlineRobatchServer
 
-        config = self._resolve_semcache(self._resolve_autoscale(config, autoscale))
+        config = self._resolve_generation(
+            self._resolve_semcache(self._resolve_autoscale(config, autoscale)))
         pol = self.policy(policy, **params)
         srv = OnlineRobatchServer(pol, pool if pool is not None else pol.exec_pool,
                                   self.wl, config)

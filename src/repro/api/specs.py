@@ -53,6 +53,13 @@ class PoolSpec:
     max_replicas: int = 0            # autoscale ceiling (0 = fixed-size pool)
     semantic_cache: bool = False     # embedding-space near-duplicate cache
     sim_threshold: float = 0.92      # cosine hit threshold when enabled
+    draft_member: str = ""           # tiny: cheap member that drafts for the
+    #   more expensive ones (routed speculative decoding); "" = off
+    spec_k: int = 4                  # speculation depth when drafting
+    temperature: float = 0.0         # default sampling knobs for real members
+    top_k: int = 0                   # (0/1.0 defaults = greedy legacy path)
+    top_p: float = 1.0
+    gen_seed: int = 0                # PRNG seed for sampled decoding
 
     def build(self):
         """Materialize → (workload, pool).
@@ -74,6 +81,9 @@ class PoolSpec:
                              f"replicas={self.replicas}/min_replicas="
                              f"{self.min_replicas}")
         scalable = self.max_replicas > 0
+        if self.draft_member and self.kind != "tiny":
+            raise ValueError("PoolSpec.draft_member needs kind='tiny' — only "
+                             "real engines can speculative-decode")
         if self.kind == "simulated":
             from repro.data import make_simulated_pool, make_workload
 
@@ -95,7 +105,9 @@ class PoolSpec:
                                              n_train=self.n_train,
                                              n_test=self.n_test,
                                              replicas=self.replicas,
-                                             scalable=scalable)
+                                             scalable=scalable,
+                                             draft_member=self.draft_member,
+                                             spec_k=self.spec_k)
             return wl, pool
         raise ValueError(f"PoolSpec.kind must be 'simulated' or 'tiny', "
                          f"got {self.kind!r}")
@@ -111,6 +123,21 @@ class PoolSpec:
                   max_replicas=self.max_replicas or max(1, self.replicas))
         kw.update(overrides)
         return AutoscalePolicy(**kw)
+
+    def generation_config(self, **overrides):
+        """A :class:`~repro.serving.generation.GenerationConfig` from this
+        spec's sampling fields (``None`` when every field is at its greedy
+        default and no override is given — the legacy bit-identical path)."""
+        unset = (self.temperature == 0.0 and self.top_k == 0
+                 and self.top_p == 1.0)
+        if unset and not overrides:
+            return None
+        from repro.serving.generation import GenerationConfig
+
+        kw = dict(temperature=self.temperature, top_k=self.top_k,
+                  top_p=self.top_p, seed=self.gen_seed)
+        kw.update(overrides)
+        return GenerationConfig(**kw)
 
     def semcache_config(self, **overrides):
         """A :class:`~repro.serving.semcache.SemanticCacheConfig` from this

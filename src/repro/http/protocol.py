@@ -51,15 +51,50 @@ class ApiError(Exception):
                           "code": self.status}}
 
 
+# OpenAI chat-completions fields this plane cannot honor: the batch-prompt
+# engine produces exactly one choice per query and exposes no token-level
+# logprobs, and penalty/bias knobs have no analogue in the fused sampler.
+# Sending one is a structured 400, not a silent ignore (docs/architecture.md
+# documents the supported subset).
+_UNSUPPORTED_FIELDS = ("logprobs", "top_logprobs", "logit_bias", "tools",
+                      "tool_choice", "functions", "function_call", "stop",
+                      "presence_penalty", "frequency_penalty")
+
+
+def _number(body: dict, key: str, lo: float, hi: float, default):
+    v = body.get(key)
+    if v is None:
+        return default
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise ApiError(400, f"'{key}' must be a number")
+    if not lo <= float(v) <= hi:
+        raise ApiError(400, f"'{key}' must be in [{lo}, {hi}], got {v}")
+    return float(v)
+
+
 def parse_chat_body(raw: bytes) -> dict:
     """Decode and structurally validate a chat-completions request body;
-    returns ``{"content", "stream", "model", "query_idx"}``."""
+    returns ``{"content", "stream", "model", "query_idx", "gen"}`` where
+    ``gen`` is a :class:`repro.serving.generation.GenerationConfig` when the
+    request carries any sampling field (``temperature``/``top_p``/``seed``/
+    ``max_tokens``) and ``None`` otherwise (server-default generation).
+    Unsupported OpenAI fields are rejected with a structured 400."""
     try:
         body = json.loads(raw.decode("utf-8"))
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
         raise ApiError(400, f"request body is not valid JSON: {e}")
     if not isinstance(body, dict):
         raise ApiError(400, "request body must be a JSON object")
+    for key in _UNSUPPORTED_FIELDS:
+        if body.get(key) is not None:
+            raise ApiError(400, f"'{key}' is not supported by this server; "
+                                "see docs/architecture.md for the supported "
+                                "request subset", "unsupported_field_error")
+    n = body.get("n")
+    if n is not None and n != 1:
+        raise ApiError(400, "'n' must be 1: the batch-prompt plane returns "
+                            "exactly one choice per query",
+                       "unsupported_field_error")
     messages = body.get("messages")
     if not isinstance(messages, list) or not messages:
         raise ApiError(400, "'messages' must be a non-empty array")
@@ -73,8 +108,29 @@ def parse_chat_body(raw: bytes) -> dict:
     query_idx = body.get("query_idx")
     if query_idx is not None and not isinstance(query_idx, int):
         raise ApiError(400, "'query_idx' must be an integer when present")
+    temperature = _number(body, "temperature", 0.0, 2.0, None)
+    top_p = _number(body, "top_p", 0.0, 1.0, None)
+    if top_p == 0.0:
+        raise ApiError(400, "'top_p' must be > 0")
+    seed = body.get("seed")
+    if seed is not None and (isinstance(seed, bool) or not isinstance(seed, int)):
+        raise ApiError(400, "'seed' must be an integer when present")
+    max_tokens = body.get("max_tokens", body.get("max_completion_tokens"))
+    if max_tokens is not None and (isinstance(max_tokens, bool)
+                                   or not isinstance(max_tokens, int)
+                                   or max_tokens < 1):
+        raise ApiError(400, "'max_tokens' must be a positive integer")
+    gen = None
+    if any(v is not None for v in (temperature, top_p, seed, max_tokens)):
+        from repro.serving.generation import GenerationConfig
+
+        gen = GenerationConfig(
+            max_new=max_tokens if max_tokens is not None else 32,
+            temperature=temperature if temperature is not None else 0.0,
+            top_p=top_p if top_p is not None else 1.0,
+            seed=seed if seed is not None else 0)
     return {"content": content, "stream": bool(body.get("stream", False)),
-            "model": body.get("model"), "query_idx": query_idx}
+            "model": body.get("model"), "query_idx": query_idx, "gen": gen}
 
 
 def resolve_query_idx(parsed: dict, universe, text_index: dict) -> int:

@@ -124,9 +124,9 @@ class _Handler(BaseHTTPRequestHandler):
             parsed = parse_chat_body(self.rfile.read(length))
             q = resolve_query_idx(parsed, fe.universe, fe.text_index)
             if parsed["stream"]:
-                self._stream_completion(q, path, t0)
+                self._stream_completion(q, path, t0, parsed["gen"])
             else:
-                self._unary_completion(q, path, t0)
+                self._unary_completion(q, path, t0, parsed["gen"])
         except ApiError as e:
             self._send_json(e.status, e.body(), path)
         except (BrokenPipeError, ConnectionResetError):
@@ -139,9 +139,10 @@ class _Handler(BaseHTTPRequestHandler):
         fe = self.server.frontend
         return fe.server.pool[req.model].name if req.model is not None else None
 
-    def _unary_completion(self, q: int, path: str, t0: float) -> None:
+    def _unary_completion(self, q: int, path: str, t0: float,
+                          gen=None) -> None:
         fe = self.server.frontend
-        req = fe.server.submit_request(q, stream=False)
+        req = fe.server.submit_request(q, stream=False, gen=gen)
         if not req.done_event.wait(fe.request_timeout_s):
             raise ApiError(504, "request timed out in the serving queue",
                            "timeout_error")
@@ -153,9 +154,10 @@ class _Handler(BaseHTTPRequestHandler):
         if fe._http_latency is not None:
             fe._http_latency.labels(mode="unary").observe(time.perf_counter() - t0)
 
-    def _stream_completion(self, q: int, path: str, t0: float) -> None:
+    def _stream_completion(self, q: int, path: str, t0: float,
+                           gen=None) -> None:
         fe = self.server.frontend
-        req = fe.server.submit_request(q, stream=True)
+        req = fe.server.submit_request(q, stream=True, gen=gen)
         self.send_response(200)
         self.send_header("Content-Type", "text/event-stream")
         self.send_header("Cache-Control", "no-cache")

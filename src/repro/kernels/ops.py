@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 
-__all__ = ["flash_attention", "decode_attention", "paged_attention", "wkv6",
-           "rglru_scan"]
+__all__ = ["flash_attention", "decode_attention", "paged_attention",
+           "span_attention", "paged_span_attention", "wkv6", "rglru_scan"]
 
 
 def _on_tpu() -> bool:
@@ -201,6 +201,53 @@ def _paged_jnp(q, k_pool, v_pool, table, lengths):
     k = k.reshape(B, n_tab * ps, *k.shape[3:])
     v = v.reshape(B, n_tab * ps, *v.shape[3:])
     return _decode_jnp(q, k, v, lengths)
+
+
+# ---------------------------------------------------------------------------
+# span decode attention (a short run of S new tokens in one dispatch —
+# speculative-decode verification)
+# ---------------------------------------------------------------------------
+
+def span_attention(q, k, v, base_len, *, backend: Optional[str] = None,
+                   interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, Smax, Hk, D); base_len: (B,) valid KV length
+    *before* the span.  Query position ``i`` attends to ``base_len + i + 1``
+    keys (causal within the span; the span's own K/V must already be written
+    into the buffers).
+
+    Implemented as an unrolled loop of per-position :func:`_decode_jnp` calls
+    (S is the speculation depth — single digits), so every position computes
+    the *identical* masked-softmax expression as the one-token decode path and
+    the two agree bitwise.  There is no Pallas variant; the TPU backend also
+    takes this path (XLA fuses the unrolled positions into one dispatch).
+    """
+    del backend, interpret
+    S = q.shape[1]
+    outs = [_decode_jnp(q[:, i:i + 1], k, v, base_len + (i + 1))
+            for i in range(S)]
+    return jnp.concatenate(outs, axis=1)                       # (B, S, H, D)
+
+
+def paged_span_attention(q, k_pool, v_pool, table, base_len, *,
+                         backend: Optional[str] = None,
+                         interpret: bool = False):
+    """Paged variant of :func:`span_attention` — q: (B, S, H, D);
+    k_pool/v_pool: (P, page, Hk, D); table: (B, n_pages) int32; base_len: (B,)
+    valid KV length before the span.  One page gather serves all S positions;
+    per-position masking reuses the flash-decode reduction bit-for-bit.
+    """
+    del backend, interpret
+    P, ps = k_pool.shape[0], k_pool.shape[1]
+    B, n_tab = table.shape
+    safe = jnp.clip(table, 0, P - 1)
+    k = jnp.take(k_pool, safe, axis=0).reshape(B, n_tab * ps,
+                                               *k_pool.shape[2:])
+    v = jnp.take(v_pool, safe, axis=0).reshape(B, n_tab * ps,
+                                               *v_pool.shape[2:])
+    S = q.shape[1]
+    outs = [_decode_jnp(q[:, i:i + 1], k, v, base_len + (i + 1))
+            for i in range(S)]
+    return jnp.concatenate(outs, axis=1)
 
 
 # ---------------------------------------------------------------------------

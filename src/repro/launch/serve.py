@@ -81,6 +81,20 @@ def engine_main(argv):
                     help="tokens per KV page in the paged layout")
     ap.add_argument("--reduced", action="store_true",
                     help="serve the reduced (smoke) config of a big arch")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep the k highest-probability tokens (0 = all)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = all)")
+    ap.add_argument("--gen-seed", type=int, default=0,
+                    help="PRNG seed for sampled decoding (same seed ⇒ "
+                         "bit-identical streams at any decode block/slot count)")
+    ap.add_argument("--draft-member", default="",
+                    help="arch whose model drafts for --arch via speculative "
+                         "decoding (e.g. tiny-s drafting for tiny-m)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculation depth with --draft-member")
     args = ap.parse_args(argv)
 
     import jax
@@ -90,6 +104,7 @@ def engine_main(argv):
     from repro.models.transformer import Model
     from repro.serving.batcher import BatchPromptFormatter
     from repro.serving.engine import Request, ServingEngine
+    from repro.serving.generation import GenerationConfig
 
     cfg = get_arch(args.arch)
     if args.reduced or cfg.param_count() > 5e7:
@@ -104,18 +119,40 @@ def engine_main(argv):
         print(f"{cfg.name}: paged KV needs a decoder-only global-attention "
               f"stack; falling back to the contiguous layout")
         paged = False
-    engine = ServingEngine(model, params, max_slots=args.slots,
-                           max_len=args.max_len, decode_block=args.decode_block,
-                           paged=paged, page_size=args.page_size)
+    if args.draft_member:
+        from repro.serving.speculative import SpeculativeEngine
+
+        dcfg = get_arch(args.draft_member)
+        if not paged:
+            raise SystemExit("--draft-member needs the paged KV layout "
+                             "(drop --contiguous)")
+        dmodel = Model(dcfg, ShardingConfig(remat="none"))
+        dparams = dmodel.init(jax.random.PRNGKey(0))
+        engine = SpeculativeEngine(model, params, dmodel, dparams,
+                                   max_slots=args.slots, max_len=args.max_len,
+                                   spec_k=args.spec_k,
+                                   page_size=args.page_size)
+    else:
+        engine = ServingEngine(model, params, max_slots=args.slots,
+                               max_len=args.max_len,
+                               decode_block=args.decode_block,
+                               paged=paged, page_size=args.page_size)
     fmt = BatchPromptFormatter("Answer each question.")
 
+    gen = None
+    if args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0:
+        gen = GenerationConfig(max_new=args.max_new,
+                               temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p,
+                               seed=args.gen_seed)
     rng = np.random.default_rng(0)
     prompts = []
     for i in range(args.requests):
         qs = [f"{rng.integers(0, 99)}+{rng.integers(0, 99)}"
               for _ in range(max(args.batch_prompt, 1))]
         prompts.append(fmt.format(qs) if args.batch_prompt else fmt.tokenizer.encode(qs[0]))
-    reqs = [Request(rid=i, tokens=p, max_new=args.max_new) for i, p in enumerate(prompts)]
+    reqs = [Request(rid=i, tokens=p, max_new=args.max_new, gen=gen)
+            for i, p in enumerate(prompts)]
 
     t0 = time.time()
     engine.serve(reqs)
@@ -130,9 +167,45 @@ def engine_main(argv):
         print(f"  kv pages: {occ['pages_used']}/{occ['n_pages']} live "
               f"(peak {occ['peak_pages']}), {occ['prefix_shares']} prefix "
               f"shares, {occ['cow_forks']} CoW forks")
+    if hasattr(engine, "accept_rate"):
+        print(f"  speculative: k={engine.spec_k} rounds={engine.n_rounds} "
+              f"accept={engine.accept_rate():.2f} bonus={engine.n_bonus}")
     for r in reqs[:3]:
         print(f"  req{r.rid}: prompt {len(r.tokens)} toks -> "
               f"{tok.decode(r.out_tokens)[:48]!r}")
+
+
+def _add_generation_flags(ap):
+    """Shared online/http sampling + speculative-decoding flags (they land on
+    the PoolSpec, so --spec files can declare the same fields)."""
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="default sampling temperature for real pool members "
+                         "(0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus sampling mass (1.0 = all)")
+    ap.add_argument("--gen-seed", type=int, default=None,
+                    help="PRNG seed for sampled decoding")
+    ap.add_argument("--draft-member", default=None,
+                    help="tiny pool: cheap member that drafts for the more "
+                         "expensive ones (routed speculative decoding)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculation depth with --draft-member (default 4)")
+
+
+def _apply_generation_flags(prog, spec, args):
+    if args.temperature is not None:
+        spec.pool.temperature = args.temperature
+    if args.top_p is not None:
+        spec.pool.top_p = args.top_p
+    if args.gen_seed is not None:
+        spec.pool.gen_seed = args.gen_seed
+    if args.draft_member is not None:
+        if spec.pool.kind != "tiny":
+            raise SystemExit(f"{prog}: --draft-member needs the tiny real "
+                             f"pool (kind='tiny'), not {spec.pool.kind!r}")
+        spec.pool.draft_member = args.draft_member
+    if args.spec_k is not None:
+        spec.pool.spec_k = args.spec_k
 
 
 def _online_spec(args):
@@ -207,6 +280,7 @@ def online_main(argv):
                          "(repro.serving.semcache; see docs/caching.md)")
     ap.add_argument("--sim-threshold", type=float, default=None,
                     help="semantic-cache cosine hit threshold (default 0.92)")
+    _add_generation_flags(ap)
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--coreset", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
@@ -234,6 +308,7 @@ def online_main(argv):
     if args.sim_threshold is not None:
         spec.pool.semantic_cache = True
         spec.pool.sim_threshold = args.sim_threshold
+    _apply_generation_flags("serve online", spec, args)
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -328,6 +403,7 @@ def http_main(argv):
                          "(repro.serving.semcache; see docs/caching.md)")
     ap.add_argument("--sim-threshold", type=float, default=None,
                     help="semantic-cache cosine hit threshold (default 0.92)")
+    _add_generation_flags(ap)
     ap.add_argument("--max-seconds", type=float, default=0.0,
                     help="serve for N wall seconds then exit (0 = until "
                          "SIGINT/SIGTERM)")
@@ -359,6 +435,7 @@ def http_main(argv):
     if args.sim_threshold is not None:
         spec.pool.semantic_cache = True
         spec.pool.sim_threshold = args.sim_threshold
+    _apply_generation_flags("serve http", spec, args)
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve http: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")

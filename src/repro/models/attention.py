@@ -166,6 +166,60 @@ def attention_decode(p, cfg: ModelConfig, x, cache, *, window: Optional[int] = N
     return out, new_cache
 
 
+def attention_span(p, cfg: ModelConfig, x, cache, *, flags=None):
+    """S-token decode in one dispatch (speculative-decode verification).
+
+    x: (B, S, d); cache: {"k","v","len"(B,)} with ``len`` the valid length
+    *before* the span.  All S new K/V entries are written first, then query
+    position ``i`` attends causally to ``len + i + 1`` keys — numerically the
+    write-then-masked-read order is indistinguishable from S sequential
+    :func:`attention_decode` steps (future keys are masked to exact zeros).
+    Global attention only (no ring buffer, no cross).  Returns
+    (out, new_cache) with ``len`` advanced by S.
+    """
+    B, S, d = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fl = flags or {}
+    q = _heads(apply_dense(p["q"], x), H, hd)
+    k_new = _heads(apply_dense(p["k"], x), Hk, hd)
+    v_new = _heads(apply_dense(p["v"], x), Hk, hd)
+    q, k_new = _qk_normalize(p, q, k_new, cfg.norm_eps)
+    pos = cache["len"]                                  # (B,) span base
+    positions = pos[:, None] + jnp.arange(S)[None, :]   # (B, S)
+    if cfg.rope_type != "none":
+        if cfg.rope_type == "mrope":
+            pos3 = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+            q = apply_rope(q, pos3, cfg)
+            k_new = apply_rope(k_new, pos3, cfg)
+        else:
+            q = apply_rope(q, positions, cfg)
+            k_new = apply_rope(k_new, positions, cfg)
+    table = fl.get("kv_table")
+    if table is not None:
+        P, ps = cache["k"].shape[0], cache["k"].shape[1]
+        n_cols = table.shape[1]
+        page = positions // ps                          # (B, S)
+        phys = jnp.where(
+            page < n_cols,
+            table[jnp.arange(B)[:, None], jnp.minimum(page, n_cols - 1)], P)
+        k_buf = cache["k"].at[phys, positions % ps].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        v_buf = cache["v"].at[phys, positions % ps].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
+        out = ops.paged_span_attention(q, k_buf, v_buf, table, pos,
+                                       backend=fl.get("backend"))
+        out = apply_dense(p["o"], out.reshape(B, S, H * hd))
+        return out, {"k": k_buf, "v": v_buf, "len": pos + S}
+    bidx = jnp.arange(B)[:, None]
+    k_buf = cache["k"].at[bidx, positions].set(k_new.astype(cache["k"].dtype),
+                                               mode="drop")
+    v_buf = cache["v"].at[bidx, positions].set(v_new.astype(cache["v"].dtype),
+                                               mode="drop")
+    out = ops.span_attention(q, k_buf, v_buf, pos, backend=fl.get("backend"))
+    out = apply_dense(p["o"], out.reshape(B, S, H * hd))
+    return out, {"k": k_buf, "v": v_buf, "len": pos + S}
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   window: Optional[int] = None, dtype=jnp.bfloat16):
     S = min(window, max_len) if window is not None else max_len

@@ -212,6 +212,26 @@ def _block_step(p, cfg: ModelConfig, kind: str, x, cache, flags=None):
     return x, new_cache
 
 
+def _block_span(p, cfg: ModelConfig, kind: str, x, cache, flags=None):
+    """S-token decode (speculative verification).  Mirrors :func:`_block_step`
+    for global-attention blocks; other kinds have stateful recurrences that a
+    parallel span cannot reproduce step-exactly, so they are rejected."""
+    flags = flags or {}
+    norm = lambda pn, h: apply_norm(pn, h, cfg.norm, cfg.norm_eps)
+    if kind != "attn":
+        raise ValueError(f"decode_span supports global-attention blocks only, "
+                         f"got {kind!r}")
+    self_cache = {kk: cache[kk] for kk in ("k", "v", "len")}
+    a, new_cache = attn_mod.attention_span(p["attn"], cfg, norm(p["n1"], x),
+                                           self_cache, flags=flags)
+    x = x + a
+    if "cross" in p:
+        raise ValueError("decode_span does not support cross-attention")
+    h, _ = _mlp_or_moe(p["mlp"], cfg, norm(p["n2"], x), flags)
+    x = x + h
+    return x, new_cache
+
+
 # ---------------------------------------------------------------------------
 # cache specs (abstract; concrete init via jnp.zeros of the same shapes)
 # ---------------------------------------------------------------------------
@@ -583,6 +603,42 @@ class Model:
             new_cache["blocks"] = nblocks
         for j, kind in enumerate(self.rem_kinds):
             x, nc = _block_step(params[f"rem{j}"], cfg, kind, x, cache[f"rem{j}"], flags=flags)
+            new_cache[f"rem{j}"] = nc
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    def decode_span(self, params, tokens, cache, table=None):
+        """tokens: (B, S) int32 — a short run of S new tokens appended in ONE
+        dispatch, returning per-position logits (B, S, V).  The speculative
+        verify pass: one fused target forward scores all drafted tokens.
+
+        Causality within the span is enforced by masking (each position sees
+        only earlier keys), so the result matches S sequential
+        :meth:`decode_step` calls bitwise.  Global-attention decoder-only
+        models (the paged-cache constraint); ``table`` as in ``decode_step``.
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, tokens)
+        flags = {**self._flags(), "moe_exact": True}
+        if table is not None:
+            flags["kv_table"] = table
+        new_cache: dict = {}
+        if self.n_groups > 0:
+            def group_body(h, xs):
+                gp, gc = xs
+                gp = _weight_barrier(gp)
+                new_gc = {}
+                for i, kind in enumerate(self.pattern):
+                    h, nc = _block_span(gp[f"b{i}"], cfg, kind, h, gc[f"b{i}"],
+                                        flags=flags)
+                    new_gc[f"b{i}"] = nc
+                return h, new_gc
+
+            x, nblocks = jax.lax.scan(group_body, x, (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = nblocks
+        for j, kind in enumerate(self.rem_kinds):
+            x, nc = _block_span(params[f"rem{j}"], cfg, kind, x, cache[f"rem{j}"],
+                                flags=flags)
             new_cache[f"rem{j}"] = nc
         logits = self._logits(params, x)
         return logits, new_cache

@@ -1,5 +1,6 @@
 from repro.serving.batcher import BatchPromptFormatter
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, sample_tokens
+from repro.serving.generation import GenerationConfig
 from repro.serving.fault import (
     BreakerPolicy,
     CircuitBreaker,
@@ -24,3 +25,4 @@ from repro.serving.online import (
     poisson_arrivals,
 )
 from repro.serving.pool import ReplicaSet, ServedPoolMember, TextTask, replicate_simulated
+from repro.serving.speculative import SpeculativeEngine

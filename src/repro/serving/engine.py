@@ -41,7 +41,44 @@ import numpy as np
 
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.transformer import Model
+from repro.serving.generation import GenerationConfig
 from repro.serving.kvpool import PagedCacheManager
+
+
+def sample_tokens(logits, keys, temp, top_k, top_p):
+    """Temperature/top-k/top-p sampling, one token per row.
+
+    ``logits``: (B, V) float32; ``keys``: (B, 2) uint32 per-row PRNG keys
+    (already folded with the stream position); ``temp``/``top_k``/``top_p``:
+    (B,) per-row knobs.  Rows with ``temp <= 0`` take the greedy argmax —
+    bit-identical to the plain argmax path, so mixed greedy/sampled batches
+    are safe.  The filtering order is standard: temperature-scale, sort
+    descending, intersect the top-k rank mask with the nucleus mask (the
+    rank-0 token is always kept), then sample categorically over the
+    survivors.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, key, t, k, p):
+        scaled = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        order = jnp.argsort(-scaled)                    # descending, stable
+        sl = scaled[order]
+        ranks = jnp.arange(sl.shape[-1], dtype=jnp.int32)
+        keep = jnp.where(k > 0, ranks < k, True)
+        probs = jax.nn.softmax(sl)
+        keep &= (jnp.cumsum(probs) - probs) < p         # mass *before* token
+        idx = jax.random.categorical(key, jnp.where(keep, sl, -jnp.inf))
+        return order[idx].astype(jnp.int32)
+
+    sampled = jax.vmap(one)(logits, keys, temp, top_k, top_p)
+    return jnp.where(temp > 0.0, sampled, greedy)
+
+
+def _fold_keys(keys, n):
+    """Per-row ``fold_in``: key i is folded with stream position ``n[i]`` —
+    the determinism pivot (see ``GenerationConfig``): position, never the
+    dispatch step, so outputs are invariant to K/slot/replica placement."""
+    return jax.vmap(jax.random.fold_in)(keys, n)
 
 
 @dataclass
@@ -60,6 +97,10 @@ class Request:
     #   decode block (so the cadence is exactly ``decode_block`` tokens).
     #   Args: the freshly appended token ids and whether the request is done.
     #   Called from the serving thread; sinks must not block.
+    gen: Optional[GenerationConfig] = None
+    # ^ unified generation knobs; None (the deprecation shim) synthesizes a
+    #   greedy config from the legacy ``max_new`` field — bit-identical to
+    #   the pre-GenerationConfig engine.
 
 
 class ServingEngine:
@@ -158,8 +199,11 @@ class ServingEngine:
                 return leaf.ndim - 3
             return None
 
-        @partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
-        def _decode_k(horizon, params, cache, last_tok, active, n_out, limit):
+        @partial(jax.jit, static_argnums=(0,), static_argnames=("sample",),
+                 donate_argnums=(2,))
+        def _decode_k(horizon, params, cache, last_tok, active, n_out, limit,
+                      keys=None, temp=None, top_k=None, top_p=None, *,
+                      sample=False):
             """K decode steps fused in one dispatch.
 
             Device state per slot: ``last_tok`` (next input token), ``active``
@@ -180,6 +224,15 @@ class ServingEngine:
             tested against the full-horizon stepwise path); a retired slot's
             garbage stream may run past the horizon, where its writes drop
             out of bounds — admission rebuilds the row from prefill anyway.
+
+            ``sample`` (static) switches the on-device token choice from
+            greedy argmax to :func:`sample_tokens`; ``keys`` (max_slots, 2)
+            are per-slot PRNG base keys folded with the position counter
+            ``n`` carried through the scan — token t of a stream is a pure
+            function of (seed, t).  With ``sample=False`` the traced graph
+            is exactly the greedy one (the sampling args are never touched),
+            so all-greedy serving stays bit-identical to the pre-sampling
+            engine.
             """
             def shrink(leaf):
                 ax = _seq_axis(leaf)
@@ -198,7 +251,11 @@ class ServingEngine:
             def step(carry, _):
                 sc, last, act, n = carry
                 logits, sc = model.decode_step(params, last[:, None], sc)
-                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                if sample:
+                    nxt = sample_tokens(logits[:, 0], _fold_keys(keys, n),
+                                        temp, top_k, top_p)
+                else:
+                    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
                 n = n + act.astype(jnp.int32)
                 done = act & ((nxt == self.eos_id) | (n >= limit))
                 last = jnp.where(act, nxt, last)
@@ -272,20 +329,27 @@ class ServingEngine:
 
         self._fork_pages = _fork_pages
 
-        @partial(jax.jit, donate_argnums=(1,))
-        def _decode_k_paged(params, cache, table, last_tok, active, n_out, limit):
+        @partial(jax.jit, static_argnames=("sample",), donate_argnums=(1,))
+        def _decode_k_paged(params, cache, table, last_tok, active, n_out,
+                            limit, keys=None, temp=None, top_k=None,
+                            top_p=None, *, sample=False):
             """Paged twin of ``_decode_k``: same fused K-step scan, same
             donated in-place cache, but attention walks ``table`` (already
             sliced host-side to the bucketed horizon's column count, which
             bounds both per-step attention cost and jit variants — the paged
             analogue of the contiguous horizon slice).  No seq-axis shrink:
-            the pool is shared, the table IS the horizon.
+            the pool is shared, the table IS the horizon.  Sampling args as
+            in ``_decode_k``.
             """
             def step(carry, _):
                 sc, last, act, n = carry
                 logits, sc = model.decode_step(params, last[:, None], sc,
                                                table=table)
-                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                if sample:
+                    nxt = sample_tokens(logits[:, 0], _fold_keys(keys, n),
+                                        temp, top_k, top_p)
+                else:
+                    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
                 n = n + act.astype(jnp.int32)
                 done = act & ((nxt == self.eos_id) | (n >= limit))
                 last = jnp.where(act, nxt, last)
@@ -297,6 +361,31 @@ class ServingEngine:
             return cache, act, toks, valid
 
         self._decode_k_paged = _decode_k_paged
+
+        @jax.jit
+        def _pick_tokens(logits, keys, n, temp, top_k, top_p):
+            # one sampled token per row at stream position ``n`` — the
+            # admission first-token and stepwise-driver analogue of the
+            # in-scan sampling (identical fold-in, so fused/stepwise agree)
+            return sample_tokens(logits, _fold_keys(keys, n), temp, top_k,
+                                 top_p)
+
+        self._pick_tokens = _pick_tokens
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def _set_lens(cache, lens):
+            # speculative-decode rollback: reset every per-slot KV length
+            # leaf ((..., max_slots) int32) to ``lens`` — pages past the new
+            # length are dropped host-side by the block-table truncation, so
+            # no KV bytes move
+            def fix(leaf):
+                if (leaf.dtype == jnp.int32 and leaf.ndim >= 1
+                        and leaf.shape[-1] == self.max_slots):
+                    return jnp.broadcast_to(lens.astype(jnp.int32), leaf.shape)
+                return leaf
+            return jax.tree.map(fix, cache)
+
+        self._set_lens = _set_lens
 
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -388,7 +477,28 @@ class ServingEngine:
                                          jnp.asarray(lengths), self.max_len)
             self.n_prefill_calls += 1
             self.cache = self._insert_many(self.cache, rows, jnp.asarray(slot_arr))
-        first = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        gens = [self._gen_of(r) for r in reqs]
+        if any(not g.greedy for g in gens):
+            # sampled first token: stream position 0, same fold-in as every
+            # later position — padding rows of the bucket stay greedy
+            rows_n = int(logits.shape[0])
+            keys = np.zeros((rows_n, 2), dtype=np.uint32)
+            temp = np.zeros(rows_n, dtype=np.float32)
+            top_k = np.zeros(rows_n, dtype=np.int32)
+            top_p = np.ones(rows_n, dtype=np.float32)
+            for j, (req, g) in enumerate(zip(reqs, gens)):
+                if g.greedy:
+                    continue
+                keys[j] = self._base_key(req)
+                temp[j] = g.temperature
+                top_k[j] = g.top_k
+                top_p[j] = g.top_p
+            first = np.asarray(self._pick_tokens(
+                logits[:, 0], jnp.asarray(keys),
+                jnp.zeros(rows_n, jnp.int32), jnp.asarray(temp),
+                jnp.asarray(top_k), jnp.asarray(top_p)))
+        else:
+            first = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         now = time.time()
         for req, slot, f in zip(reqs, slots, first):
             self.slot_req[slot] = req
@@ -425,6 +535,25 @@ class ServingEngine:
     def _active_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    @staticmethod
+    def _gen_of(req: Request) -> GenerationConfig:
+        """Effective generation config: the request's, or (deprecation shim)
+        a greedy one synthesized from the legacy ``max_new`` field."""
+        if req.gen is not None:
+            return req.gen
+        return GenerationConfig(max_new=req.max_new)
+
+    @staticmethod
+    def _base_key(req: Request) -> np.ndarray:
+        """Per-request PRNG base key (cached on the request — admission to
+        retirement, every driver folds the same base with the position)."""
+        key = getattr(req, "_prng_base", None)
+        if key is None:
+            seed = ServingEngine._gen_of(req).seed
+            key = np.asarray(jax.random.PRNGKey(seed), dtype=np.uint32)
+            req._prng_base = key
+        return key
+
     def _slot_state(self):
         """Host view of the device decode state, rebuilt from the requests
         each fused call — the host bookkeeping stays authoritative."""
@@ -438,23 +567,54 @@ class ServingEngine:
             last[i] = req.out_tokens[-1]
             act[i] = True
             n_out[i] = len(req.out_tokens)
-            limit[i] = min(req.max_new, self.max_len - 1 - len(req.tokens))
+            limit[i] = min(self._gen_of(req).max_new,
+                           self.max_len - 1 - len(req.tokens))
         return last, act, n_out, limit
 
-    def _prepare_paged(self, active: list[int], horizon: int):
+    def _sampling_state(self):
+        """Per-slot sampling arrays for the fused/stepwise dispatch; rows of
+        greedy requests stay at (temp=0, key=0) and take the argmax branch
+        inside :func:`sample_tokens`.  ``sample`` is False iff every live
+        request is greedy — the dispatch then omits the sampling args
+        entirely and runs the exact pre-sampling graph."""
+        keys = np.zeros((self.max_slots, 2), dtype=np.uint32)
+        temp = np.zeros(self.max_slots, dtype=np.float32)
+        top_k = np.zeros(self.max_slots, dtype=np.int32)
+        top_p = np.ones(self.max_slots, dtype=np.float32)
+        sample = False
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            g = self._gen_of(req)
+            if g.greedy:
+                continue
+            sample = True
+            keys[i] = self._base_key(req)
+            temp[i] = g.temperature
+            top_k[i] = g.top_k
+            top_p[i] = g.top_p
+        return sample, keys, temp, top_k, top_p
+
+    def _prepare_paged(self, active: list[int], horizon: int,
+                       offset: int = 0):
         """Page maintenance before one paged decode dispatch: grow every
         active slot's table to cover its next ``decode_block`` writes, CoW-
         fork any still-shared page in that write range (one fused device
         copy for the whole tick), and upload the table sliced to the
         horizon's column count — the slice is what bounds per-step attention
-        cost, playing the role of the contiguous path's seq-axis shrink."""
+        cost, playing the role of the contiguous path's seq-axis shrink.
+
+        ``offset`` shifts the first write position relative to the default
+        ``prompt + emitted``: the speculative engine passes −1 because its
+        dispatches re-feed the last emitted token (whose KV was rolled back
+        or never written), so the write range starts one position earlier."""
         ps = self.page_size
         cap = self.kv.pages_per_slot * ps
         src: list[int] = []
         dst: list[int] = []
         for i in active:
             req = self.slot_req[i]
-            ln = len(req.tokens) + len(req.out_tokens)
+            ln = len(req.tokens) + len(req.out_tokens) + offset
             end = min(ln + self.decode_block, cap)
             self.kv.extend_slot(i, -(-end // ps))
             s, d = self.kv.fork_for_write(i, ln, end)
@@ -512,6 +672,12 @@ class ServingEngine:
             if not active:
                 continue
             last, act, n_out, limit = self._slot_state()
+            sample, keys, temp, top_k, top_p = self._sampling_state()
+            kw = {}
+            if sample:
+                kw = dict(keys=jnp.asarray(keys), temp=jnp.asarray(temp),
+                          top_k=jnp.asarray(top_k), top_p=jnp.asarray(top_p),
+                          sample=True)
             live = max(len(self.slot_req[i].tokens) + len(self.slot_req[i].out_tokens)
                        for i in active)
             horizon = min(self.max_len, self._bucket_len(live + self.decode_block))
@@ -519,11 +685,13 @@ class ServingEngine:
                 table = self._prepare_paged(active, horizon)
                 self.cache, act_f, toks, valid = self._decode_k_paged(
                     self.params, self.cache, table, jnp.asarray(last),
-                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
+                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit),
+                    **kw)
             else:
                 self.cache, act_f, toks, valid = self._decode_k(
                     horizon, self.params, self.cache, jnp.asarray(last),
-                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit))
+                    jnp.asarray(act), jnp.asarray(n_out), jnp.asarray(limit),
+                    **kw)
             self.n_decode_calls += 1
             self.n_decode_steps += self.decode_block
             toks = np.asarray(toks)
@@ -566,12 +734,23 @@ class ServingEngine:
             logits, self.cache = self._decode(self.params, jnp.asarray(last), self.cache)
             self.n_decode_calls += 1
             self.n_decode_steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            sample, keys, temp, top_k, top_p = self._sampling_state()
+            if sample:
+                n_arr = np.zeros(self.max_slots, dtype=np.int32)
+                for i in active:
+                    n_arr[i] = len(self.slot_req[i].out_tokens)
+                nxt = np.asarray(self._pick_tokens(
+                    logits[:, 0], jnp.asarray(keys), jnp.asarray(n_arr),
+                    jnp.asarray(temp), jnp.asarray(top_k),
+                    jnp.asarray(top_p)))
+            else:
+                nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             for i in active:
                 req = self.slot_req[i]
                 req.out_tokens.append(int(nxt[i]))
                 total_len = len(req.tokens) + len(req.out_tokens)
-                if (int(nxt[i]) == self.eos_id or len(req.out_tokens) >= req.max_new
+                if (int(nxt[i]) == self.eos_id
+                        or len(req.out_tokens) >= self._gen_of(req).max_new
                         or total_len >= self.max_len - 1):
                     self._retire(i)
                 if req.on_tokens is not None:
@@ -579,8 +758,14 @@ class ServingEngine:
         return requests
 
     # convenience --------------------------------------------------------
-    def generate_text(self, prompts: list[str], max_new: int = 32) -> list[str]:
-        reqs = [Request(rid=i, tokens=self.tok.encode(p), max_new=max_new)
+    def generate_text(self, prompts: list[str], max_new: int = 32,
+                      gen: Optional[GenerationConfig] = None) -> list[str]:
+        """``gen`` supersedes the legacy ``max_new`` kwarg when given (the
+        deprecation shim keeps ``max_new=`` callers bit-identical)."""
+        if gen is not None:
+            max_new = gen.max_new
+        reqs = [Request(rid=i, tokens=self.tok.encode(p), max_new=max_new,
+                        gen=gen)
                 for i, p in enumerate(prompts)]
         self.serve(reqs)
         outs = []

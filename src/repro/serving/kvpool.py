@@ -199,6 +199,22 @@ class PagedCacheManager:
             new.append(p)
         return new
 
+    def truncate_slot(self, slot: int, n_tokens: int) -> int:
+        """Shrink ``slot``'s table to cover exactly ``n_tokens`` positions,
+        releasing every page past ``ceil(n_tokens / page_size)`` — the
+        speculative-decode rollback: a rejected draft suffix disappears by
+        dropping table references, never by copying KV bytes.  Returns how
+        many pages actually went back to the free list (shared pages only
+        drop a reference)."""
+        keep = -(-n_tokens // self.page_size) if n_tokens > 0 else 0
+        pages = self.slot_pages[slot]
+        freed = 0
+        while len(pages) > keep:
+            p = pages.pop()
+            freed += self.alloc.release(p)
+            self.table[slot, len(pages)] = self.alloc.n_pages
+        return freed
+
     def fork_for_write(self, slot: int, first_pos: int, last_pos: int):
         """Make every page covering positions ``[first_pos, last_pos)`` of
         ``slot`` private, forking shared ones.  Returns ``(src, dst)`` page

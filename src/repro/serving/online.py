@@ -100,6 +100,7 @@ import numpy as np
 from repro.core.scheduler import attach_free_assignments, restrict_space, take_rows
 from repro.serving.autoscale import Autoscaler, AutoscalePolicy
 from repro.serving.fault import BreakerPolicy, CircuitBreaker, CircuitState
+from repro.serving.generation import GenerationConfig
 from repro.serving.semcache import SemanticCacheConfig
 
 __all__ = ["OnlineRequest", "OnlineConfig", "BudgetBucket", "ResponseCache",
@@ -207,6 +208,12 @@ class OnlineRequest:
     content: Optional[str] = None     # final answer text (set at completion)
     stream: Optional[StreamSink] = None   # live delta channel (submit_request)
     done_event: Optional[threading.Event] = None  # set when _complete runs
+    gen: Optional["GenerationConfig"] = None  # per-request sampling override
+    #   (None → the server's OnlineConfig.generation, then the member default)
+
+    @property
+    def sampled(self) -> bool:
+        return self.gen is not None and not self.gen.greedy
 
     @property
     def latency(self) -> float:
@@ -289,6 +296,10 @@ class OnlineConfig:
     # ^ embedding-space near-duplicate cache (repro.serving.semcache) probed
     #   after the exact-match cache and ahead of admission; None (the
     #   default) keeps the serving path bit-identical to the cache-less plane
+    generation: Optional[GenerationConfig] = None
+    # ^ server-wide default GenerationConfig forwarded to real pool members;
+    #   per-request OnlineRequest.gen overrides it, None keeps every member
+    #   on its own default (the legacy greedy path, bit-identical)
 
 
 @dataclass
@@ -473,12 +484,15 @@ class OnlineRobatchServer:
             return req
 
     def submit_request(self, query_idx: int, *, stream: bool = False,
-                       at: Optional[float] = None) -> OnlineRequest:
+                       at: Optional[float] = None,
+                       gen: Optional[GenerationConfig] = None) -> OnlineRequest:
         """Live-ingress submit: the request carries a ``done_event`` the
         caller can block on, and (with ``stream=True``) a :class:`StreamSink`
         receiving per-decode-block text deltas.  Arrival time defaults to the
         bridge timeline when :meth:`run_bridge` is running, else the server's
-        current tick."""
+        current tick.  ``gen`` overrides the server's default
+        :class:`GenerationConfig` for this request (sampled requests bypass
+        the response caches — a cached sample is not a fresh draw)."""
         if at is None and self._bridge_t0 is not None:
             at = self.clock.now() - self._bridge_t0
         with self._submit_lock:
@@ -487,7 +501,8 @@ class OnlineRobatchServer:
             req = OnlineRequest(rid=self._next_rid, query_idx=int(query_idx),
                                 arrived_at=self.now if at is None else at,
                                 done_event=threading.Event(),
-                                stream=StreamSink() if stream else None)
+                                stream=StreamSink() if stream else None,
+                                gen=gen)
             self._next_rid += 1
             self.pending.append(req)
             return req
@@ -545,8 +560,30 @@ class OnlineRobatchServer:
         if self.on_complete is not None:
             self.on_complete(req)
 
-    def _invoke(self, k: int, members: np.ndarray, streams=None):
+    def _sampled(self, req: OnlineRequest) -> bool:
+        """Does this request decode stochastically?  Its own gen wins; with
+        none attached the server-wide default decides."""
+        if req.gen is not None:
+            return not req.gen.greedy
+        return (self.cfg.generation is not None
+                and not self.cfg.generation.greedy)
+
+    def _group_gen(self, members: np.ndarray, by_idx) -> Optional[GenerationConfig]:
+        """The GenerationConfig one dispatched batch group decodes under: the
+        first per-request override in FCFS order, else the server default.
+        Coalesced duplicates and co-batched queries share the group's single
+        generation (one batch prompt is one decode stream)."""
+        for q in members:
+            for req in by_idx[int(q)]:
+                if req.gen is not None:
+                    return req.gen
+        return self.cfg.generation
+
+    def _invoke(self, k: int, members: np.ndarray, streams=None, gen=None):
         kw = {"streams": streams} if streams else {}
+        if gen is not None and getattr(self.pool[k], "supports_generation",
+                                       False):
+            kw["gen"] = gen
         if getattr(self.pool[k], "thread_safe", False):
             # ReplicaSets serialize per replica internally — concurrent groups
             # on one member are exactly what the replicas are for
@@ -593,6 +630,11 @@ class OnlineRobatchServer:
         misses: list[OnlineRequest] = []
         sem_utils: list[float] = []
         for req in take:
+            if self._sampled(req):
+                # a cached answer is one past draw — sampled requests want a
+                # fresh one, so they skip both caches (lookup AND insert)
+                misses.append(req)
+                continue
             hit = self.cache.get(req.query_idx)
             if hit is not None:
                 u, k, text = hit
@@ -734,14 +776,15 @@ class OnlineRobatchServer:
                 streams = {pos: sinks for pos, q in enumerate(members)
                            if (sinks := [r.stream for r in by_idx[int(q)]
                                          if r.stream is not None])}
+            gen = self._group_gen(members, by_idx)
             fut = self._pool_exec.submit(self._invoke, k, members,
-                                         streams or None)
-            futures[fut] = (state, members)
+                                         streams or None, gen)
+            futures[fut] = (state, members, gen)
         rep.n_groups = len(dispatch)
         rep.group_models = tuple(int(s.model) for s, _ in dispatch)
 
         requeue: list[OnlineRequest] = []
-        for fut, (state, members) in futures.items():
+        for fut, (state, members, gen) in futures.items():
             k = int(state.model)
             try:
                 out = fut.result()
@@ -767,11 +810,14 @@ class OnlineRobatchServer:
             done_at = now + float(out.latency_s)
             share = cost / max(1, len(members))
             answers = getattr(out, "answers", None)
+            cacheable = gen is None or gen.greedy
             for pos, (q, u) in enumerate(zip(members, out.utilities)):
                 text = answers[pos] if answers is not None else None
-                self.cache.put(int(q), (float(u), k, text))
-                if self.semcache is not None:
-                    self.semcache.insert(int(q), float(u), k, text, now=done_at)
+                if cacheable:      # one sample must not become every answer
+                    self.cache.put(int(q), (float(u), k, text))
+                    if self.semcache is not None:
+                        self.semcache.insert(int(q), float(u), k, text,
+                                             now=done_at)
                 for req in by_idx[int(q)]:
                     self._complete(req, at=done_at, utility=float(u), model=k,
                                    batch=int(state.batch), cost=share,

@@ -33,6 +33,7 @@ from repro.data.workload import Workload
 from repro.serving.batcher import BatchPromptFormatter
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.fault import ReplicaPolicy, ReplicaTracker
+from repro.serving.generation import GenerationConfig
 
 
 @dataclass
@@ -54,10 +55,13 @@ class ServedPoolMember:
     supports_streams = True
     # ^ invoke_batch accepts ``streams`` (per-position live subscriber sinks);
     #   the online dispatcher feature-detects this attribute before forwarding
+    supports_generation = True
+    # ^ invoke_batch accepts ``gen`` (a GenerationConfig); same feature probe
 
     def __init__(self, name: str, engine: ServingEngine, formatter: BatchPromptFormatter,
                  task: TextTask, c_in: float, c_out: float, context_len: int,
-                 max_answer_tokens: int = 8):
+                 max_answer_tokens: int = 8,
+                 generation: Optional[GenerationConfig] = None):
         self.name = name
         self.engine = engine
         self.formatter = formatter
@@ -66,6 +70,7 @@ class ServedPoolMember:
         self.c_out = c_out
         self.context_len = context_len
         self.max_answer_tokens = max_answer_tokens
+        self.generation = generation    # member-default gen (None → greedy)
         self._lock = threading.Lock()
         self._rid = itertools.count()   # monotonic per-member invocation id
 
@@ -126,15 +131,23 @@ class ServedPoolMember:
         return on_tokens
 
     def invoke_batch(self, wl: Workload, batch_idx: np.ndarray,
-                     streams: Optional[dict] = None) -> BatchResult:
+                     streams: Optional[dict] = None,
+                     gen: Optional[GenerationConfig] = None) -> BatchResult:
         b = len(batch_idx)
         queries = [self.task.queries[int(i)] for i in batch_idx]
         prompt = self.formatter.format(queries)
         t0 = time.perf_counter()
+        effective = gen if gen is not None else self.generation
+        if effective is not None:
+            # the batch needs room for every co-batched answer: the caller's
+            # max_new acts as a per-query cap on the member's answer sizing,
+            # scaled to the batch (sampling params/seed pass through as-is)
+            per_q = min(self.max_answer_tokens, effective.max_new)
+            effective = effective.with_(max_new=per_q * b + b)
         # each physical invocation gets a fresh rid so engine-level logs and
         # traces can tell invocations apart (next() is atomic under the GIL)
         req = Request(rid=next(self._rid), tokens=prompt,
-                      max_new=self.max_answer_tokens * b + b)
+                      max_new=self.max_answer_tokens * b + b, gen=effective)
         if streams:
             req.on_tokens = self._stream_demux(b, streams)
         with self._lock:              # one engine, one in-flight batch
@@ -367,8 +380,15 @@ class ReplicaSet:
         dispatch)."""
         return bool(getattr(self.replicas[0], "supports_streams", False))
 
+    @property
+    def supports_generation(self) -> bool:
+        """GenerationConfig forwarding, same feature-probe contract as
+        :attr:`supports_streams`."""
+        return bool(getattr(self.replicas[0], "supports_generation", False))
+
     def invoke_batch(self, wl: Workload, batch_idx: np.ndarray,
-                     streams: Optional[dict] = None) -> BatchResult:
+                     streams: Optional[dict] = None,
+                     gen: Optional[GenerationConfig] = None) -> BatchResult:
         tried: set[int] = set()
         last: Optional[Exception] = None
         while True:
@@ -379,6 +399,9 @@ class ReplicaSet:
             t0 = time.perf_counter()
             kw = {"streams": streams} if streams and getattr(
                 self.replicas[r], "supports_streams", False) else {}
+            if gen is not None and getattr(self.replicas[r],
+                                           "supports_generation", False):
+                kw["gen"] = gen
             try:
                 out = self.replicas[r].invoke_batch(wl, batch_idx, **kw)
             except Exception as e:        # noqa: BLE001 — replica fault

@@ -1,0 +1,348 @@
+"""Routed speculative decoding: a cheap pool member drafts, the routed
+(expensive) model verifies — the strong/weak pair the router already holds
+becomes a latency optimization, not only a cost one.
+
+One :class:`SpeculativeEngine` wraps TWO paged :class:`ServingEngine`s over
+the same token stream: the *draft* engine runs its fused K+1-step scan to
+propose ``spec_k`` tokens, then the *target* engine scores all of them in a
+single fused span dispatch (:meth:`Model.decode_span` — one GEMM over K+1
+positions instead of K+1 sequential decode steps; that batching is the whole
+speedup).  Both engines keep their own paged KV over the PR 6 machinery, so
+batch-prompt prefixes share pages on each side and a rejected draft suffix
+rolls back by *block-table truncation* (``PagedCacheManager.truncate_slot``
+plus one donated per-slot length reset) — no KV bytes are ever copied back.
+
+Acceptance rule (deterministic-match): the verify pass computes the target's
+OWN next token at every draft position — greedy argmax, or, for sampled
+requests, :func:`sample_tokens` with the identical position-folded key the
+target-only engine would use.  Draft token ``d_i`` is accepted iff it equals
+that choice; the first mismatch emits the target's choice instead (the
+"fallback resample", realized as the target's own reproducible sample), and
+a fully accepted window emits the target's K+1-th token as a bonus.  The
+emitted stream is therefore *literally* the target-only stream — greedy AND
+sampled speculative outputs are bit-identical to target-only decoding by
+construction (``Model.decode_span`` is bitwise-equal to sequential
+``decode_step``s; parity-tested), and the draft model only ever moves the
+accept rate, never the text.
+
+Cadence invariant between rounds: with ``n`` tokens emitted, both engines
+hold KV for positions ``[0, prompt + n − 1)`` — the last emitted token is
+fed (and its KV written) by the next round's dispatches.  The draft scan
+runs K+1 steps so its cache also covers the accepted window; rollback
+truncates both sides to the post-acceptance length.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.transformer import Model
+from repro.serving.engine import (Request, ServingEngine, _fold_keys,
+                                  sample_tokens)
+
+__all__ = ["SpeculativeEngine"]
+
+
+class SpeculativeEngine:
+    """Draft/verify serving engine; drop-in for :class:`ServingEngine`.
+
+    ``spec_k`` is the speculation depth: each round drafts ``spec_k`` tokens
+    with the cheap model and verifies them (plus the bonus position) in one
+    fused target dispatch.  Both inner engines are paged with
+    ``decode_block = spec_k + 1`` — the write range each round is the K+1
+    positions ``[prompt + n − 1, prompt + n + spec_k)``.
+
+    The public serving surface matches :class:`ServingEngine` (``serve``,
+    ``generate_text``, ``kv_occupancy``, the dispatch counters), so
+    :class:`ServedPoolMember` and the replica factory treat it uniformly.
+    """
+
+    def __init__(self, model: Model, params, draft_model: Model, draft_params,
+                 *, max_slots: int = 8, max_len: int = 1024, spec_k: int = 4,
+                 page_size: int = 16, share_prefix: bool = True,
+                 eos_id: int = ByteTokenizer.eos,
+                 pad_id: int = ByteTokenizer.pad):
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.spec_k = int(spec_k)
+        self.model = model              # target — replica factories rebuild
+        self.params = params            # from these, like a plain engine
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.paged = True
+        self.page_size = int(page_size)
+        self.share_prefix = bool(share_prefix)
+        self.decode_block = self.spec_k + 1
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.target = ServingEngine(
+            model, params, max_slots=max_slots, max_len=max_len,
+            decode_block=self.spec_k + 1, paged=True, page_size=page_size,
+            share_prefix=share_prefix, eos_id=eos_id, pad_id=pad_id)
+        # the draft never retires on its own: eos_id=-1 suppresses EOS (and
+        # admission-time retirement) — the target's stream decides lifecycle
+        self.draft = ServingEngine(
+            draft_model, draft_params, max_slots=max_slots, max_len=max_len,
+            decode_block=self.spec_k + 1, paged=True, page_size=page_size,
+            share_prefix=share_prefix, eos_id=-1, pad_id=pad_id)
+        self.tok = self.target.tok
+        # speculative telemetry
+        self.n_rounds = 0               # draft+verify dispatch pairs
+        self.n_drafted = 0              # draft tokens proposed (k per slot-round)
+        self.n_accepted = 0             # draft tokens accepted by the target
+        self.n_bonus = 0                # bonus tokens from fully accepted windows
+
+        target_model = model
+        n_slots = max_slots
+
+        def _reset_lens(cache, lens):
+            # fused KV-length rollback: every per-slot length leaf
+            # ((..., max_slots) int32) snaps to the host-computed value —
+            # runs INSIDE the draft/verify jits, so the rollback costs no
+            # extra dispatch (pages were already dropped by table truncation)
+            def fix(leaf):
+                if (leaf.dtype == jnp.int32 and leaf.ndim >= 1
+                        and leaf.shape[-1] == n_slots):
+                    return jnp.broadcast_to(lens.astype(jnp.int32), leaf.shape)
+                return leaf
+            return jax.tree.map(fix, cache)
+
+        dk = self.spec_k + 1
+
+        @partial(jax.jit, static_argnames=("sample",), donate_argnums=(1,))
+        def _draft_k(params, cache, table, lens, last, n_out, keys=None,
+                     temp=None, top_k=None, top_p=None, *, sample=False):
+            """K+1 fused draft steps: feed the last emitted token, then each
+            proposal autoregressively.  No EOS/limit masking — the target's
+            stream decides lifecycle; the final step only exists to write
+            d_{K-1}'s KV (its proposal is discarded host-side).  ``lens``
+            resets the per-slot KV lengths first (rollback from the previous
+            round / fresh admission, fused into this dispatch)."""
+            cache = _reset_lens(cache, lens)
+
+            def step(carry, _):
+                sc, lst, n = carry
+                logits, sc = draft_model.decode_step(params, lst[:, None], sc,
+                                                     table=table)
+                if sample:
+                    nxt = sample_tokens(logits[:, 0], _fold_keys(keys, n),
+                                        temp, top_k, top_p)
+                else:
+                    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                return (sc, nxt, n + 1), nxt
+
+            (cache, _, _), toks = jax.lax.scan(
+                step, (cache, last, n_out), None, length=dk)
+            return cache, toks                               # (K+1, slots)
+
+        self._draft_k = _draft_k
+
+        @partial(jax.jit, static_argnames=("sample",), donate_argnums=(1,))
+        def _verify_k(params, cache, table, lens, xs, n_out, keys=None,
+                      temp=None, top_k=None, top_p=None, *, sample=False):
+            """One fused target dispatch scoring the whole draft window.
+
+            ``xs``: (B, K+1) — the last emitted token then the K drafts.
+            Returns the donated cache and the (K+1, B) tokens the TARGET
+            would emit at each position (argmax, or the position-keyed
+            sample) — span logits are bitwise-equal to sequential decode
+            steps, so these are exactly the target-only stream.  ``lens``
+            as in ``_draft_k``.
+            """
+            cache = _reset_lens(cache, lens)
+            logits, cache = target_model.decode_span(params, xs, cache,
+                                                     table=table)
+            toks = []
+            for i in range(xs.shape[1]):
+                if sample:
+                    t = sample_tokens(logits[:, i],
+                                      _fold_keys(keys, n_out + i),
+                                      temp, top_k, top_p)
+                else:
+                    t = jnp.argmax(logits[:, i], axis=-1).astype(jnp.int32)
+                toks.append(t)
+            return cache, jnp.stack(toks, axis=0)
+
+        self._verify_k = _verify_k
+
+    # ---- telemetry ----------------------------------------------------
+    @property
+    def n_decode_calls(self) -> int:
+        return self.target.n_decode_calls + self.draft.n_decode_calls
+
+    @property
+    def n_decode_steps(self) -> int:
+        return self.target.n_decode_steps + self.draft.n_decode_steps
+
+    @property
+    def n_prefill_calls(self) -> int:
+        return self.target.n_prefill_calls + self.draft.n_prefill_calls
+
+    def accept_rate(self) -> float:
+        return self.n_accepted / max(self.n_drafted, 1)
+
+    def kv_occupancy(self) -> dict:
+        """Target-side paged occupancy plus the draft pool's footprint."""
+        occ = self.target.kv_occupancy()
+        docc = self.draft.kv_occupancy()
+        occ["draft_kv_bytes"] = docc["kv_bytes"]
+        occ["kv_bytes"] += docc["kv_bytes"]
+        occ["peak_kv_bytes"] += docc["peak_kv_bytes"]
+        return occ
+
+    # ---- lifecycle ----------------------------------------------------
+    def _sync_shadows(self):
+        """Mirror freshly admitted target requests into the draft engine.
+
+        The shadow request shares tokens, generation config (same seed ⇒
+        the draft's sampled proposals draw with the target's position-folded
+        keys — that is what makes sampled drafts agree when the two
+        distributions do), and the target's first emitted token.  The draft
+        admission writes prompt KV only, which is exactly the round
+        invariant at n = 1 emitted token: cache covers ``prompt + n − 1``.
+        """
+        reqs, slots = [], []
+        for i, req in enumerate(self.target.slot_req):
+            if req is None or self.draft.slot_req[i] is not None:
+                continue
+            shadow = Request(rid=req.rid, tokens=list(req.tokens),
+                             max_new=self.max_len, gen=req.gen)
+            reqs.append((shadow, req))
+            slots.append(i)
+        if not reqs:
+            return
+        self.draft._admit_batch([s for s, _ in reqs], slots)
+        for (shadow, req), slot in zip(reqs, slots):
+            # the draft's own first token is discarded: the stream is the
+            # target's; re-point the shadow at it (the draft's admission
+            # wrote prompt KV only, so no rollback is needed here)
+            shadow.out_tokens[:] = list(req.out_tokens)
+            shadow.done = False
+            assert self.draft.slot_req[slot] is shadow
+
+    def _release_slot(self, slot: int):
+        self.target._retire(slot)
+        shadow = self.draft.slot_req[slot]
+        if shadow is not None:
+            self.draft._retire(slot)
+
+    # ---- serving ------------------------------------------------------
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Continuous-batching speculative serving; the emitted streams are
+        bit-identical to ``ServingEngine.serve`` on the target alone."""
+        k = self.spec_k
+        queue = list(requests)
+        while queue or self.target._active_slots():
+            self.target._admit_free(queue)
+            self._sync_shadows()
+            active = self.target._active_slots()
+            if not active:
+                continue
+            last, act, n_out, limit = self.target._slot_state()
+            sample, keys, temp, top_k, top_p = self.target._sampling_state()
+            kw = {}
+            if sample:
+                kw = dict(keys=jnp.asarray(keys), temp=jnp.asarray(temp),
+                          top_k=jnp.asarray(top_k), top_p=jnp.asarray(top_p),
+                          sample=True)
+            live = max(len(self.target.slot_req[i].tokens)
+                       + len(self.target.slot_req[i].out_tokens)
+                       for i in active)
+            horizon = min(self.max_len,
+                          self.target._bucket_len(live + k + 1))
+            # host-side KV lengths at round entry: with n tokens emitted the
+            # cache must cover [0, prompt + n − 1) — both dispatches reset
+            # their length leaves to this (fused rollback; pages were already
+            # dropped by truncate_slot at the end of the previous round)
+            lens = np.zeros(self.max_slots, np.int32)
+            for i in active:
+                req = self.target.slot_req[i]
+                lens[i] = len(req.tokens) + len(req.out_tokens) - 1
+            lens_j = jnp.asarray(lens)
+            # ---- draft: K proposals via the fused scan (K+1 steps — the
+            # last one writes d_{K-1}'s KV; its proposal is discarded).
+            # offset=-1 because the scan re-feeds the last emitted token
+            # whose KV is not yet written.
+            dtable = self.draft._prepare_paged(active, horizon, offset=-1)
+            self.draft.cache, d_toks = self._draft_k(
+                self.draft.params, self.draft.cache, dtable, lens_j,
+                jnp.asarray(last), jnp.asarray(n_out), **kw)
+            self.draft.n_decode_calls += 1
+            self.draft.n_decode_steps += k + 1
+            d_toks = np.asarray(d_toks)                      # (K+1, slots)
+            # ---- verify: ONE fused target dispatch over the whole window
+            xs = np.zeros((self.max_slots, k + 1), np.int32)
+            xs[:, 0] = last
+            xs[:, 1:] = d_toks[:k].T
+            ttable = self.target._prepare_paged(active, horizon, offset=-1)
+            self.target.cache, t_toks = self._verify_k(
+                self.target.params, self.target.cache, ttable, lens_j,
+                jnp.asarray(xs), jnp.asarray(n_out), **kw)
+            self.target.n_decode_calls += 1
+            self.target.n_decode_steps += k + 1
+            t_toks = np.asarray(t_toks)                      # (K+1, slots)
+            self.n_rounds += 1
+            # ---- host accept/reject + lifecycle
+            lens = np.zeros(self.max_slots, np.int32)
+            for i in active:
+                req = self.target.slot_req[i]
+                n = int(n_out[i])
+                lim = int(limit[i])
+                block: list[int] = []
+                done = False
+                self.n_drafted += k
+                for j in range(k + 1):
+                    tt = int(t_toks[j, i])
+                    match = j < k and tt == int(d_toks[j, i])
+                    block.append(tt)
+                    n += 1
+                    if match:
+                        self.n_accepted += 1
+                    elif j == k:
+                        self.n_bonus += 1       # fully accepted window
+                    if tt == self.eos_id or n >= lim:
+                        done = True
+                        break
+                    if not match:
+                        # j < k: mismatch — the target's own token replaced
+                        # the draft; j == k: the bonus token ends the window
+                        break
+                req.out_tokens.extend(block)
+                shadow = self.draft.slot_req[i]
+                shadow.out_tokens[:] = list(req.out_tokens)
+                if done:
+                    self._release_slot(i)
+                else:
+                    # roll back both KVs to the post-acceptance length: pages
+                    # by table truncation now, length leaves by the fused
+                    # reset at the next round's dispatch entry
+                    keep = len(req.tokens) + len(req.out_tokens) - 1
+                    self.target.kv.truncate_slot(i, keep)
+                    self.draft.kv.truncate_slot(i, keep)
+                if req.on_tokens is not None:
+                    req.on_tokens(block, req.done)
+        return requests
+
+    # convenience --------------------------------------------------------
+    def generate_text(self, prompts: list[str], max_new: int = 32,
+                      gen=None) -> list[str]:
+        if gen is not None:
+            max_new = gen.max_new
+        reqs = [Request(rid=i, tokens=self.tok.encode(p), max_new=max_new,
+                        gen=gen)
+                for i, p in enumerate(prompts)]
+        self.serve(reqs)
+        outs = []
+        for r in reqs:
+            ids = r.out_tokens
+            if self.eos_id in ids:
+                ids = ids[: ids.index(self.eos_id)]
+            outs.append(self.tok.decode(ids))
+        return outs

@@ -23,6 +23,7 @@ from repro.models.transformer import Model
 from repro.serving.batcher import BatchPromptFormatter
 from repro.serving.engine import ServingEngine
 from repro.serving.pool import ReplicaSet, ServedPoolMember, TextTask
+from repro.serving.speculative import SpeculativeEngine
 from repro.training.optimizer import adamw
 
 __all__ = ["SYSTEM_PROMPT", "TINY_PRICES", "gen_query",
@@ -159,32 +160,57 @@ def build_task_workload(rng, fmt: BatchPromptFormatter, n_train: int,
     return wl, TextTask(queries=queries, answers=answers)
 
 
+def _speculative_of(engine: ServingEngine, draft: ServingEngine,
+                    spec_k: int) -> SpeculativeEngine:
+    """Wrap a trained member engine so the draft member's model proposes its
+    tokens (fresh KV slots on both sides; weights are shared jax-side)."""
+    return SpeculativeEngine(engine.model, engine.params,
+                             draft.model, draft.params,
+                             max_slots=engine.max_slots,
+                             max_len=engine.max_len, spec_k=spec_k,
+                             page_size=engine.page_size,
+                             share_prefix=engine.share_prefix)
+
+
 def replica_factory(prototype: ServedPoolMember):
     """Zero-arg builder of one more interchangeable replica of a served
     member: a fresh :class:`ServingEngine` (its own KV-cache slots) over the
     SAME trained params — what :meth:`repro.serving.pool.ReplicaSet.scale_to`
-    calls to grow a tiny-pool member without retraining."""
+    calls to grow a tiny-pool member without retraining.  A speculative
+    prototype replicates as a fresh :class:`SpeculativeEngine` over the same
+    target/draft weight pair."""
     proto_engine = prototype.engine
 
     def build() -> ServedPoolMember:
-        engine = ServingEngine(proto_engine.model, proto_engine.params,
-                               max_slots=proto_engine.max_slots,
-                               max_len=proto_engine.max_len,
-                               decode_block=proto_engine.decode_block,
-                               paged=proto_engine.paged,
-                               page_size=proto_engine.page_size,
-                               share_prefix=proto_engine.share_prefix)
+        if isinstance(proto_engine, SpeculativeEngine):
+            engine = SpeculativeEngine(
+                proto_engine.model, proto_engine.params,
+                proto_engine.draft_model, proto_engine.draft_params,
+                max_slots=proto_engine.max_slots,
+                max_len=proto_engine.max_len, spec_k=proto_engine.spec_k,
+                page_size=proto_engine.page_size,
+                share_prefix=proto_engine.share_prefix)
+        else:
+            engine = ServingEngine(proto_engine.model, proto_engine.params,
+                                   max_slots=proto_engine.max_slots,
+                                   max_len=proto_engine.max_len,
+                                   decode_block=proto_engine.decode_block,
+                                   paged=proto_engine.paged,
+                                   page_size=proto_engine.page_size,
+                                   share_prefix=proto_engine.share_prefix)
         return ServedPoolMember(prototype.name, engine, prototype.formatter,
                                 prototype.task, c_in=prototype.c_in,
                                 c_out=prototype.c_out,
                                 context_len=prototype.context_len,
-                                max_answer_tokens=prototype.max_answer_tokens)
+                                max_answer_tokens=prototype.max_answer_tokens,
+                                generation=prototype.generation)
 
     return build
 
 
 def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 48,
                     replicas: int = 1, scalable: bool = False,
+                    draft_member: str = "", spec_k: int = 4,
                     verbose: bool = True):
     """Everything the routing stack needs: (workload, pool, formatter).
 
@@ -194,9 +220,25 @@ def build_tiny_pool(rng, *, steps: int = 300, n_train: int = 48, n_test: int = 4
     of that many engines over one set of trained weights — N-way concurrent
     serving without N training runs.  ``scalable=True`` wraps members in
     ReplicaSets even at ``replicas=1`` and attaches a shared-weight
-    :func:`replica_factory`, so the autoscaler can grow them on demand."""
+    :func:`replica_factory`, so the autoscaler can grow them on demand.
+
+    ``draft_member`` names the cheap member whose model drafts for every
+    *more expensive* member (routed speculative decoding): those members'
+    engines become :class:`SpeculativeEngine`\\ s verifying the draft's
+    ``spec_k``-token proposals in one fused span dispatch.  Outputs are
+    bit-identical to the plain engines — the draft only moves latency."""
     fmt = BatchPromptFormatter(SYSTEM_PROMPT)
     engines = train_engines(rng, fmt, steps, replicas=replicas, verbose=verbose)
+    if draft_member:
+        if draft_member not in engines:
+            raise ValueError(f"draft_member {draft_member!r} is not in the "
+                             f"pool: {sorted(engines)}")
+        d_cost = TINY_PRICES[draft_member][1]
+        draft0 = engines[draft_member][0]
+        for name, engs in engines.items():
+            if TINY_PRICES[name][1] > d_cost:
+                engines[name] = [_speculative_of(e, draft0, spec_k)
+                                 for e in engs]
     wl, task = build_task_workload(rng, fmt, n_train, n_test)
 
     def member(name: str, engine: ServingEngine) -> ServedPoolMember:

@@ -334,7 +334,7 @@ def test_parse_chat_body_validates_shape():
         {"messages": [{"role": "user", "content": "hi"}], "stream": True,
          "query_idx": 4}).encode())
     assert ok == {"content": "hi", "stream": True, "model": None,
-                  "query_idx": 4}
+                  "query_idx": 4, "gen": None}
     for bad in (b"not json", b"[]", b'{"messages": []}',
                 b'{"messages": [{"role": "assistant", "content": "x"}]}',
                 b'{"messages": [{"role": "user", "content": "x"}], '
@@ -412,3 +412,56 @@ def test_window_report_summary_includes_kv_occupancy():
     assert "kv_pages[15 live: m0:10p/4sh/1cow m2:5p/0sh/0cow]" in line
     # simulated pools carry no kv telemetry — the field stays out of the line
     assert "kv_pages" not in WindowReport(t=0.0).summary()
+
+
+# ---------------------------------------------------------------------------
+# generation parsing + the documented unsupported-field contract
+# ---------------------------------------------------------------------------
+
+def _chat(**extra):
+    body = {"messages": [{"role": "user", "content": "hi"}]}
+    body.update(extra)
+    return json.dumps(body).encode()
+
+
+def test_parse_chat_body_builds_generation_config():
+    from repro.serving.generation import GenerationConfig
+
+    got = parse_chat_body(_chat(temperature=0.7, top_p=0.9, seed=5,
+                                max_tokens=64))
+    assert got["gen"] == GenerationConfig(max_new=64, temperature=0.7,
+                                          top_p=0.9, seed=5)
+    # any single sampling field is enough; the rest default
+    assert parse_chat_body(_chat(seed=3))["gen"] == GenerationConfig(seed=3)
+    assert parse_chat_body(_chat(max_completion_tokens=8))["gen"].max_new == 8
+    # n=1 is the one accepted value of n (it's what we already do)
+    assert parse_chat_body(_chat(n=1))["gen"] is None
+
+
+def test_parse_chat_body_rejects_unsupported_openai_fields():
+    """The documented subset contract: fields the batch-prompt plane cannot
+    honor come back as a structured 400 pointing at the docs, never a
+    silent ignore."""
+    for field, value in (("logprobs", True), ("top_logprobs", 3),
+                         ("logit_bias", {"50256": -100}), ("tools", [{}]),
+                         ("tool_choice", "auto"), ("functions", [{}]),
+                         ("function_call", "none"), ("stop", ["\n"]),
+                         ("presence_penalty", 0.5),
+                         ("frequency_penalty", 0.5), ("n", 2)):
+        with pytest.raises(ApiError) as ei:
+            parse_chat_body(_chat(**{field: value}))
+        assert ei.value.status == 400
+        assert ei.value.err_type == "unsupported_field_error"
+        assert field.split("_")[0] in str(ei.value)
+    # explicit null is indistinguishable from absent — accepted
+    assert parse_chat_body(_chat(logprobs=None))["gen"] is None
+
+
+def test_parse_chat_body_validates_sampling_ranges():
+    for bad in (dict(temperature=-0.5), dict(temperature=2.5),
+                dict(temperature="hot"), dict(top_p=0.0), dict(top_p=1.2),
+                dict(seed=1.5), dict(seed=True), dict(max_tokens=0),
+                dict(max_tokens="many")):
+        with pytest.raises(ApiError) as ei:
+            parse_chat_body(_chat(**bad))
+        assert ei.value.status == 400

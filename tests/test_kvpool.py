@@ -219,3 +219,60 @@ def test_manager_invariants_under_slot_churn(ops):
     for s in range(4):
         m.release_slot(s)
     assert m.alloc.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# truncate_slot — the speculative-decode rollback primitive
+# ---------------------------------------------------------------------------
+
+def test_truncate_slot_releases_only_past_keep_point():
+    m = PagedCacheManager(max_slots=2, max_len=96, page_size=16)
+    m.map_slot(0, m.alloc.alloc_n(4))            # covers positions [0, 64)
+    # keep 33 tokens → ceil(33/16) = 3 pages stay mapped, 1 freed
+    assert m.truncate_slot(0, 33) == 1
+    assert len(m.slot_pages[0]) == 3
+    assert (m.table[0, 3:] == m.alloc.n_pages).all()
+    # already covered: truncating to the same (or a longer) point is a no-op
+    assert m.truncate_slot(0, 33) == 0
+    assert m.truncate_slot(0, 48) == 0
+    m.alloc.check(tables=m.slot_pages)
+
+
+def test_truncate_shared_suffix_drops_reference_not_page():
+    """A rejected draft suffix on a COW-shared page must only drop this
+    slot's reference — the sibling keeps its KV; refcounts step down by
+    exactly one."""
+    m = PagedCacheManager(max_slots=2, max_len=96, page_size=16)
+    owner = m.alloc.alloc_n(3)
+    m.map_slot(0, owner)
+    m.map_slot(1, [m.alloc.share(p) for p in owner])
+    assert m.alloc.refcount(owner[2]) == 2
+    # slot 1 rolls back past the last shared page: 0 pages actually freed
+    assert m.truncate_slot(1, 32) == 0
+    assert m.alloc.refcount(owner[2]) == 1       # owner keeps the page
+    assert len(m.slot_pages[1]) == 2
+    # the owner's rollback of the now-private page really frees it
+    assert m.truncate_slot(0, 32) == 1
+    m.alloc.check(tables=m.slot_pages)
+    assert m.release_slot(0) + m.release_slot(1) == 2  # shared pair remains
+
+
+def test_truncate_to_zero_empties_slot():
+    m = PagedCacheManager(max_slots=1, max_len=64, page_size=16)
+    m.map_slot(0, m.alloc.alloc_n(4))
+    assert m.truncate_slot(0, 0) == 4
+    assert m.slot_pages[0] == [] and m.alloc.pages_in_use == 0
+    assert (m.table[0] == m.alloc.n_pages).all()
+
+
+def test_truncate_then_extend_reuses_pool():
+    """Rollback → re-grow cycles (every speculative round) must not leak:
+    the free list absorbs truncated pages and hands them back on extend."""
+    m = PagedCacheManager(max_slots=1, max_len=64, page_size=16)
+    m.map_slot(0, m.alloc.alloc_n(2))
+    for _ in range(8):
+        assert m.truncate_slot(0, 16) == 1       # roll back to one page
+        assert len(m.extend_slot(0, 2)) == 1     # grow to 2 pages again
+        m.alloc.check(tables=m.slot_pages)
+    assert m.alloc.pages_in_use == 2
+    assert m.alloc.peak_pages == 2               # reuse, not fresh allocation

@@ -1,0 +1,233 @@
+"""On-device sampling + the unified GenerationConfig API: determinism of the
+PRNG-in-carry sampled decode (position-folded keys ⇒ streams invariant to
+decode_block, slot placement and paging), the temperature=0 bit-identity
+deprecation shim, config round-trip/validation, and the spec/gateway
+threading that carries one GenerationConfig from the declarative layer down
+to the engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ShardingConfig, get_arch
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.generation import GenerationConfig
+
+TOK = ByteTokenizer()
+MAX_LEN = 160
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_arch("tiny-s")
+    model = Model(cfg, ShardingConfig(remat="none"))
+    return model, model.init(jax.random.PRNGKey(3))
+
+
+def _requests(sampled=True):
+    """Mixed batch: varying lengths/budgets, per-request seeds, and one
+    greedy row inside an otherwise-sampled batch."""
+    out = []
+    for i in range(6):
+        p = f"query number {i} " + "abc" * (5 * i)
+        g = None
+        if sampled:
+            g = GenerationConfig(max_new=9 + 3 * i, temperature=0.9, top_k=40,
+                                 top_p=0.95, seed=100 + i)
+            if i == 2:                       # mixed batch: one greedy row
+                g = GenerationConfig(max_new=9 + 3 * i)
+        out.append(Request(rid=i, tokens=TOK.encode(p),
+                           max_new=9 + 3 * i, gen=g))
+    return out
+
+
+@pytest.fixture(scope="module")
+def stepwise_sampled(tiny):
+    """The per-token reference driver is the sampling oracle: one decode
+    step per token, keys folded by stream position."""
+    model, params = tiny
+    eng = ServingEngine(model, params, max_slots=4, max_len=MAX_LEN, eos_id=-1)
+    reqs = _requests()
+    eng.serve_stepwise(reqs)
+    return [r.out_tokens for r in reqs]
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("slots", [1, 4])
+@pytest.mark.parametrize("paged", [False, True])
+def test_sampled_fused_parity_with_stepwise(tiny, stepwise_sampled, k, slots,
+                                            paged):
+    """The determinism contract: token t is a pure function of (seed, t), so
+    the fused K-step scan — any K, any slot count, either KV layout — emits
+    the stepwise driver's exact stream."""
+    model, params = tiny
+    eng = ServingEngine(model, params, max_slots=slots, max_len=MAX_LEN,
+                        decode_block=k, eos_id=-1, paged=paged, page_size=16)
+    reqs = _requests()
+    eng.serve(reqs)
+    assert [r.out_tokens for r in reqs] == stepwise_sampled
+
+
+def test_replica_placement_invariance(tiny, stepwise_sampled):
+    """A request's stream must not depend on which replica/slot serves it:
+    the same six requests squeezed through a single slot (every admission
+    lands on slot 0, positions shift across ticks) reproduce the
+    concurrently-batched streams bit for bit."""
+    model, params = tiny
+    eng = ServingEngine(model, params, max_slots=1, max_len=MAX_LEN, eos_id=-1)
+    reqs = _requests()
+    eng.serve(reqs)
+    assert [r.out_tokens for r in reqs] == stepwise_sampled
+
+
+def test_temperature_zero_is_bitwise_greedy(tiny):
+    """The deprecation shim's contract at the engine: requests carrying an
+    explicit greedy GenerationConfig are bit-identical to legacy bare-kwarg
+    requests (gen=None), fused and stepwise."""
+    model, params = tiny
+    legacy_eng = ServingEngine(model, params, max_slots=4, max_len=MAX_LEN,
+                               eos_id=-1, decode_block=4)
+    legacy = _requests(sampled=False)
+    legacy_eng.serve(legacy)
+    shim_eng = ServingEngine(model, params, max_slots=4, max_len=MAX_LEN,
+                             eos_id=-1, decode_block=4)
+    shim = [Request(rid=r.rid, tokens=list(r.tokens), max_new=r.max_new,
+                    gen=GenerationConfig(max_new=r.max_new)) for r in legacy]
+    shim_eng.serve(shim)
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in shim]
+
+
+def test_sampling_actually_samples(tiny):
+    """Different seeds diverge and nonzero temperature departs from greedy —
+    guards against a silently-greedy sampler passing every parity test."""
+    model, params = tiny
+
+    def run(seed, temp):
+        eng = ServingEngine(model, params, max_slots=2, max_len=MAX_LEN,
+                            eos_id=-1, decode_block=4)
+        reqs = [Request(rid=i, tokens=TOK.encode(f"prompt {i} xyzw"),
+                        max_new=24,
+                        gen=GenerationConfig(max_new=24, temperature=temp,
+                                             seed=seed + i))
+                for i in range(2)]
+        eng.serve(reqs)
+        return [r.out_tokens for r in reqs]
+
+    hot_a, hot_b = run(0, 1.5), run(50, 1.5)
+    assert hot_a == run(0, 1.5)              # same seed reproduces exactly
+    assert hot_a != hot_b                    # different seed diverges
+    assert hot_a != run(0, 0.0)              # temperature moves the stream
+
+
+# ---------------------------------------------------------------------------
+# GenerationConfig: round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_generation_config_roundtrip():
+    g = GenerationConfig(max_new=48, temperature=0.7, top_k=40, top_p=0.9,
+                         seed=11, decode_block=4)
+    assert GenerationConfig.from_dict(g.to_dict()) == g
+    assert GenerationConfig.from_json(g.to_json()) == g
+    assert g.with_(temperature=0.0).greedy and not g.greedy
+
+
+def test_generation_config_rejects_unknown_and_invalid():
+    with pytest.raises(ValueError, match="unknown field"):
+        GenerationConfig.from_dict({"max_new": 8, "temprature": 1.0})
+    for bad in (dict(max_new=0), dict(temperature=-0.1), dict(top_k=-1),
+                dict(top_p=0.0), dict(top_p=1.5), dict(decode_block=-2)):
+        with pytest.raises(ValueError):
+            GenerationConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# spec threading: PoolSpec sampling fields → Gateway → OnlineConfig
+# ---------------------------------------------------------------------------
+
+def test_poolspec_generation_fields_roundtrip():
+    from repro.api import PoolSpec, RunSpec
+
+    spec = RunSpec(pool=PoolSpec(kind="tiny", temperature=0.8, top_k=50,
+                                 top_p=0.9, gen_seed=7, draft_member="tiny-s",
+                                 spec_k=6))
+    assert RunSpec.from_json(spec.to_json()) == spec
+    gen = spec.pool.generation_config()
+    assert gen == GenerationConfig(temperature=0.8, top_k=50, top_p=0.9,
+                                   seed=7)
+    # all-default sampling fields mean "no config" — the legacy greedy path
+    assert PoolSpec().generation_config() is None
+    assert PoolSpec().generation_config(temperature=0.5).temperature == 0.5
+
+
+def test_poolspec_draft_member_needs_tiny_pool():
+    from repro.api import PoolSpec
+
+    with pytest.raises(ValueError, match="draft_member"):
+        PoolSpec(kind="simulated", draft_member="tiny-s").build()
+
+
+# ---------------------------------------------------------------------------
+# deprecation-shim parity: an explicit greedy GenerationConfig threaded
+# through the online plane changes nothing, for every registered policy
+# ---------------------------------------------------------------------------
+
+POLICY_PARAMS = {"routellm": dict(tau=0.5, b=8), "frugalgpt": dict(tau=0.5, b=8),
+                 "batcher-sim": dict(tau=0.5, b=8),
+                 "batcher-div": dict(tau=0.5, b=8),
+                 "obp": dict(tau=0.5, b=8), "batch-only": dict(model=1)}
+
+
+def _policy_names():
+    from repro.api.policy import list_policies
+
+    return list_policies()
+
+
+@pytest.mark.parametrize("name", _policy_names())
+def test_online_greedy_shim_parity_per_policy(name, fitted_rb, agnews, pool):
+    """Serving one seeded stream with OnlineConfig(generation=greedy) must
+    reproduce the legacy generation=None run bit for bit — across all nine
+    registered policies, so no scheduling path reads the config where it
+    shouldn't (cache keys, coalescing, billing)."""
+    from repro.api import Gateway
+    from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
+                                      poisson_arrivals)
+
+    gw = Gateway(pool, agnews, artifacts=fitted_rb)
+    pol = gw.policy(name, **POLICY_PARAMS.get(name, {}))
+    test = agnews.subset_indices("test")
+    base = float(pol.window_space(test).cost.min())
+    arrivals = poisson_arrivals(np.random.default_rng(7), 20.0, 3.0, test)
+
+    def run(generation):
+        cfg = OnlineConfig(budget_per_s=20.0 * base * 4.0, window_s=0.25,
+                           generation=generation)
+        # exec_pool, not pool: batch-only narrows the plan's member view
+        srv = OnlineRobatchServer(pol, pol.exec_pool, agnews, cfg)
+        stats = srv.run(list(arrivals))
+        srv.close()
+        return stats
+
+    legacy, shim = run(None), run(GenerationConfig())
+    for f in ("n_submitted", "n_completed", "n_cache_hits", "n_coalesced",
+              "n_dropped", "n_reroutes", "total_cost", "mean_utility"):
+        assert getattr(shim, f) == getattr(legacy, f), f"{name}: {f} drifted"
+
+
+def test_gateway_resolves_spec_generation_into_config():
+    from repro.api import Gateway, PoolSpec, RunSpec
+    from repro.serving.online import OnlineConfig
+
+    gw = Gateway([], None, spec=RunSpec(pool=PoolSpec(temperature=0.6,
+                                                      gen_seed=3)))
+    cfg = gw._resolve_generation(OnlineConfig(budget_per_s=1.0))
+    assert cfg.generation == GenerationConfig(temperature=0.6, seed=3)
+    # an explicit config wins over the spec default
+    explicit = OnlineConfig(budget_per_s=1.0,
+                            generation=GenerationConfig(temperature=0.1))
+    assert gw._resolve_generation(explicit) is explicit
+    # a greedy spec leaves the config untouched (legacy path)
+    gw2 = Gateway([], None, spec=RunSpec())
+    base = OnlineConfig(budget_per_s=1.0)
+    assert gw2._resolve_generation(base) is base

@@ -1,0 +1,191 @@
+"""Routed speculative decoding: bit-identity of the draft/verify engine
+against target-only decoding (the deterministic-match acceptance contract),
+across draft quality extremes, slot counts and greedy/sampled requests, plus
+the paged-KV rollback and telemetry invariants the rounds rely on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShardingConfig, get_arch
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.generation import GenerationConfig
+from repro.serving.speculative import SpeculativeEngine
+
+TOK = ByteTokenizer()
+MAX_LEN = 160
+SYS = "system: you are a terse assistant; answer every query in order. "
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_arch("tiny-s")
+    model = Model(cfg, ShardingConfig(remat="none"))
+    return model, model.init(jax.random.PRNGKey(3))
+
+
+@pytest.fixture(scope="module")
+def draft_params(tiny):
+    """Three draft-quality extremes: the target's own weights (all-accept),
+    independent random weights (mixed accept), all-zero weights (the
+    constant-logits degenerate draft — near-all-reject under sampling)."""
+    model, params = tiny
+    return {"identical": params,
+            "random": model.init(jax.random.PRNGKey(99)),
+            "zero": jax.tree.map(jnp.zeros_like, params)}
+
+
+def _requests(sampled=False):
+    """Shared-prefix batch with varying lengths and budgets; the sampled
+    variant mixes per-request seeds/knobs (and exercises mixed batches via
+    distinct configs per slot)."""
+    out = []
+    for i in range(5):
+        p = SYS + f"query number {i} " + "ab" * (4 * i)
+        g = None
+        if sampled:
+            g = GenerationConfig(max_new=8 + 4 * i, temperature=0.8,
+                                 top_k=50, top_p=0.95, seed=7 + i)
+        out.append(Request(rid=i, tokens=TOK.encode(p), max_new=8 + 4 * i,
+                           gen=g))
+    return out
+
+
+@pytest.fixture(scope="module")
+def target_only(tiny):
+    """Reference streams from the target decoding alone (greedy + sampled)."""
+    model, params = tiny
+
+    def run(sampled):
+        eng = ServingEngine(model, params, max_slots=4, max_len=MAX_LEN,
+                            decode_block=5, paged=True, page_size=16,
+                            eos_id=-1)
+        reqs = _requests(sampled)
+        eng.serve(reqs)
+        return [r.out_tokens for r in reqs]
+
+    return {False: run(False), True: run(True)}
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("kind", ["identical", "random", "zero"])
+@pytest.mark.parametrize("slots", [1, 4])
+def test_bit_identical_to_target_only(tiny, draft_params, target_only,
+                                      sampled, kind, slots):
+    """The acceptance rule's whole point: whatever the draft proposes, the
+    emitted stream IS the target-only stream — the draft moves the accept
+    rate, never the text."""
+    model, params = tiny
+    spec = SpeculativeEngine(model, params, model, draft_params[kind],
+                             max_slots=slots, max_len=MAX_LEN, spec_k=4,
+                             page_size=16, eos_id=-1)
+    reqs = _requests(sampled)
+    spec.serve(reqs)
+    assert [r.out_tokens for r in reqs] == target_only[sampled]
+    # a full serve drains every slot: allocator consistent and empty on both
+    # sides (truncation rollbacks never leak or double-free pages)
+    for eng in (spec.target, spec.draft):
+        eng.kv.alloc.check(tables=eng.kv.slot_pages)
+        assert eng.kv.alloc.pages_in_use == 0
+
+
+def test_identical_draft_accepts_nearly_everything(tiny, target_only):
+    """Same weights on both sides ⇒ every comparison matches; the rate dips
+    below 1.0 only because limit-truncated final windows count their unused
+    draft positions as proposed."""
+    model, params = tiny
+    spec = SpeculativeEngine(model, params, model, params, max_slots=4,
+                             max_len=MAX_LEN, spec_k=4, page_size=16,
+                             eos_id=-1)
+    spec.serve(_requests())
+    assert spec.accept_rate() > 0.8
+    assert spec.n_bonus > 0                  # fully accepted windows occurred
+
+
+def test_counters_account_for_every_round(tiny, draft_params):
+    model, params = tiny
+    spec = SpeculativeEngine(model, params, model, draft_params["random"],
+                             max_slots=4, max_len=MAX_LEN, spec_k=4,
+                             page_size=16, eos_id=-1)
+    reqs = _requests()
+    spec.serve(reqs)
+    n_tok = sum(len(r.out_tokens) for r in reqs)
+    assert spec.n_rounds > 0
+    # k proposals per active slot-round; acceptance can never exceed them
+    assert spec.n_drafted % spec.spec_k == 0
+    assert 0 <= spec.n_accepted <= spec.n_drafted
+    # every emitted token is a prefill first-token, an accept, or ≤ 1
+    # fallback/bonus token per slot-round — so totals bracket the stream
+    assert spec.n_accepted + spec.n_bonus <= n_tok
+    assert n_tok <= (spec.n_accepted + spec.n_drafted // spec.spec_k
+                     + len(reqs))
+    # each round is exactly one draft dispatch + one target dispatch
+    assert spec.draft.n_decode_calls == spec.n_rounds
+    assert spec.target.n_decode_calls == spec.n_rounds
+
+
+def test_eos_retirement_parity(tiny, draft_params, target_only):
+    """With a real (reachable) eos id the speculative engine must retire
+    requests on exactly the token the target-only engine does — the window
+    scan stops at EOS even mid-acceptance."""
+    model, params = tiny
+    flat = [t for w in target_only[False] for t in w[1:]]
+    eos = max(set(flat), key=flat.count)     # a token greedy actually emits
+    ref = ServingEngine(model, params, max_slots=4, max_len=MAX_LEN,
+                        decode_block=5, paged=True, page_size=16, eos_id=eos)
+    r1 = _requests()
+    ref.serve(r1)
+    spec = SpeculativeEngine(model, params, model, draft_params["random"],
+                             max_slots=4, max_len=MAX_LEN, spec_k=4,
+                             page_size=16, eos_id=eos)
+    r2 = _requests()
+    spec.serve(r2)
+    assert [r.out_tokens for r in r1] == [r.out_tokens for r in r2]
+    assert any(eos in r.out_tokens for r in r2), "workload must hit EOS"
+
+
+def test_spec_k_sweep_preserves_stream(tiny, draft_params, target_only):
+    """The emitted stream is invariant to speculation depth (the window size
+    only changes WHERE rounds fall, never what they emit)."""
+    model, params = tiny
+    for k in (1, 3, 8):
+        spec = SpeculativeEngine(model, params, model, draft_params["random"],
+                                 max_slots=4, max_len=MAX_LEN, spec_k=k,
+                                 page_size=16, eos_id=-1)
+        reqs = _requests()
+        spec.serve(reqs)
+        assert [r.out_tokens for r in reqs] == target_only[False], f"k={k}"
+
+
+def test_generate_text_matches_plain_engine(tiny, draft_params):
+    model, params = tiny
+    plain = ServingEngine(model, params, max_slots=2, max_len=MAX_LEN,
+                          decode_block=5, paged=True, page_size=16)
+    spec = SpeculativeEngine(model, params, model, draft_params["random"],
+                             max_slots=2, max_len=MAX_LEN, spec_k=4,
+                             page_size=16)
+    prompts = ["hello there", "speculate on this"]
+    assert spec.generate_text(prompts, max_new=12) == \
+        plain.generate_text(prompts, max_new=12)
+
+
+def test_pool_member_surface(tiny, draft_params):
+    """The drop-in contract ServedPoolMember and the replica factory rely
+    on: config attributes, dispatch counters, kv occupancy with the draft
+    footprint folded in."""
+    model, params = tiny
+    spec = SpeculativeEngine(model, params, model, draft_params["random"],
+                             max_slots=2, max_len=MAX_LEN, spec_k=4,
+                             page_size=16)
+    assert spec.paged and spec.decode_block == 5
+    spec.serve([Request(rid=0, tokens=TOK.encode("abc"), max_new=8)])
+    occ = spec.kv_occupancy()
+    # drained: no live pages on either side, but the peak saw both pools
+    assert occ["kv_bytes"] == 0 and occ["draft_kv_bytes"] == 0
+    assert occ["peak_kv_bytes"] > spec.target.kv_occupancy()["peak_kv_bytes"]
+    assert spec.n_decode_calls == 2 * spec.n_rounds
+    assert spec.n_prefill_calls >= 2         # target + shadow admission
+    with pytest.raises(ValueError, match="spec_k"):
+        SpeculativeEngine(model, params, model, params, spec_k=0)

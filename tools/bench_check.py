@@ -134,6 +134,12 @@ EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          # sharing behaviour change, not runner noise
          "peak_kv_bytes", "page_size", "peak_pages", "prefix_shares",
          "cow_forks",
+         # speculative-decode leg: per-run round/draft/accept counters of the
+         # seeded trained-pair greedy run — drift means the draft/verify
+         # behaviour (or the training recipe feeding it) changed.
+         # "accept_rate" and "speedup" are deliberately ungated: both are
+         # derivable from fields already compared
+         "rounds", "drafted", "accepted", "bonus",
          # http_serving: wire-contract counters — every request must complete
          # and every stream must carry exactly 2 content chunks on the
          # deterministic simulated pool; any drift is a framing/demux change
