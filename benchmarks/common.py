@@ -18,10 +18,11 @@ from repro.core import Robatch
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 # schema of the shared BENCH_online.json gate file — bumped together by
-# every writer (online_throughput.py, engine_decode.py AND http_serving.py
-# merge into the same file; a per-script constant would make the schema
-# order-dependent)
-BENCH_SCHEMA = 7          # 7: speculative-decode leg (engine_decode spec rows)
+# every writer (online_throughput.py, engine_decode.py, http_serving.py AND
+# robustness.py merge into the same file; a per-script constant would make
+# the schema order-dependent)
+BENCH_SCHEMA = 8          # 8: robustness legs (per-member autoscale events,
+#                              robust-λ sweep, hung-replica failover)
 
 
 @functools.lru_cache(maxsize=32)

@@ -456,7 +456,8 @@ def run(pool_kind: str | None = None, steps: int = 200, qps: float = 6.0,
         with open(bench_path) as f:
             prior = json.load(f)
         for sec, cfg_key in (("engine_decode", "engine"),
-                             ("http_serving", "http")):
+                             ("http_serving", "http"),
+                             ("robustness", "robustness")):
             if sec in prior:
                 bench[sec] = prior[sec]
                 bench["config"][cfg_key] = prior.get("config", {}).get(cfg_key)

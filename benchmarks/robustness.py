@@ -1,0 +1,270 @@
+"""Robustness benchmark: the three failure axes PR 10 hardened, each driven
+to deterministic counters and merged into the blocking bench gate.
+
+* **bottleneck_burst** — a scripted capacity burst attributed to ONE pool
+  member (``WindowReport.held_by_member``) drives the bottleneck-aware
+  :class:`~repro.serving.autoscale.Autoscaler` against real
+  :class:`~repro.serving.pool.ReplicaSet`\\ s: only the pressured member may
+  grow, it must drain back after the burst, and its siblings must never see
+  a scale event — asserted via exact per-member ``events_by_member()``
+  counters.
+* **robust_sweep** — the uncertainty-robust frontier walk
+  (``greedy_schedule(robust_lambda=λ, cost_margin=m)``) against seeded
+  adverse noise ∝ the calibration ``sigma`` carried by the candidate space:
+  realized utility (û − draw·σ at the chosen states) of the best λ>0
+  schedule must beat the λ=0 point-estimate schedule, every robust schedule
+  must fit its worst-case cost ``(1+m)·Σc`` inside the budget, and the λ=0
+  walk must be bit-identical across runs.
+* **hung_replica** — one replica of the anchor member wrapped in a hanging
+  :class:`~repro.serving.fault.ChaosMember`, served through the online loop
+  with ``dispatch_timeout_s`` set: the set times the hang out, fails over to
+  the sibling, ejects the dead replica after the second hang, and the
+  member's breaker stays CLOSED (even at ``failure_threshold=1``) because
+  the ReplicaSet absorbed the fault — completed == submitted, nothing shed.
+
+Results join ``results/bench/BENCH_online.json`` as the ``robustness``
+section (rows keyed by ``leg``/``lam``/``member``) for
+``tools/bench_check.py`` — event/hang/timeout counters exactly, utilities
+and rates with tolerance bands.
+
+    PYTHONPATH=src python benchmarks/robustness.py      # BENCH_QUICK=1 to shrink
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import BENCH_SCHEMA, QUICK, RESULTS_DIR, emit, save, setup
+from repro.core.scheduler import greedy_schedule
+from repro.serving.autoscale import AutoscalePolicy, Autoscaler
+from repro.serving.fault import BreakerPolicy, ChaosMember
+from repro.serving.online import (OnlineConfig, OnlineRobatchServer,
+                                  WindowReport, poisson_arrivals)
+from repro.serving.pool import replicate_simulated
+
+LAMS = (0.5, 1.0, 2.0)
+COST_MARGIN = 0.1
+NOISE_X = 2.0          # adverse-draw amplification (draw = NOISE_X·|N(0,1)|·σ)
+
+
+# --------------------------------------------------------------- leg A
+def leg_bottleneck_burst(pool, rows, bench_rows):
+    """Scripted one-member burst through the per-member autoscaler: the
+    window reports attribute every held query to member 1, so member 1 —
+    and ONLY member 1 — must scale up, then drain once the burst ends."""
+    sets = [replicate_simulated(m, 1) for m in pool]
+    policy = AutoscalePolicy(min_replicas=1, max_replicas=3, up_pressure=4,
+                             down_pressure=0, up_queue_depth=10 ** 9,
+                             down_queue_depth=4, hold_windows=2,
+                             cooldown_s=0.9, step=1)
+    scaler = Autoscaler(sets, policy)
+    bottleneck = 1
+    peak = 1
+    t0 = time.perf_counter()
+    for i in range(6):            # burst: 6 held queries/window on member 1
+        rep = WindowReport(t=0.5 * (i + 1), n_capacity_held=6,
+                           held_by_member=((bottleneck, 6),),
+                           group_models=tuple(range(len(sets))))
+        scaler.observe(rep, queue_depth=0, now=rep.t)
+        peak = max(peak, max(scaler.replica_counts()))
+    for i in range(6):            # idle: pressure gone, pool must drain
+        rep = WindowReport(t=3.5 + 0.5 * i)
+        scaler.observe(rep, queue_depth=0, now=rep.t)
+    wall = time.perf_counter() - t0
+    by_member = scaler.events_by_member()
+    end = scaler.replica_counts()
+
+    assert set(by_member) == {sets[bottleneck].name}, \
+        f"scale events leaked to non-bottleneck members: {by_member}"
+    assert by_member[sets[bottleneck].name] == (2, 2), \
+        f"expected 2 up + 2 down on the bottleneck, got {by_member}"
+    assert peak == 3, f"burst should reach max_replicas=3, peaked at {peak}"
+    assert end == tuple(1 for _ in sets), f"pool did not drain: {end}"
+
+    for k, rs in enumerate(sets):
+        ups, downs = by_member.get(rs.name, (0, 0))
+        row = dict(leg="bottleneck", member=rs.name, events_up=ups,
+                   events_down=downs, max_replicas=(peak if k == bottleneck
+                                                    else 1),
+                   end_replicas=end[k])
+        rows.append(dict(scenario="robustness", **row, wall_s=wall))
+        bench_rows.append(row)
+    emit("robust_bottleneck", wall / 12 * 1e6,
+         f"events={dict(by_member)};peak={peak};end={end}")
+
+
+# --------------------------------------------------------------- leg B
+def leg_robust_sweep(wl, rb, rows, bench_rows, *, budget_x, seed):
+    """λ sweep of the uncertainty-robust walk under seeded adverse noise:
+    the scheduler sees (û, σ); realization draws û − NOISE_X·|N|·σ."""
+    test = wl.subset_indices("test")
+    space = rb.candidate_space(test)
+    assert space.sigma is not None, "fitted space must carry calibration sigma"
+    rng = np.random.default_rng(seed)
+    draws = NOISE_X * np.abs(rng.standard_normal(space.util.shape))
+    realized_mat = space.util - draws * space.sigma
+    budget = float(space.cost[:, space.initial_state].sum()) * budget_x
+    col_of = {(s.model, s.batch): j for j, s in enumerate(space.states)}
+    n = len(test)
+
+    def realized(res) -> float:
+        cols = np.array([col_of[(int(m), int(b))] for m, b in
+                         zip(res.assignment.model, res.assignment.batch)])
+        return float(realized_mat[np.arange(n), cols].sum())
+
+    point = greedy_schedule(space, test, budget)
+    again = greedy_schedule(space, test, budget)
+    lam0_identical = (point.est_utility == again.est_utility
+                      and point.amortized_cost == again.amortized_cost
+                      and np.array_equal(point.assignment.model,
+                                         again.assignment.model)
+                      and np.array_equal(point.assignment.batch,
+                                         again.assignment.batch))
+    assert lam0_identical, "λ=0 schedule is not deterministic across runs"
+    point_realized = realized(point)
+
+    t0 = time.perf_counter()
+    results = []
+    for lam in (0.0,) + LAMS:
+        margin = 0.0 if lam == 0.0 else COST_MARGIN
+        res = greedy_schedule(space, test, budget,
+                              robust_lambda=lam, cost_margin=margin)
+        r_util = realized(res)
+        within = bool(res.amortized_cost * (1 + margin) <= budget + 1e-9)
+        row = dict(leg="robust", lam=lam, cost_margin=margin,
+                   est_utility=res.est_utility,
+                   amortized_cost=res.amortized_cost,
+                   realized_utility=r_util, upgrades=res.n_upgrades,
+                   within_worst_case=within,
+                   beats_point_estimate=bool(r_util >= point_realized),
+                   lam0_identical=bool(lam0_identical) if lam == 0.0 else True)
+        results.append(row)
+        rows.append(dict(scenario="robustness", **row))
+        bench_rows.append(row)
+        emit(f"robust_lam{lam:g}",
+             (time.perf_counter() - t0) / max(1, n) * 1e6,
+             f"est={res.est_utility:.2f};realized={r_util:.2f};"
+             f"worst_cost={res.amortized_cost * (1 + margin):.5f}"
+             f"/{budget:.5f};upgrades={res.n_upgrades}")
+        assert within, \
+            f"λ={lam}: worst-case cost overran the budget it promised to fit"
+
+    best = max(results[1:], key=lambda r: r["realized_utility"])
+    assert best["realized_utility"] > point_realized, \
+        (f"robust walk gained nothing under adverse noise: best λ="
+         f"{best['lam']} realized {best['realized_utility']:.3f} vs "
+         f"point {point_realized:.3f}")
+    return budget
+
+
+# --------------------------------------------------------------- leg C
+def leg_hung_replica(wl, pool, rb, rows, bench_rows, *, qps, duration,
+                     budget_x, seed):
+    """One anchor replica hangs (wall-clock sleep); the ReplicaSet's
+    dispatch timeout unwedges the serving thread, fails over to the
+    sibling, and ejects the hung replica — the member's breaker must stay
+    CLOSED even at a hair-trigger failure_threshold=1."""
+    hung_k = 0                    # the cheap anchor member serves every window
+    sets = [replicate_simulated(m, 2, dispatch_timeout_s=0.25)
+            for m in pool]
+    sets[hung_k].replicas[0] = ChaosMember(
+        sets[hung_k].replicas[0], seed=seed,
+        hang_from=0, hang_until=2, hang_s=1.0)
+    chaos = sets[hung_k].replicas[0]
+
+    test = wl.subset_indices("test")
+    base = float(rb.cost_model.state_cost(
+        0, rb.calibrations[0].b_effect, test).mean())
+    cfg = OnlineConfig(budget_per_s=qps * base * budget_x, window_s=0.5,
+                       breaker=BreakerPolicy(failure_threshold=1,
+                                             recovery_time_s=1e9))
+    srv = OnlineRobatchServer(rb, sets, wl, cfg)
+    arrivals = poisson_arrivals(np.random.default_rng(seed), qps, duration,
+                                test, repeat_frac=0.2)
+    t0 = time.perf_counter()
+    stats = srv.run(arrivals)
+    wall = time.perf_counter() - t0
+    srv.close()
+
+    tracker = sets[hung_k].tracker
+    closed = all(br.state.value == "closed" for br in srv.breakers)
+    row = dict(leg="hung_replica", member=sets[hung_k].name,
+               completed=stats.n_completed, submitted=stats.n_submitted,
+               dropped=stats.n_dropped, hangs=chaos.n_hangs,
+               timeouts=sets[hung_k].n_timeouts,
+               ejections=tracker.replicas[0].n_ejections,
+               breaker_closed=bool(closed), sustained_qps=stats.qps,
+               p99_s=stats.latency_p99)
+    rows.append(dict(scenario="robustness", **row, wall_s=wall))
+    bench_rows.append(row)
+    emit("robust_hung_replica", wall / max(1, len(arrivals)) * 1e6,
+         f"hangs={chaos.n_hangs};timeouts={sets[hung_k].n_timeouts};"
+         f"ejections={row['ejections']};breakers_closed={closed};"
+         f"completed={stats.n_completed}/{stats.n_submitted}")
+    assert stats.n_completed == stats.n_submitted, "hung-replica run lost queries"
+    assert stats.n_dropped == 0, "timeout failover must not shed work"
+    assert chaos.n_hangs == 2, \
+        f"hang window [0,2) not consumed: {chaos.n_hangs} hangs"
+    assert sets[hung_k].n_timeouts == 2, \
+        f"each hang must cost exactly one timeout: {sets[hung_k].n_timeouts}"
+    assert row["ejections"] == 1, "second timeout must eject the hung replica"
+    assert closed, "a replica-level hang must never trip the member breaker"
+
+
+def run(qps: float = 6.0, duration: float = 10.0, budget_x: float = 3.0,
+        seed: int = 0):
+    wl, pool, rb = setup("agnews", router="knn", coreset_size=64, seed=seed)
+    rows: list[dict] = []
+    bench_rows: list[dict] = []
+    leg_bottleneck_burst(pool, rows, bench_rows)
+    budget = leg_robust_sweep(wl, rb, rows, bench_rows,
+                              budget_x=budget_x, seed=seed)
+    leg_hung_replica(wl, pool, rb, rows, bench_rows, qps=qps,
+                     duration=duration, budget_x=budget_x, seed=seed)
+    save("robustness", rows)
+    _merge_into_gate(bench_rows, dict(
+        task="agnews", quick=QUICK, qps=qps, duration=duration,
+        budget_x=budget_x, seed=seed, lams=list(LAMS),
+        cost_margin=COST_MARGIN, noise_x=NOISE_X, budget=budget))
+    return rows
+
+
+def _merge_into_gate(bench_rows, cfg):
+    """Attach the robustness section to the shared BENCH_online.json (the
+    file the blocking CI gate compares); other sections are preserved."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    bench_path = os.path.join(RESULTS_DIR, "BENCH_online.json")
+    try:
+        with open(bench_path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        bench = {"config": {}}
+    bench["schema"] = BENCH_SCHEMA
+    bench.setdefault("config", {})["robustness"] = cfg
+    bench["robustness"] = bench_rows
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {bench_path} (robustness section)", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--qps", type=float, default=6.0)
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--budget-x", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(qps=args.qps, duration=args.duration, budget_x=args.budget_x,
+        seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

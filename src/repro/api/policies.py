@@ -53,10 +53,16 @@ class RobatchPolicy(SchedulingPolicy):
     requires_budget = True
     scheduler = "heap"
 
-    def __init__(self, cap_mode: str = "pack"):
+    def __init__(self, cap_mode: str = "pack", robust: float = 0.0,
+                 cost_margin: float = 0.0):
         if cap_mode not in ("pack", "defer"):
             raise ValueError(f"cap_mode must be 'pack' or 'defer', got {cap_mode!r}")
+        if robust < 0 or cost_margin < 0:
+            raise ValueError(f"robust λ and cost_margin must be ≥ 0, got "
+                             f"robust={robust!r} cost_margin={cost_margin!r}")
         self.cap_mode = cap_mode
+        self.robust = float(robust)
+        self.cost_margin = float(cost_margin)
 
     def _post_fit(self) -> None:
         self._engine = self._make_engine()
@@ -86,10 +92,13 @@ class RobatchPolicy(SchedulingPolicy):
         """Windowed Alg. 1 under the class's scheduler variant (the
         vectorized fig11 fast path applies online too), capacity-capped when
         the pool is replicated (capacity-aware Δ-heap packing unless
-        ``cap_mode="defer"``)."""
+        ``cap_mode="defer"``), uncertainty-robust when ``robust`` (λ) or
+        ``cost_margin`` is set."""
         res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
                                      scheduler=self.scheduler,
-                                     cap_mode=self.cap_mode)
+                                     cap_mode=self.cap_mode,
+                                     robust_lambda=self.robust,
+                                     cost_margin=self.cost_margin)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),

@@ -99,6 +99,11 @@ class SchedulingPolicy:
     #   "defer" — legacy _apply_group_caps post-pass (defer every over-cap
     #             group wholesale) — the safety-net semantics the online
     #             server also applies to caps-unaware policies
+    robust: float = 0.0             # λ of the uncertainty-robust walk: each
+    #   state's proxy utility is penalized by λ·σ (calibration-residual std);
+    #   0 keeps the point-estimate walk bit-identical
+    cost_margin: float = 0.0        # worst-case budget margin: the walk draws
+    #   the window budget down at cost·(1+margin)
 
     # fitted attributes (set by fit())
     rb: Optional[Robatch] = None
@@ -172,7 +177,9 @@ class SchedulingPolicy:
         still don't fit come back in ``Plan.deferred_idx`` for the server to
         requeue."""
         res = greedy_schedule_window(space, query_idx, budget, group_caps=caps,
-                                     cap_mode=self.cap_mode)
+                                     cap_mode=self.cap_mode,
+                                     robust_lambda=self.robust,
+                                     cost_margin=self.cost_margin)
         groups = group_into_batches(res.assignment)
         return Plan(query_idx=np.asarray(query_idx), groups=groups,
                     group_costs=amortized_group_costs(self.cm, groups),

@@ -25,6 +25,11 @@ class CandidateSpace:
     cost: np.ndarray              # (n, B̃) amortized per-query cost, Eq. 13
     util: np.ndarray              # (n, B̃) proxy utility û_{i,k,b}, Eq. 8
     initial_state: int            # column index of s(0) = (m_1, b_1^effect)
+    sigma: np.ndarray | None = None
+    # ^ (n, B̃) per-state utility uncertainty (calibration-residual std of the
+    #   proxy, ModelCalibration.u_std_at broadcast over queries); None when
+    #   the calibration predates the robust walk — the scheduler's robust
+    #   mode (utility − λ·σ) degrades to the point-estimate walk then
 
 
 def build_candidate_space(
@@ -40,6 +45,7 @@ def build_candidate_space(
     states: list[State] = []
     cost_cols: list[np.ndarray] = []
     util_cols: list[np.ndarray] = []
+    sigma_cols: list[np.ndarray] = []
     initial = -1
     for cal in calibrations:
         k = cal.k
@@ -48,6 +54,7 @@ def build_candidate_space(
             rho_fn = cal.scaling.per_query(query_emb)
         else:
             rho_fn = None
+        u_std_at = getattr(cal, "u_std_at", {}) or {}
         for b in cal.grid:
             b = int(b)
             states.append(State(k, b))
@@ -57,6 +64,7 @@ def build_candidate_space(
             else:
                 rho = float(np.asarray(cal.scaling(b)))
             util_cols.append(np.clip(u_hat_1[:, k] * rho, 0.0, 1.0))
+            sigma_cols.append(np.full(n, float(u_std_at.get(b, 0.0))))
         if k == 0:
             initial = states.index(State(0, int(cal.b_effect)))
     assert initial >= 0, "cheapest model must provide its effective batch size"
@@ -65,6 +73,7 @@ def build_candidate_space(
         cost=np.stack(cost_cols, axis=1),
         util=np.stack(util_cols, axis=1),
         initial_state=initial,
+        sigma=np.stack(sigma_cols, axis=1),
     )
 
 

@@ -243,6 +243,10 @@ class ModelCalibration:
     grid: np.ndarray              # valid batch sizes B_k = grid ≤ b_effect
     scaling: object               # ρ_k(b) callable (or KNNScaling)
     u_mean_at: dict[int, float] = field(default_factory=dict)  # profiled means
+    u_std_at: dict[int, float] = field(default_factory=dict)
+    # ^ per-batch-size std of the profiled coreset utilities — the calibration
+    #   residual σ_k(b) the robust frontier walk penalizes (utility − λ·σ).
+    #   Defaulted so profiles pickled before this field existed still load.
 
 
 def calibrate_model(
@@ -267,6 +271,15 @@ def calibrate_model(
     valid = grid[grid <= b_eff]
     # profile every valid grid point (cached; ternary search already hit many)
     u = np.array([cache.mean_utility(k, int(b)) for b in valid])
+    # σ_k(b): dispersion of the per-coreset-query utilities behind each mean,
+    # over the same full batches mean_utility averages — the uncertainty the
+    # robust frontier walk (scheduler robust_lambda) penalizes
+    u_sd = []
+    for b in valid:
+        uu = cache.utilities(k, int(b))
+        n_full = (len(cache.coreset_idx) // int(b)) * int(b)
+        uu = uu[:n_full] if n_full else uu
+        u_sd.append(float(uu.std()))
     util_table = None
     if fit == "knn":
         util_table = np.stack([cache.utilities(k, int(b)) for b in valid], axis=1)
@@ -274,4 +287,5 @@ def calibrate_model(
     return ModelCalibration(
         k=k, b_max=b_max, b_effect=int(b_eff), grid=valid, scaling=scaling,
         u_mean_at={int(b): float(x) for b, x in zip(valid, u)},
+        u_std_at={int(b): float(s) for b, s in zip(valid, u_sd)},
     )

@@ -74,10 +74,33 @@ def attach_free_assignments(res: ScheduleResult,
     return res
 
 
+def _robust_view(space: CandidateSpace, robust_lambda: float,
+                 cost_margin: float) -> tuple[np.ndarray, np.ndarray]:
+    """(walk_cost, walk_util) the robust frontier walk decides on.
+
+    ``robust_lambda`` penalizes each state's proxy utility by λ·σ (its
+    calibration-residual std, :attr:`CandidateSpace.sigma`) — upgrades whose
+    estimated gain rests on noisy calibration stop looking attractive.
+    ``cost_margin`` inflates every cost by (1 + margin): the walk draws the
+    budget down at worst-case prices, so a realized cost overrun up to the
+    margin still lands inside the window's slice.  At λ=0 and margin=0 the
+    original matrices are returned UNCHANGED (same objects), so the default
+    path stays bit-identical to the point-estimate walk (property-tested).
+    """
+    lam = float(robust_lambda)
+    walk_util = (space.util - lam * space.sigma
+                 if lam > 0.0 and space.sigma is not None else space.util)
+    mfac = 1.0 + float(cost_margin)
+    walk_cost = space.cost * mfac if mfac != 1.0 else space.cost
+    return walk_cost, walk_util
+
+
 def greedy_schedule(
     space: CandidateSpace,
     query_idx: np.ndarray,
     budget: float,
+    robust_lambda: float = 0.0,
+    cost_margin: float = 0.0,
 ) -> ScheduleResult:
     """Algorithm 1.
 
@@ -88,11 +111,23 @@ def greedy_schedule(
     remaining budget is monotonically decreasing and frontier costs are
     ascending, so an upgrade that is unaffordable now can never become
     affordable later, and no later state of the same query can be cheaper.
+
+    ``robust_lambda``/``cost_margin`` switch on the uncertainty-robust walk
+    (see :func:`_robust_view`): frontiers, Δ gains and budget feasibility use
+    the penalized utility and worst-case cost, while the returned
+    ``est_utility``/``amortized_cost`` stay in raw (point-estimate) currency —
+    ``spent_budget`` is the worst-case draw the walk committed to.
     """
     query_idx = np.asarray(query_idx)
     n = len(query_idx)
-    frontiers = build_frontiers(space)
-    cost, util = space.cost, space.util
+    walk_cost, walk_util = _robust_view(space, robust_lambda, cost_margin)
+    if walk_cost is space.cost and walk_util is space.util:
+        frontiers = build_frontiers(space)
+    else:
+        frontiers = build_frontiers(CandidateSpace(
+            states=space.states, cost=walk_cost, util=walk_util,
+            initial_state=space.initial_state))
+    cost, util = walk_cost, walk_util
 
     # position of each query along its frontier (0 == initial state)
     pos = np.zeros(n, dtype=int)
@@ -134,8 +169,8 @@ def greedy_schedule(
     chosen = np.array([frontiers[i][pos[i]] for i in range(n)])
     model = np.array([space.states[j].model for j in chosen])
     batch = np.array([space.states[j].batch for j in chosen])
-    est_u = float(util[np.arange(n), chosen].sum())
-    amort = float(cost[np.arange(n), chosen].sum())
+    est_u = float(space.util[np.arange(n), chosen].sum())
+    amort = float(space.cost[np.arange(n), chosen].sum())
     return ScheduleResult(
         assignment=Assignment(query_idx=query_idx, model=model, batch=batch),
         est_utility=est_u,
@@ -151,6 +186,8 @@ def greedy_schedule_vectorized(
     query_idx: np.ndarray,
     budget: float,
     rounds: int = 64,
+    robust_lambda: float = 0.0,
+    cost_margin: float = 0.0,
 ) -> ScheduleResult:
     """Beyond-paper: round-based vectorized variant of Alg. 1.
 
@@ -166,7 +203,13 @@ def greedy_schedule_vectorized(
     """
     query_idx = np.asarray(query_idx)
     n = len(query_idx)
-    frontiers = build_frontiers(space)
+    walk_cost, walk_util = _robust_view(space, robust_lambda, cost_margin)
+    if walk_cost is space.cost and walk_util is space.util:
+        frontiers = build_frontiers(space)
+    else:
+        frontiers = build_frontiers(CandidateSpace(
+            states=space.states, cost=walk_cost, util=walk_util,
+            initial_state=space.initial_state))
     max_t = max(len(f) for f in frontiers)
     # pad frontiers into a dense (n, max_t) matrix of state columns
     fr = np.full((n, max_t), -1, dtype=int)
@@ -174,8 +217,8 @@ def greedy_schedule_vectorized(
         fr[i, : len(f)] = f
     fr_len = np.array([len(f) for f in frontiers])
     rows = np.arange(n)
-    costs = np.where(fr >= 0, space.cost[rows[:, None], np.maximum(fr, 0)], np.inf)
-    utils = np.where(fr >= 0, space.util[rows[:, None], np.maximum(fr, 0)], -np.inf)
+    costs = np.where(fr >= 0, walk_cost[rows[:, None], np.maximum(fr, 0)], np.inf)
+    utils = np.where(fr >= 0, walk_util[rows[:, None], np.maximum(fr, 0)], -np.inf)
 
     pos = np.zeros(n, dtype=int)
     remaining = budget - costs[:, 0].sum()
@@ -231,7 +274,9 @@ def restrict_space(space: CandidateSpace, allowed_models: set[int]) -> Candidate
     else:
         initial = int(np.argmin(cost.sum(axis=0)))
     return CandidateSpace(states=[space.states[j] for j in keep],
-                          cost=cost, util=util, initial_state=initial)
+                          cost=cost, util=util, initial_state=initial,
+                          sigma=(space.sigma[:, keep]
+                                 if space.sigma is not None else None))
 
 
 def take_rows(space: CandidateSpace, rows: np.ndarray) -> CandidateSpace:
@@ -239,7 +284,9 @@ def take_rows(space: CandidateSpace, rows: np.ndarray) -> CandidateSpace:
     the window; the deferred suffix is rescheduled next tick)."""
     rows = np.asarray(rows)
     return CandidateSpace(states=space.states, cost=space.cost[rows],
-                          util=space.util[rows], initial_state=space.initial_state)
+                          util=space.util[rows], initial_state=space.initial_state,
+                          sigma=(space.sigma[rows]
+                                 if space.sigma is not None else None))
 
 
 def _apply_group_caps(res: ScheduleResult, space: CandidateSpace,
@@ -317,6 +364,8 @@ def greedy_schedule_capped(
     budget: float,
     group_caps: dict[int, int],
     scheduler: str = "heap",
+    robust_lambda: float = 0.0,
+    cost_margin: float = 0.0,
 ) -> ScheduleResult:
     """Capacity-aware Alg. 1: pack the window instead of deferring it.
 
@@ -342,11 +391,18 @@ def greedy_schedule_capped(
     """
     query_idx = np.asarray(query_idx)
     fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
-    res = fn(space, query_idx, budget)
+    res = fn(space, query_idx, budget, robust_lambda=robust_lambda,
+             cost_margin=cost_margin)
     caps = {int(k): int(c) for k, c in group_caps.items() if c is not None}
     a = res.assignment
     if all(d <= caps.get(k, d) for k, d in _group_demand(a.model, a.batch).items()):
         return res                                  # caps never bind: untouched
+    # the packing passes keep deciding in the walk's currency: worst-case
+    # prices draw the refunded budget down, penalized utilities rank the
+    # spill victims.  mfac == 1.0 and walk_util is space.util at the default
+    # λ=0/margin=0, so those paths stay bit-identical to the prior code.
+    mfac = 1.0 + float(cost_margin)
+    _, walk_util = _robust_view(space, robust_lambda, cost_margin)
 
     n = len(a.query_idx)
     state_col = {(s.model, s.batch): j for j, s in enumerate(space.states)}
@@ -359,7 +415,7 @@ def greedy_schedule_capped(
         cols_of[k].sort(key=lambda j: space.states[j].batch)
 
     active = np.ones(n, dtype=bool)
-    remaining = budget - res.amortized_cost
+    remaining = budget - res.amortized_cost * mfac
     n_packed = 0
     deferred_rows: list[int] = []
     # both keyed by the OVER-CAP member whose cap forced the move/defer (the
@@ -402,7 +458,7 @@ def greedy_schedule_capped(
                     continue
                 w = wider[0]
                 rows = np.where(active & (col == j))[0]
-                remaining += float((space.cost[rows, j] - space.cost[rows, w]).sum())
+                remaining += float((space.cost[rows, j] - space.cost[rows, w]).sum()) * mfac
                 col[rows] = w
                 n_packed += len(rows)
                 packed_by[k] = packed_by.get(k, 0) + len(rows)
@@ -416,10 +472,10 @@ def greedy_schedule_capped(
         # 2./3. spill overflow beyond cap·b_max to members with headroom
         jw = cols_of[k][-1]
         rows_k = np.where(active & (col == jw))[0]
-        order = rows_k[np.argsort(space.util[rows_k, jw], kind="stable")]
+        order = rows_k[np.argsort(walk_util[rows_k, jw], kind="stable")]
         n_keep = max(0, cap) * int(space.states[jw].batch)
         for i in order[: max(0, len(rows_k) - n_keep)]:
-            remaining += float(space.cost[i, jw])   # refund the vacated state
+            remaining += float(space.cost[i, jw]) * mfac   # refund the vacated state
             active[i] = False
             placed = False
             cand = [j for kk, js in cols_of.items() if kk != k for j in js]
@@ -428,11 +484,11 @@ def greedy_schedule_capped(
                 kk = int(space.states[j].model)
                 if caps.get(kk, 1) <= 0 or not fits_one_more(kk, j):
                     continue
-                if float(space.cost[i, j]) > remaining + 1e-12:
+                if float(space.cost[i, j]) * mfac > remaining + 1e-12:
                     continue
                 col[i] = j
                 active[i] = True
-                remaining -= float(space.cost[i, j])
+                remaining -= float(space.cost[i, j]) * mfac
                 n_packed += 1
                 packed_by[k] = packed_by.get(k, 0) + 1
                 placed = True
@@ -468,6 +524,8 @@ def greedy_schedule_window(
     group_caps: dict[int, int] | None = None,
     scheduler: str = "heap",
     cap_mode: str = "pack",
+    robust_lambda: float = 0.0,
+    cost_margin: float = 0.0,
 ) -> ScheduleResult:
     """One online scheduling round: Alg. 1 over a single admission window.
 
@@ -512,9 +570,12 @@ def greedy_schedule_window(
         space = restrict_space(space, set(allowed_models))
     if group_caps and cap_mode == "pack":
         return greedy_schedule_capped(space, query_idx, budget, group_caps,
-                                      scheduler=scheduler)
+                                      scheduler=scheduler,
+                                      robust_lambda=robust_lambda,
+                                      cost_margin=cost_margin)
     fn = greedy_schedule_vectorized if scheduler == "vectorized" else greedy_schedule
-    res = fn(space, query_idx, budget)
+    res = fn(space, query_idx, budget, robust_lambda=robust_lambda,
+             cost_margin=cost_margin)
     if group_caps:
         res = _apply_group_caps(res, space, group_caps)
     return res

@@ -265,6 +265,9 @@ def bind_server_metrics(registry: MetricsRegistry, server,
         ("member",))
     replicas = registry.gauge(f"{prefix}_member_replicas",
                               "active replicas per member", ("member",))
+    scale_events = registry.counter(
+        f"{prefix}_scale_events_total",
+        "autoscale actions fired, by member and direction", ("member", "direction"))
     pending_builds = registry.gauge(
         f"{prefix}_member_pending_builds",
         "async replica builds launched but not yet attached", ("member",))
@@ -363,6 +366,9 @@ def bind_server_metrics(registry: MetricsRegistry, server,
             if br.n_trips > trips_seen[k]:
                 breaker_trips.labels(member=name).inc(br.n_trips - trips_seen[k])
                 trips_seen[k] = br.n_trips
+        for member, from_n, to_n in getattr(rep, "scale_events", ()):
+            direction = "up" if to_n > from_n else "down"
+            scale_events.labels(member=member, direction=direction).inc()
         for k, n in enumerate(rep.replica_counts):
             replicas.labels(member=names[k]).set(n)
         for name, m in zip(names, server.pool):

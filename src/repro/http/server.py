@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import json
 import queue
+import sys
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -237,6 +238,7 @@ class HttpFrontend:
         self._stop = threading.Event()
         self._loop: Optional[threading.Thread] = None
         self._serve: Optional[threading.Thread] = None
+        self.threads_leaked: list[str] = []   # set by stop(); [] == clean exit
 
     @property
     def port(self) -> int:
@@ -277,7 +279,9 @@ class HttpFrontend:
     def stop(self, timeout_s: float = 10.0) -> None:
         """Graceful shutdown: stop accepting connections, wake the serving
         loop (which drains pending requests so no waiter hangs), join both
-        threads."""
+        threads.  A thread that outlives its join lands in
+        :attr:`threads_leaked` (and a stderr warning) instead of being
+        silently abandoned — the launcher's shutdown marker reports it."""
         self._httpd.shutdown()
         self._httpd.server_close()
         self._stop.set()
@@ -285,6 +289,12 @@ class HttpFrontend:
             self._serve.join(timeout=timeout_s)
         if self._loop is not None:
             self._loop.join(timeout=timeout_s)
+        self.threads_leaked = [t.name for t in (self._serve, self._loop)
+                               if t is not None and t.is_alive()]
+        if self.threads_leaked:
+            print(f"HttpFrontend.stop: WARNING threads still alive "
+                  f"{timeout_s}s after shutdown: {self.threads_leaked}",
+                  file=sys.stderr)
         self.server.close()
 
     def __enter__(self) -> "HttpFrontend":

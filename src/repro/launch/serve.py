@@ -175,6 +175,29 @@ def engine_main(argv):
               f"{tok.decode(r.out_tokens)[:48]!r}")
 
 
+def _add_robust_flags(ap):
+    """Shared online/http uncertainty-robust scheduling flags (they land on
+    the PolicySpec params, so --spec files can declare the same fields)."""
+    ap.add_argument("--robust-lambda", type=float, default=None,
+                    help="uncertainty penalty λ of the robust frontier walk "
+                         "(utility − λ·σ); 0 = the point-estimate walk "
+                         "(docs/robustness.md)")
+    ap.add_argument("--cost-margin", type=float, default=None,
+                    help="worst-case budget margin: the walk draws the window "
+                         "budget down at cost·(1+margin)")
+
+
+def _apply_robust_flags(prog, spec, args):
+    if args.robust_lambda is None and args.cost_margin is None:
+        return
+    params = dict(spec.policy.params)
+    if args.robust_lambda is not None:
+        params["robust"] = args.robust_lambda
+    if args.cost_margin is not None:
+        params["cost_margin"] = args.cost_margin
+    spec.policy.params = params
+
+
 def _add_generation_flags(ap):
     """Shared online/http sampling + speculative-decoding flags (they land on
     the PoolSpec, so --spec files can declare the same fields)."""
@@ -280,7 +303,13 @@ def online_main(argv):
                          "(repro.serving.semcache; see docs/caching.md)")
     ap.add_argument("--sim-threshold", type=float, default=None,
                     help="semantic-cache cosine hit threshold (default 0.92)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="wrap every pool member in a seeded ChaosMember fault "
+                         "injector (latency noise everywhere, a short error "
+                         "burst on the most expensive member) — the smoke "
+                         "suite's degraded-path leg (docs/robustness.md)")
     _add_generation_flags(ap)
+    _add_robust_flags(ap)
     ap.add_argument("--n-train", type=int, default=None)
     ap.add_argument("--coreset", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
@@ -309,6 +338,7 @@ def online_main(argv):
         spec.pool.semantic_cache = True
         spec.pool.sim_threshold = args.sim_threshold
     _apply_generation_flags("serve online", spec, args)
+    _apply_robust_flags("serve online", spec, args)
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve online: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -337,8 +367,20 @@ def online_main(argv):
     print(f"streaming {len(arrivals)} arrivals at {args.qps} qps ({mode}) "
           f"through policy={spec.policy.name}, window {args.window}s, "
           f"budget ${rate:.6f}/s...")
+    chaos = None
+    if args.chaos is not None:
+        from repro.serving.fault import ChaosMember
+
+        # latency noise everywhere; a short (sub-breaker-threshold) error
+        # burst on the most expensive member so the degraded path exercises
+        # reroutes while every breaker ends the run CLOSED
+        last = len(gw.pool) - 1
+        chaos = [ChaosMember(m, seed=args.chaos + k, latency_noise_s=0.002,
+                             fail_from=1 if k == last else 10**9,
+                             fail_until=3 if k == last else 10**9)
+                 for k, m in enumerate(gw.pool)]
     t_wall = time.monotonic()
-    stats = gw.serve(arrivals, cfg, live=args.realtime)
+    stats = gw.serve(arrivals, cfg, live=args.realtime, pool=chaos)
     wall = time.monotonic() - t_wall
     srv = gw.server
 
@@ -348,6 +390,9 @@ def online_main(argv):
         print(f"realtime: {wall:.2f}s wall for a {args.duration:.0f}s stream · "
               f"{len(late)} windows · max window lateness "
               f"{max(late, default=0.0) * 1e3:.1f}ms")
+        if getattr(srv, "pacer_leaked", False):
+            print("serve online: WARNING arrival pacer thread leaked past "
+                  "shutdown join", file=sys.stderr)
     by_model = {}
     for r in srv.completed:
         if r.model is not None and not r.cache_hit:
@@ -366,6 +411,11 @@ def online_main(argv):
               f"entries={sc['entries']} bytes={sc['bytes']} "
               f"threshold={srv.semcache.cfg.sim_threshold} "
               f"utility_loss={sc['utility_loss']:.4f}")
+    if chaos is not None:
+        closed = all(br.state.value == "closed" for br in srv.breakers)
+        print(f"chaos: seed={args.chaos} calls={sum(c.n_calls for c in chaos)} "
+              f"faults={sum(c.n_faults for c in chaos)} "
+              f"hangs={sum(c.n_hangs for c in chaos)} breakers_closed={closed}")
     if srv.autoscaler is not None:
         print(srv.autoscaler.summary())
         for e in srv.autoscaler.events:
@@ -404,6 +454,7 @@ def http_main(argv):
     ap.add_argument("--sim-threshold", type=float, default=None,
                     help="semantic-cache cosine hit threshold (default 0.92)")
     _add_generation_flags(ap)
+    _add_robust_flags(ap)
     ap.add_argument("--max-seconds", type=float, default=0.0,
                     help="serve for N wall seconds then exit (0 = until "
                          "SIGINT/SIGTERM)")
@@ -436,6 +487,7 @@ def http_main(argv):
         spec.pool.semantic_cache = True
         spec.pool.sim_threshold = args.sim_threshold
     _apply_generation_flags("serve http", spec, args)
+    _apply_robust_flags("serve http", spec, args)
     if spec.pool.kind == "simulated" and spec.pool.task not in BENCHMARKS:
         raise SystemExit(f"serve http: unknown task {spec.pool.task!r}; "
                          f"known: {sorted(BENCHMARKS)}")
@@ -473,9 +525,15 @@ def http_main(argv):
             break
     fe.stop()
     srv = gw.server
-    print(f"serve http: shutdown clean — {fe.n_http_requests} http requests, "
-          f"{len(srv.completed)} completed, {len(srv.windows)} windows, "
-          f"${srv.bucket.total_spent:.6f} spent", flush=True)
+    if fe.threads_leaked:
+        print(f"serve http: shutdown LEAKED threads {fe.threads_leaked} — "
+              f"{fe.n_http_requests} http requests, "
+              f"{len(srv.completed)} completed", flush=True)
+    else:
+        print(f"serve http: shutdown clean — {fe.n_http_requests} http "
+              f"requests, {len(srv.completed)} completed, "
+              f"{len(srv.windows)} windows, "
+              f"${srv.bucket.total_spent:.6f} spent", flush=True)
     if srv.semcache is not None:
         sc = srv.semcache.stats()
         print(f"semcache: hits={sc['hits']} misses={sc['misses']} "

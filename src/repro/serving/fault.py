@@ -332,3 +332,96 @@ class FlakyMember:
 
     def evaluate(self, wl, idx, batch_size, rng=None):
         return self.inner.evaluate(wl, idx, batch_size, rng)
+
+
+class ChaosMember:
+    """Seeded fault injector around a pool member (docs/robustness.md).
+
+    Where :class:`FlakyMember` scripts one hard outage window, ChaosMember
+    composes the realistic degradation modes a robustness benchmark needs —
+    all deterministic given ``seed`` and the wrapper's call sequence:
+
+      * **latency noise** — each surviving call's reported ``latency_s``
+        gains an Exp(``latency_noise_s``) draw (virtual: no wall sleep, so
+        simulated-pool benchmarks stay fast);
+      * **slow degrade** — call ``i`` additionally gains ``degrade_s * i``,
+        modelling a replica that rots (memory pressure, thermal throttle);
+      * **error bursts** — calls in ``[fail_from, fail_until)`` raise with
+        probability ``error_rate`` (1.0 = hard outage, the FlakyMember case);
+      * **hangs** — calls in ``[hang_from, hang_until)`` block the
+        dispatching thread for ``hang_s`` *wall* seconds and then raise.
+        This is the scenario :class:`repro.serving.pool.ReplicaSet`'s
+        ``dispatch_timeout_s`` exists for: without a timeout a hung replica
+        wedges the serving thread for the full hang.
+
+    Counters (``n_calls``, ``n_faults``, ``n_hangs``) are exact given the
+    windows, so benchmarks can gate on them bit-for-bit.  The wrapper is a
+    full pool-member proxy (pricing, feature probes, ``evaluate``), so it
+    nests anywhere a member does — including as a replica inside a
+    ReplicaSet.
+    """
+
+    def __init__(self, inner, *, seed: int = 0,
+                 latency_noise_s: float = 0.0, degrade_s: float = 0.0,
+                 fail_from: int = 10**9, fail_until: int = 10**9,
+                 error_rate: float = 1.0,
+                 hang_from: int = 10**9, hang_until: int = 10**9,
+                 hang_s: float = 5.0):
+        self.inner = inner
+        self.rng = np.random.default_rng(seed)
+        self.latency_noise_s = float(latency_noise_s)
+        self.degrade_s = float(degrade_s)
+        self.fail_from, self.fail_until = int(fail_from), int(fail_until)
+        self.error_rate = float(error_rate)
+        self.hang_from, self.hang_until = int(hang_from), int(hang_until)
+        self.hang_s = float(hang_s)
+        self.n_calls = 0
+        self.n_faults = 0
+        self.n_hangs = 0
+
+    @property
+    def name(self):
+        return self.inner.name
+
+    @property
+    def c_in(self):
+        return self.inner.c_in
+
+    @property
+    def c_out(self):
+        return self.inner.c_out
+
+    @property
+    def context_len(self):
+        return self.inner.context_len
+
+    @property
+    def supports_streams(self):
+        return bool(getattr(self.inner, "supports_streams", False))
+
+    @property
+    def supports_generation(self):
+        return bool(getattr(self.inner, "supports_generation", False))
+
+    def invoke_batch(self, wl, batch_idx, **kw):
+        call = self.n_calls
+        self.n_calls += 1
+        if self.hang_from <= call < self.hang_until:
+            self.n_hangs += 1
+            time.sleep(self.hang_s)               # wall-clock: wedge the caller
+            raise RuntimeError(f"{self.name}: injected hang (call {call})")
+        if self.fail_from <= call < self.fail_until and \
+                self.rng.random() < self.error_rate:
+            self.n_faults += 1
+            raise RuntimeError(f"{self.name}: injected fault (call {call})")
+        out = self.inner.invoke_batch(wl, batch_idx, **kw)
+        extra = self.degrade_s * call
+        if self.latency_noise_s > 0.0:
+            extra += float(self.rng.exponential(self.latency_noise_s))
+        if extra > 0.0:
+            from dataclasses import replace
+            out = replace(out, latency_s=out.latency_s + extra)
+        return out
+
+    def evaluate(self, wl, idx, batch_size, rng=None):
+        return self.inner.evaluate(wl, idx, batch_size, rng)

@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import inspect
 import queue
+import sys
 import threading
 import time
 from collections import OrderedDict, deque
@@ -337,6 +338,10 @@ class WindowReport:
     #   paged-KV occupancy per member with a real engine behind it — the
     #   memory-headroom signal the autoscaler and the bench gate read; empty
     #   entries (simulated members) are omitted
+    scale_events: tuple = ()          # ((member_name, from_n, to_n), ...) the
+    #   autoscale actions fired on THIS round's control tick — the per-member
+    #   attribution the metrics registry turns into
+    #   robatch_scale_events_total{member, direction}
 
     @property
     def kv_occupancy(self) -> int:
@@ -467,6 +472,7 @@ class OnlineRobatchServer:
         self._pool_exec = ThreadPoolExecutor(max_workers=workers)
         self._next_rid = 0
         self.n_coalesced = 0
+        self.pacer_leaked = False     # run_live: arrival thread outlived join
         # observability hooks (repro.http.metrics binds these): called from
         # the serving thread — keep them fast and non-blocking
         self.on_window = None         # fn(WindowReport) after every round
@@ -607,7 +613,8 @@ class OnlineRobatchServer:
                            int(occ.get("cow_forks", 0))))
         rep.kv_pages = tuple(kv)
         if self.autoscaler is not None:
-            self.autoscaler.observe(rep, len(self.pending), rep.t)
+            fired = self.autoscaler.observe(rep, len(self.pending), rep.t)
+            rep.scale_events = tuple((e.member, e.from_n, e.to_n) for e in fired)
             rep.replica_counts = tuple(int(getattr(m, "n_replicas", 1))
                                        for m in self.pool)
         self.windows.append(rep)
@@ -923,14 +930,22 @@ class OnlineRobatchServer:
 
     def run_live(self, arrivals: Sequence[tuple[float, int]], *,
                  duration_s: Optional[float] = None,
-                 max_ticks: int = 100_000) -> ServerStats:
+                 max_ticks: int = 100_000,
+                 join_timeout_s: float = 5.0) -> ServerStats:
         """Real-time serving fronted by a live arrival thread.
 
         A :class:`LiveArrivalSource` replays the (seeded, pre-generated)
         stream against the wall clock, submitting each arrival as its
         timestamp comes due, while this loop fires one scheduling round per
         window boundary; after ``duration_s`` (default: the stream's horizon)
-        it keeps ticking until the queue drains."""
+        it keeps ticking until the queue drains.
+
+        The pacer thread is stopped and joined for ``join_timeout_s`` on the
+        way out; a pacer that fails to exit by then (a stuck ``submit``, a
+        wedged clock sleep) is a *leak* — it can keep submitting into a
+        server the caller believes is finished.  The leak is recorded on
+        :attr:`pacer_leaked` and warned to stderr rather than silently
+        swallowed by the daemon flag."""
         assert self.cfg.realtime, "run_live needs OnlineConfig(realtime=True)"
         if isinstance(self.clock, FakeClock):
             raise ValueError("run_live shares the clock between the pacer "
@@ -957,7 +972,12 @@ class OnlineRobatchServer:
                     break
         finally:
             source.stop()
-            source.join(timeout=5.0)
+            source.join(timeout=join_timeout_s)
+            self.pacer_leaked = bool(source.is_alive())
+            if self.pacer_leaked:
+                print(f"run_live: WARNING pacer thread still alive "
+                      f"{join_timeout_s}s after stop — arrival source leaked",
+                      file=sys.stderr)
         return self.stats()
 
     # ------------------------------------------------------------- reporting

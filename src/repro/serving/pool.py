@@ -36,6 +36,12 @@ from repro.serving.fault import ReplicaPolicy, ReplicaTracker
 from repro.serving.generation import GenerationConfig
 
 
+class DispatchTimeout(RuntimeError):
+    """A replica dispatch exceeded ``ReplicaSet.dispatch_timeout_s`` — the
+    dispatching thread abandoned the (possibly hung) engine call and failed
+    over to a sibling replica."""
+
+
 @dataclass
 class TextTask:
     """Parallel text view of a workload: query/answer strings by index."""
@@ -228,7 +234,10 @@ class ReplicaSet:
                  policy: Optional[ReplicaPolicy] = None,
                  clock: Callable[[], float] = time.monotonic,
                  factory: Optional[Callable[[], object]] = None,
-                 async_build: bool = False):
+                 async_build: bool = False,
+                 dispatch_timeout_s: Optional[float] = None,
+                 max_dispatch_retries: int = 0,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 1.0):
         if not replicas:
             raise ValueError("ReplicaSet needs at least one replica")
         self.replicas = list(replicas)
@@ -236,6 +245,17 @@ class ReplicaSet:
         self.tracker = ReplicaTracker(len(self.replicas), policy, clock)
         self.factory = factory
         self.async_build = bool(async_build)
+        # dispatch hardening (docs/robustness.md): a per-dispatch wall-clock
+        # deadline (None = legacy direct call, no watcher thread) and a
+        # bounded same-replica retry ladder for ordinary faults.  Timeouts
+        # never retry the same replica — a hung engine stays hung — they
+        # record a failure and fail over to a sibling immediately.
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.n_timeouts = 0
+        self.n_dispatch_retries = 0
         self._inflight = [0] * len(self.replicas)
         self._lock = threading.Lock()
         self._ready: list = []          # built off-thread, awaiting attach
@@ -386,6 +406,38 @@ class ReplicaSet:
         :attr:`supports_streams`."""
         return bool(getattr(self.replicas[0], "supports_generation", False))
 
+    def _dispatch(self, r: int, wl: Workload, batch_idx: np.ndarray,
+                  kw: dict) -> BatchResult:
+        """One physical dispatch to replica ``r``, under the per-dispatch
+        deadline when one is configured.  The timed path runs the invocation
+        on a fresh daemon thread and abandons it on expiry — leaking the hung
+        thread is the point: the *serving* thread unwedges and fails over
+        while the stuck engine call is left to die with the process."""
+        if self.dispatch_timeout_s is None:
+            return self.replicas[r].invoke_batch(wl, batch_idx, **kw)
+        box: dict = {}
+        done = threading.Event()
+
+        def work():
+            try:
+                box["out"] = self.replicas[r].invoke_batch(wl, batch_idx, **kw)
+            except BaseException as e:    # noqa: BLE001 — carried to the caller
+                box["err"] = e
+            finally:
+                done.set()
+
+        threading.Thread(target=work, daemon=True,
+                         name=f"{self.name}-dispatch-r{r}").start()
+        if not done.wait(self.dispatch_timeout_s):
+            with self._lock:
+                self.n_timeouts += 1
+            raise DispatchTimeout(
+                f"{self.name}: replica {r} dispatch exceeded "
+                f"{self.dispatch_timeout_s}s deadline")
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
     def invoke_batch(self, wl: Workload, batch_idx: np.ndarray,
                      streams: Optional[dict] = None,
                      gen: Optional[GenerationConfig] = None) -> BatchResult:
@@ -396,21 +448,37 @@ class ReplicaSet:
             if r is None:
                 raise RuntimeError(
                     f"{self.name}: all {self.n_replicas} replicas failed") from last
-            t0 = time.perf_counter()
             kw = {"streams": streams} if streams and getattr(
                 self.replicas[r], "supports_streams", False) else {}
             if gen is not None and getattr(self.replicas[r],
                                            "supports_generation", False):
                 kw["gen"] = gen
             try:
-                out = self.replicas[r].invoke_batch(wl, batch_idx, **kw)
-            except Exception as e:        # noqa: BLE001 — replica fault
-                last = e
-                self.tracker.record_failure(r)
-                tried.add(r)
-            else:
-                self.tracker.record_success(r, time.perf_counter() - t0)
-                return out
+                for attempt in range(self.max_dispatch_retries + 1):
+                    t0 = time.perf_counter()
+                    try:
+                        out = self._dispatch(r, wl, batch_idx, kw)
+                    except DispatchTimeout as e:
+                        # a hung replica stays hung: no same-replica retry,
+                        # record the failure and fail over to a sibling
+                        last = e
+                        self.tracker.record_failure(r)
+                        tried.add(r)
+                        break
+                    except Exception as e:    # noqa: BLE001 — replica fault
+                        last = e
+                        self.tracker.record_failure(r)
+                        if attempt < self.max_dispatch_retries:
+                            with self._lock:
+                                self.n_dispatch_retries += 1
+                            time.sleep(min(self.backoff_cap_s,
+                                           self.backoff_base_s * 2 ** attempt))
+                            continue
+                        tried.add(r)
+                        break
+                    else:
+                        self.tracker.record_success(r, time.perf_counter() - t0)
+                        return out
             finally:
                 with self._lock:
                     self._inflight[r] -= 1

@@ -212,17 +212,112 @@ def test_autoscaler_tracks_async_pending_builds():
 # per-member pressure attribution reaches the autoscaler's log
 # ---------------------------------------------------------------------------
 
-def test_autoscaler_accumulates_per_member_pressure():
+def test_autoscaler_decays_per_member_pressure_trace():
     rs = replicate_simulated_stub()
-    asc = Autoscaler([rs], AutoscalePolicy())
+    asc = Autoscaler([rs], AutoscalePolicy())          # pressure_decay = 0.5
     asc.observe(WindowReport(t=0.25, n_capacity_held=5, n_cap_packed=3,
                              held_by_member=((0, 5),),
                              packed_by_member=((0, 2), (2, 1))),
                 queue_depth=0, now=0.25)
+    assert asc.pressure_by_member == {0: 7.0, 2: 1.0}
     asc.observe(WindowReport(t=0.5, held_by_member=((2, 4),)),
                 queue_depth=0, now=0.5)
-    assert asc.pressure_by_member == {0: 7, 2: 5}
+    # one window later the first burst has halved; the fresh one is undecayed
+    assert asc.pressure_by_member == {0: 3.5, 2: 4.5}
     assert "pressure by member" in asc.summary()
+    # idle windows decay the trace toward empty (no infinite-memory bias)
+    t = 0.5
+    for _ in range(16):
+        t += 0.25
+        asc.observe(WindowReport(t=t), queue_depth=0, now=t)
+    assert asc.pressure_by_member == {}
+
+
+def test_scale_action_resets_the_acting_members_trace():
+    rs = replicate_simulated_stub()
+    asc = Autoscaler([rs], AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                           up_pressure=4, hold_windows=2,
+                                           cooldown_s=0.0))
+    for t in (0.25, 0.5):
+        fired = asc.observe(
+            WindowReport(t=t, n_capacity_held=8, held_by_member=((0, 8),)),
+            queue_depth=0, now=t)
+    assert [(e.from_n, e.to_n) for e in fired] == [(1, 2)]
+    assert 0 not in asc.pressure_by_member    # the action cleared its trace
+
+
+# ---------------------------------------------------------------------------
+# bottleneck-aware per-member control: only the pressured member moves
+# ---------------------------------------------------------------------------
+
+def _member_set(name, n=1, factory=True):
+    reps = [_StubMember(float(i)) for i in range(n)]
+    kw = {"factory": (lambda: _StubMember(9.0))} if factory else {}
+    return ReplicaSet(reps, name=name, **kw)
+
+
+def test_grow_targets_only_the_bottleneck_member():
+    rs0, rs1 = _member_set("m0"), _member_set("m1")
+    asc = Autoscaler([rs0, rs1],
+                     AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                     up_pressure=4, hold_windows=2,
+                                     cooldown_s=0.0))
+    for t in (0.25, 0.5):
+        asc.observe(WindowReport(t=t, n_capacity_held=8,
+                                 held_by_member=((1, 8),)),
+                    queue_depth=0, now=t)
+    assert rs0.n_replicas == 1               # unpressured sibling untouched
+    assert rs1.n_replicas == 2               # bottleneck grew
+    assert asc.events_by_member() == {"m1": (1, 0)}
+
+
+def test_members_shrink_independently_of_a_pressured_sibling():
+    rs0 = _member_set("m0", n=2, factory=False)
+    rs1 = _member_set("m1", n=2)
+    asc = Autoscaler([rs0, rs1],
+                     AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                     up_pressure=4, down_pressure=0,
+                                     hold_windows=2, cooldown_s=0.0))
+    for t in (0.25, 0.5):
+        asc.observe(WindowReport(t=t, n_capacity_held=8,
+                                 held_by_member=((1, 8),)),
+                    queue_depth=0, now=t)
+    assert rs0.n_replicas == 1               # idle member drained on its own
+    assert rs1.n_replicas == 3               # while the bottleneck grew
+    assert asc.events_by_member() == {"m0": (0, 1), "m1": (1, 0)}
+    assert "actions by member" in asc.summary()
+
+
+def test_scalar_only_reports_fall_back_to_pool_wide_grow():
+    # legacy reports (no per-member attribution) must keep the original
+    # every-scalable-member semantics
+    rs0, rs1 = _member_set("m0"), _member_set("m1")
+    asc = Autoscaler([rs0, rs1],
+                     AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                     up_pressure=4, hold_windows=2,
+                                     cooldown_s=0.0))
+    for t in (0.25, 0.5):
+        asc.observe(_rep(t, held=10), queue_depth=0, now=t)
+    assert rs0.n_replicas == 2 and rs1.n_replicas == 2
+
+
+def test_saturated_member_does_not_shrink_at_zero_pressure():
+    # a member dispatching at its replica count is saturated even when the
+    # caps kept the backlog away — it must not flap down
+    rs0 = _member_set("m0", n=2, factory=False)
+    asc = Autoscaler([rs0], AutoscalePolicy(min_replicas=1, max_replicas=4,
+                                            down_pressure=0, hold_windows=2,
+                                            cooldown_s=0.0))
+    t = 0.0
+    for _ in range(6):
+        t += 0.25
+        asc.observe(WindowReport(t=t, group_models=(0, 0)),
+                    queue_depth=0, now=t)
+    assert rs0.n_replicas == 2               # busy at cap: no shrink
+    for _ in range(2):
+        t += 0.25
+        asc.observe(WindowReport(t=t), queue_depth=0, now=t)
+    assert rs0.n_replicas == 1               # genuinely idle: drains
 
 
 # ---------------------------------------------------------------------------

@@ -69,6 +69,7 @@ def test_ci_workflow_is_valid():
     bench_runs = [s.get("run") or "" for s in wf["jobs"]["bench"]["steps"]]
     assert any("engine_decode.py" in r for r in bench_runs)
     assert any("http_serving.py" in r for r in bench_runs)
+    assert any("robustness.py" in r for r in bench_runs)
     assert any("bench_check.py" in r for r in bench_runs)
     # tier1 runs on a python matrix with a non-blocking coverage report
     matrix = wf["jobs"]["tier1"]["strategy"]["matrix"]["python-version"]
@@ -142,6 +143,44 @@ def test_caching_doc_contract():
     arch = open(os.path.join(ROOT, "docs", "architecture.md")).read()
     assert "docs/caching.md" in readme, "README does not link docs/caching.md"
     assert "caching.md" in arch, "architecture.md does not link caching.md"
+
+
+def test_robustness_doc_contract():
+    """The robustness guide's workflow contract: docs/robustness.md exists,
+    its CLI knobs exist on the serve launcher, the smoke script drives the
+    chaos leg, the bench gate carries the robustness section, and README +
+    architecture cross-link the guide."""
+    doc_path = os.path.join(ROOT, "docs", "robustness.md")
+    assert os.path.exists(doc_path), "docs/robustness.md missing"
+    doc = open(doc_path).read()
+    serve_src = open(os.path.join(ROOT, "src", "repro", "launch",
+                                  "serve.py")).read()
+    for flag in ("--chaos", "--robust-lambda", "--cost-margin"):
+        assert flag in doc, f"robustness.md does not document {flag}"
+        assert flag in serve_src, f"serve.py lost the {flag} flag"
+    # the guide covers all three axes: faults, uncertainty, bottlenecks
+    for needle in ("ChaosMember", "DispatchTimeout", "dispatch_timeout_s",
+                   "robust_lambda", "cost_margin", "pressure_by_member",
+                   "events_by_member", "scale_events",
+                   "robatch_scale_events_total"):
+        assert needle in doc, f"robustness.md lost the {needle!r} story"
+
+    smoke = open(os.path.join(ROOT, "tools", "smoke.sh")).read()
+    assert "--chaos" in smoke, "smoke.sh lost the chaos leg"
+    assert "breakers_closed=True" in smoke, \
+        "smoke.sh no longer asserts the chaos marker"
+
+    baseline = open(os.path.join(ROOT, "benchmarks", "baselines",
+                                 "BENCH_online.json")).read()
+    assert '"robustness"' in baseline, \
+        "bench baseline lost the robustness section"
+
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    arch = open(os.path.join(ROOT, "docs", "architecture.md")).read()
+    assert "docs/robustness.md" in readme, \
+        "README does not link docs/robustness.md"
+    assert "robustness.md" in arch, \
+        "architecture.md does not link robustness.md"
 
 
 FENCE_RE = re.compile(r"```(?:python|py)\n(.*?)```", re.S)

@@ -465,3 +465,18 @@ def test_parse_chat_body_validates_sampling_ranges():
         with pytest.raises(ApiError) as ei:
             parse_chat_body(_chat(**bad))
         assert ei.value.status == 400
+
+
+def test_frontend_stop_reports_clean_thread_exit(fitted_rb, pool, agnews):
+    """A graceful stop joins the serving loop and the HTTP acceptor and
+    records the clean exit in ``threads_leaked`` — the launcher's shutdown
+    marker (``serve http: shutdown clean`` vs ``shutdown LEAKED``) keys off
+    this list, so a wedged thread can never masquerade as a clean exit."""
+    fe = HttpFrontend(_server(fitted_rb, pool, agnews), port=0).start()
+    with _post(f"http://127.0.0.1:{fe.port}",
+               {"messages": [{"role": "user", "content": "#1"}],
+                "query_idx": 1}) as r:
+        assert json.loads(r.read())["choices"]
+    fe.stop()
+    assert fe.threads_leaked == [], \
+        f"graceful stop leaked threads: {fe.threads_leaked}"

@@ -482,3 +482,218 @@ def test_run_live_submits_the_stream_from_a_pacer_thread(
     # the pacer stamped each request with its generated arrival time
     assert sorted(r.arrived_at for r in srv.completed) == \
         pytest.approx(sorted(t for t, _ in arrivals))
+
+
+def test_run_live_flags_a_leaked_pacer_thread(fitted_rb, agnews, pool):
+    # a pacer that ignores stop() past the join timeout must be surfaced as
+    # pacer_leaked=True (and warned), not silently abandoned via the daemon
+    # flag; a clean shutdown reads False
+    import repro.serving.online as online_mod
+
+    test = agnews.subset_indices("test")
+    cfg = OnlineConfig(budget_per_s=_rate(fitted_rb, test, 30.0), window_s=0.1,
+                       realtime=True)
+    srv = OnlineRobatchServer(fitted_rb, pool, agnews, cfg)
+    arrivals = [(0.05, int(test[0]))]
+    srv.run_live(arrivals, duration_s=0.1)
+    assert srv.pacer_leaked is False
+
+    class _Stubborn(online_mod.LiveArrivalSource):
+        def join(self, timeout=None):
+            return None                      # never actually exits
+
+        def is_alive(self):
+            # alive only to the shutdown path: the serving loop's drain
+            # check (pre-stop) must still see the stream as finished
+            return self._stop_requested.is_set()
+
+    srv2 = OnlineRobatchServer(fitted_rb, pool, agnews, cfg)
+    real = online_mod.LiveArrivalSource
+    online_mod.LiveArrivalSource = _Stubborn
+    try:
+        srv2.run_live(arrivals, duration_s=0.1, join_timeout_s=0.05)
+    finally:
+        online_mod.LiveArrivalSource = real
+        srv2.close()
+    srv.close()
+    assert srv2.pacer_leaked is True
+
+
+# ---------------------------------------------------------------------------
+# chaos injection: seeded determinism + the dispatch-hardening ladder
+# ---------------------------------------------------------------------------
+
+from repro.serving.fault import ChaosMember, CircuitBreaker, ReplicaTracker  # noqa: E402
+from repro.serving.pool import DispatchTimeout  # noqa: E402
+
+
+def test_chaos_member_is_deterministic_and_counts_faults():
+    def mk():
+        return ChaosMember(_FakeMember(1.0), seed=42, latency_noise_s=0.05,
+                           fail_from=2, fail_until=4, error_rate=1.0)
+
+    traces = []
+    for c in (mk(), mk()):
+        lats = []
+        for _ in range(6):
+            try:
+                lats.append(c.invoke_batch(None, np.arange(2)).latency_s)
+            except RuntimeError:
+                lats.append(None)
+        traces.append(lats)
+        assert c.n_calls == 6 and c.n_faults == 2 and c.n_hangs == 0
+    assert traces[0] == traces[1]            # bit-identical given the seed
+    assert traces[0][2] is None and traces[0][3] is None
+    assert all(lat > 0.01 for i, lat in enumerate(traces[0])
+               if i not in (2, 3))           # noise added on surviving calls
+
+
+def test_chaos_member_slow_degrade_grows_latency():
+    c = ChaosMember(_FakeMember(1.0), seed=0, degrade_s=0.1)
+    lats = [c.invoke_batch(None, np.arange(1)).latency_s for _ in range(4)]
+    assert lats == sorted(lats)
+    assert lats[3] - lats[0] == pytest.approx(0.3)
+
+
+def test_chaos_member_proxies_the_member_protocol():
+    inner = _FakeMember(1.0)
+    c = ChaosMember(inner, seed=0)
+    assert (c.name, c.c_in, c.c_out, c.context_len) == \
+        (inner.name, inner.c_in, inner.c_out, inner.context_len)
+    assert c.supports_streams is False and c.supports_generation is False
+
+
+def test_dispatch_timeout_fails_over_from_hung_replica():
+    hung = ChaosMember(_FakeMember(0.0), seed=1, hang_from=0, hang_until=1,
+                       hang_s=5.0)
+    rs = ReplicaSet([hung, _FakeMember(1.0)], name="m", dispatch_timeout_s=0.2)
+    t0 = time.perf_counter()
+    out = rs.invoke_batch(None, np.arange(2))
+    wall = time.perf_counter() - t0
+    assert float(out.utilities[0]) == 1.0    # sibling served the batch
+    assert wall < 4.0                        # did not wait out the hang
+    assert rs.n_timeouts == 1 and hung.n_hangs == 1
+    assert rs.tracker.replicas[0].n_failures == 1
+    assert rs.loads() == [0, 0]              # in-flight slots fully released
+
+
+def test_dispatch_timeout_raises_when_every_replica_hangs():
+    rs = ReplicaSet([ChaosMember(_FakeMember(0.0), seed=2, hang_from=0,
+                                 hang_s=5.0)],
+                    name="m", dispatch_timeout_s=0.1)
+    with pytest.raises(RuntimeError, match="all 1 replicas"):
+        rs.invoke_batch(None, np.arange(2))
+    assert rs.n_timeouts == 1
+
+
+def test_dispatch_retry_ladder_recovers_transient_fault():
+    flaky = FlakyMember(_FakeMember(1.0), fail_from=0, fail_until=2)
+    rs = ReplicaSet([flaky], name="m", max_dispatch_retries=2,
+                    backoff_base_s=0.01, backoff_cap_s=0.02)
+    t0 = time.perf_counter()
+    out = rs.invoke_batch(None, np.arange(2))
+    assert float(out.utilities[0]) == 1.0    # 3rd attempt, SAME replica
+    assert time.perf_counter() - t0 >= 0.02  # 0.01 + 0.02 backoff slept
+    assert rs.n_dispatch_retries == 2
+    assert rs.tracker.replicas[0].n_failures == 2
+    assert rs.tracker.healthy(0)             # success reset the streak
+    assert rs.loads() == [0]
+
+
+def test_timeouts_never_burn_same_replica_retries():
+    hung = ChaosMember(_FakeMember(0.0), seed=3, hang_from=0, hang_until=10,
+                       hang_s=5.0)
+    rs = ReplicaSet([hung, _FakeMember(1.0)], name="m",
+                    dispatch_timeout_s=0.1, max_dispatch_retries=3)
+    out = rs.invoke_batch(None, np.arange(2))
+    assert float(out.utilities[0]) == 1.0
+    assert hung.n_calls == 1                 # one dispatch, zero retries on it
+    assert rs.n_dispatch_retries == 0
+
+
+def test_dispatch_timeout_error_is_typed():
+    with pytest.raises(DispatchTimeout):
+        rs = ReplicaSet([ChaosMember(_FakeMember(0.0), seed=4, hang_from=0,
+                                     hang_s=5.0)],
+                        name="m", dispatch_timeout_s=0.05)
+        try:
+            rs.invoke_batch(None, np.arange(1))
+        except RuntimeError as e:
+            raise e.__cause__                # the failover chain keeps it
+
+
+# ---------------------------------------------------------------------------
+# concurrency: breaker half-open probes and tracker ejection under racing
+# dispatch threads
+# ---------------------------------------------------------------------------
+
+def test_breaker_half_open_concurrent_probes_and_single_retrip():
+    now = [0.0]
+    br = CircuitBreaker(BreakerPolicy(failure_threshold=1, recovery_time_s=1.0),
+                        clock=lambda: now[0])
+    br.record_failure()
+    assert br.state is CircuitState.OPEN and br.n_trips == 1
+    assert not br.allow_request()            # cooling down
+    now[0] = 2.0
+    barrier = threading.Barrier(8)
+    got = []
+
+    def probe():
+        barrier.wait()
+        got.append(br.allow_request())
+
+    ths = [threading.Thread(target=probe) for _ in range(8)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=10.0)
+    assert got == [True] * 8                 # racing probes all admitted
+    assert br.state is CircuitState.HALF_OPEN
+    br.record_failure()                      # the probe failed
+    assert br.state is CircuitState.OPEN and br.n_trips == 2
+    now[0] = 4.0
+    assert br.allow_request()
+    br.record_success()
+    assert br.state is CircuitState.CLOSED and br.failure_count == 0
+
+
+def test_concurrent_dispatch_ejects_dead_replica_and_drains_slots():
+    dead = FlakyMember(_FakeMember(0.0), fail_from=0)    # always faults
+    rs = ReplicaSet([dead, _FakeMember(1.0), _FakeMember(2.0)], name="m")
+    outs: list = []
+    barrier = threading.Barrier(12)
+
+    def work():
+        barrier.wait()
+        outs.append(float(rs.invoke_batch(None, np.arange(2)).utilities[0]))
+
+    ths = [threading.Thread(target=work) for _ in range(12)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=10.0)
+    assert len(outs) == 12
+    assert all(u in (1.0, 2.0) for u in outs)   # nothing served by the corpse
+    assert not rs.tracker.healthy(0)            # racing failures ejected it
+    assert rs.tracker.replicas[0].n_ejections >= 1
+    assert rs.loads() == [0, 0, 0]              # every in-flight slot released
+
+
+def test_tracker_concurrent_failures_eject_exactly_not_forever():
+    trk = ReplicaTracker(2, ReplicaPolicy(eject_after=4, cooldown_s=30.0),
+                         clock=lambda: 0.0)
+    barrier = threading.Barrier(8)
+
+    def fail():
+        barrier.wait()
+        trk.record_failure(0)
+
+    ths = [threading.Thread(target=fail) for _ in range(8)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=10.0)
+    assert not trk.healthy(0) and trk.healthy(1)
+    assert trk.replicas[0].n_failures >= trk.policy.eject_after
+    trk.record_success(0)                       # re-admission clears the slate
+    assert trk.healthy(0) and trk.replicas[0].consecutive_failures == 0

@@ -204,3 +204,142 @@ def test_vectorized_each_query_one_state():
     assert len(res.assignment.model) == 20
     for s in res.assignment.states():
         assert s in space.states
+
+
+# ---------------------------------------------------------------------------
+# uncertainty-robust walk: λ·σ-penalized gains, worst-case budget margin
+# ---------------------------------------------------------------------------
+
+from repro.core.scheduler import (  # noqa: E402
+    greedy_schedule_window,
+    restrict_space,
+    take_rows,
+)
+
+
+def random_space_with_sigma(rng, n, n_models, n_batches):
+    space = random_space(rng, n, n_models, n_batches)
+    return CandidateSpace(states=space.states, cost=space.cost,
+                          util=space.util, initial_state=space.initial_state,
+                          sigma=rng.uniform(0.0, 0.4, size=space.util.shape))
+
+
+@settings(max_examples=80, deadline=None)
+@given(space_params)
+def test_robust_at_zero_is_bit_identical(params):
+    # the λ=0 / margin=0 path must return EXACTLY the point-estimate walk —
+    # same assignment, same floats — even when sigma is present
+    n, k, nb, seed, slack = params
+    rng = np.random.default_rng(seed)
+    space = random_space_with_sigma(rng, n, k, nb)
+    budget = _budget_for(space, slack)
+    base = greedy_schedule(space, np.arange(n), budget)
+    zero = greedy_schedule(space, np.arange(n), budget,
+                           robust_lambda=0.0, cost_margin=0.0)
+    assert np.array_equal(zero.assignment.model, base.assignment.model)
+    assert np.array_equal(zero.assignment.batch, base.assignment.batch)
+    assert zero.est_utility == base.est_utility
+    assert zero.amortized_cost == base.amortized_cost
+    assert zero.spent_budget == base.spent_budget
+    caps = {m: n for m in range(k)}
+    wbase = greedy_schedule_window(space, np.arange(n), budget, group_caps=caps)
+    wzero = greedy_schedule_window(space, np.arange(n), budget, group_caps=caps,
+                                   robust_lambda=0.0, cost_margin=0.0)
+    assert np.array_equal(wzero.assignment.model, wbase.assignment.model)
+    assert wzero.est_utility == wbase.est_utility
+    assert wzero.spent_budget == wbase.spent_budget
+
+
+def _three_state_space(sigma):
+    # one query; an expensive high-û/high-σ upgrade vs an equally priced
+    # lower-û/zero-σ one — Pareto pruning keeps only the better walk-utility
+    states = [State(0, 1), State(1, 1), State(2, 1)]
+    return CandidateSpace(states=states,
+                          cost=np.array([[1.0, 2.0, 2.0]]),
+                          util=np.array([[0.5, 0.9, 0.85]]),
+                          initial_state=0,
+                          sigma=np.array([sigma]))
+
+
+def test_robust_lambda_switches_to_low_sigma_upgrade():
+    space = _three_state_space([0.0, 0.3, 0.0])
+    idx = np.arange(1)
+    base = greedy_schedule(space, idx, budget=2.5)
+    assert int(base.assignment.model[0]) == 1          # û says model 1
+    rob = greedy_schedule(space, idx, budget=2.5, robust_lambda=1.0)
+    assert int(rob.assignment.model[0]) == 2           # û−λσ says model 2
+    # accounting stays in raw point-estimate currency
+    assert rob.est_utility == pytest.approx(0.85)
+    assert rob.amortized_cost == pytest.approx(2.0)
+
+
+def test_cost_margin_blocks_worst_case_budget_overrun():
+    space = _three_state_space([0.0, 0.0, 0.0])
+    idx = np.arange(1)
+    base = greedy_schedule(space, idx, budget=2.8)
+    assert int(base.assignment.model[0]) == 1          # affordable point-est.
+    marg = greedy_schedule(space, idx, budget=2.8, cost_margin=0.5)
+    assert int(marg.assignment.model[0]) == 0          # 2.0·1.5 > 2.8: held
+    # the walk drew the worst-case price of what it DID commit
+    assert marg.spent_budget == pytest.approx(1.0 * 1.5)
+    assert marg.amortized_cost == pytest.approx(1.0)
+
+
+def test_robust_schedule_fits_worst_case_inside_budget():
+    rng = np.random.default_rng(7)
+    space = random_space_with_sigma(rng, 24, 3, 3)
+    budget = _budget_for(space, 0.6)
+    for margin in (0.1, 0.25, 0.5):
+        res = greedy_schedule(space, np.arange(24), budget, cost_margin=margin)
+        if not res.infeasible:
+            assert res.amortized_cost * (1 + margin) <= budget + 1e-9
+            assert res.spent_budget == pytest.approx(
+                res.amortized_cost * (1 + margin))
+
+
+def test_sigma_survives_restrict_and_take_rows():
+    rng = np.random.default_rng(3)
+    space = random_space_with_sigma(rng, 8, 3, 2)
+    sub = restrict_space(space, {0, 2})
+    assert sub.sigma is not None and sub.sigma.shape == sub.util.shape
+    assert all(s.model != 1 for s in sub.states)
+    rows = take_rows(sub, np.array([1, 3, 5]))
+    assert rows.sigma is not None and rows.sigma.shape == rows.util.shape
+    np.testing.assert_array_equal(rows.sigma, sub.sigma[[1, 3, 5]])
+
+
+def test_fitted_candidate_space_carries_calibration_sigma(fitted_rb, agnews):
+    test = agnews.subset_indices("test")[:16]
+    space = fitted_rb.candidate_space(test)
+    assert space.sigma is not None
+    assert space.sigma.shape == space.util.shape
+    assert np.all(space.sigma >= 0)
+    assert float(space.sigma.max()) > 0          # residual spread is real
+    # sigma is constant per (model, batch) column: it comes from the
+    # calibration's per-batch residual std, not per-query noise
+    assert np.allclose(space.sigma, space.sigma[:1, :])
+
+
+def test_robust_policy_params_flow_and_validate(fitted_rb, agnews, pool):
+    from repro.api.policies import RobatchPolicy
+
+    with pytest.raises(ValueError, match="robust"):
+        RobatchPolicy(robust=-0.1)
+    with pytest.raises(ValueError, match="cost_margin"):
+        RobatchPolicy(cost_margin=-1.0)
+    test = agnews.subset_indices("test")[:32]
+    space = fitted_rb.candidate_space(test)
+    budget = float(space.cost[:, space.initial_state].sum()) * 2.0
+    plain = RobatchPolicy().fit(pool, agnews, artifacts=fitted_rb)
+    robust = RobatchPolicy(robust=0.0, cost_margin=0.0).fit(
+        pool, agnews, artifacts=fitted_rb)
+    a = plain.plan_window(space, test, budget)
+    b = robust.plan_window(space, test, budget)
+    assert np.array_equal(a.schedule.assignment.model,
+                          b.schedule.assignment.model)
+    assert a.est_utility == b.est_utility
+    # a margin policy never schedules past its worst-case budget
+    guarded = RobatchPolicy(cost_margin=0.25).fit(pool, agnews,
+                                                  artifacts=fitted_rb)
+    c = guarded.plan_window(space, test, budget)
+    assert c.est_cost * 1.25 <= budget + 1e-9

@@ -29,6 +29,9 @@ def test_smoke_script():
             f"serve CLI did not complete under policy {name!r}"
     # the semantic-cache leg served and printed its hit/miss summary
     assert "semcache: hits=" in out.stdout
+    # the chaos leg injected faults yet ended with every breaker CLOSED
+    assert "chaos: seed=7" in out.stdout
+    assert "breakers_closed=True" in out.stdout
     # the HTTP leg booted, streamed over the wire and shut down cleanly
     assert "serve http: listening on http://127.0.0.1:" in out.stdout
     assert "serve http: shutdown clean" in out.stdout

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """Bench regression gate: compare a fresh ``BENCH_online.json`` (written by
-``benchmarks/online_throughput.py``, plus the ``engine_decode`` and
-``http_serving`` sections merged in by ``benchmarks/engine_decode.py`` and
-``benchmarks/http_serving.py``) against the committed baseline.
+``benchmarks/online_throughput.py``, plus the ``engine_decode``,
+``http_serving`` and ``robustness`` sections merged in by
+``benchmarks/engine_decode.py``, ``benchmarks/http_serving.py`` and
+``benchmarks/robustness.py``) against the committed baseline.
 
 Usage::
 
@@ -97,6 +98,14 @@ TOLERANCES = {
     "utility_loss": 0.30,
     "eps_bound": 0.25,
     "cost_saved": 0.50,
+    # robustness: the seeded robust-λ sweep is deterministic modulo BLAS
+    # float drift in the fitted utilities — the exact flags
+    # (within_worst_case, beats_point_estimate, lam0_identical) and the
+    # hang/timeout/ejection counters are the tripwire, these absorb drift
+    "est_utility": 0.20,
+    "amortized_cost": 0.25,
+    "realized_utility": 0.30,
+    "upgrades": 0.25,
 }
 # counter metrics sit near 0 in healthy baselines, where a purely relative
 # band degenerates to [0, 0]; the tolerance is taken over max(|baseline|,
@@ -148,13 +157,21 @@ EXACT = {"completed", "submitted", "dropped", "tripped", "breaker_tripped",
          # embedding space — hit/miss/insert counts and the off-vs-inf
          # bit-identity flag are behaviour-change tripwires
          "sim_threshold", "sem_hits", "sem_misses", "sem_insertions",
-         "off_identical"}
+         "off_identical",
+         # robustness: per-member autoscale event counters (ONLY the
+         # bottleneck member may carry events), the robust-walk contract
+         # flags, and the hung-replica fault counters — the scripted burst
+         # and the seeded chaos schedule make every one deterministic
+         "leg", "lam", "member", "events_up", "events_down", "cost_margin",
+         "within_worst_case", "beats_point_estimate", "lam0_identical",
+         "hangs", "timeouts", "ejections", "breaker_closed"}
 
 UPDATE_HINT = ("if the change is intentional, refresh the baseline: "
                "BENCH_QUICK=1 python benchmarks/online_throughput.py "
                "--pool sim --duration 10 && "
                "BENCH_QUICK=1 python benchmarks/engine_decode.py && "
                "BENCH_QUICK=1 python benchmarks/http_serving.py && "
+               "BENCH_QUICK=1 python benchmarks/robustness.py && "
                "python tools/bench_check.py --update-baseline "
                "(then commit benchmarks/baselines/BENCH_online.json)")
 
@@ -174,12 +191,14 @@ def _rows(section):
 def _key(row: dict) -> tuple:
     # window_s/replicas/phase key the online sections; slots/k/path key the
     # engine_decode sweep; mode/clients key the http_serving matrix;
-    # sim_threshold keys the semcache sweep (absent fields stay None, so keys
-    # never collide across sections)
+    # sim_threshold keys the semcache sweep; leg/lam/member key the
+    # robustness rows (absent fields stay None, so keys never collide
+    # across sections)
     return (row.get("window_s"), row.get("replicas"), row.get("phase"),
             row.get("slots"), row.get("k"), row.get("path"),
             row.get("mode"), row.get("clients"),
-            repr(row.get("sim_threshold")))
+            repr(row.get("sim_threshold")),
+            row.get("leg"), row.get("lam"), row.get("member"))
 
 
 def compare(current: dict, baseline: dict) -> list[str]:

@@ -44,6 +44,16 @@ SEM_OUT=$(python -m repro.launch.serve online --semantic-cache \
 echo "$SEM_OUT"
 echo "$SEM_OUT" | grep -q "^semcache: hits="
 
+# chaos leg: latency noise on every member plus a short error burst on the
+# most expensive one (docs/robustness.md) — the burst stays below the
+# breaker threshold, so the launcher must print the fault-count marker and
+# report every breaker still CLOSED while the window loop retries the work
+CHAOS_OUT=$(python -m repro.launch.serve online --chaos 7 \
+    --qps 20 --duration 5 --n-train 128 --coreset 32)
+echo "$CHAOS_OUT"
+echo "$CHAOS_OUT" | grep -q "^chaos: seed=7"
+echo "$CHAOS_OUT" | grep -q "breakers_closed=True"
+
 # HTTP front-end: ephemeral port, one streamed SSE completion + /metrics via
 # curl, then SIGTERM — the launcher must report a clean shutdown
 HTTP_LOG=$(mktemp)
